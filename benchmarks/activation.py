@@ -1,0 +1,47 @@
+"""Fig. 1 — (a/b) theoretical vs ACTUAL activated experts N(t) on a real
+trained router; (c) T̄_exp vs sparsity."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Timer, csv_row, trained_params
+from repro.core.analytics import expected_activated_experts, mean_tokens_per_expert
+from repro.data.pipeline import packed_batches
+from repro.models.moe import expert_activation_counts, router_topk
+
+
+def run() -> list:
+    rows = []
+    # (a/b): trained reduced MoE router on real token batches
+    model, params = trained_params("qwen2-57b-a14b", "chat", seed=0)
+    cfg = model.cfg
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    # layer params are scan-stacked (P, d, E): take the first period's router
+    router_w = params["layers"][0]["ffn"]["router"][0]
+    it = packed_batches(cfg.vocab_size, 1, 256, kind="chat", seed=3)
+    embed = params["embed"]["table"]
+    ts = [1, 2, 4, 8, 16, 32, 64, 128]
+    t0 = Timer()
+    n_meas = {t: [] for t in ts}
+    for trial in range(40):
+        toks = jnp.asarray(next(it)["tokens"])[0]
+        x = embed[toks]
+        for t in ts:
+            _, idx, _ = router_topk({"router": router_w}, cfg, x[:t])
+            counts = expert_activation_counts(idx, E)
+            n_meas[t].append(int((counts > 0).sum()))
+    for t in ts:
+        theory = float(expected_activated_experts(t, E, K))
+        actual = float(np.mean(n_meas[t]))
+        rows.append(csv_row(
+            f"fig1_activated_experts_t{t}", t0.us(40 * len(ts)),
+            f"theory={theory:.2f};actual={actual:.2f};E={E};K={K}"))
+    # (c): T̄_exp(T; rho) decreasing in rho→0
+    for rho in (0.5, 0.25, 0.125, 0.0625, 0.03125):
+        v64 = float(mean_tokens_per_expert(64, rho))
+        v256 = float(mean_tokens_per_expert(256, rho))
+        rows.append(csv_row(f"fig1c_tokens_per_expert_rho{rho}", 0.0,
+                            f"T64={v64:.2f};T256={v256:.2f}"))
+    return rows

@@ -1,0 +1,90 @@
+"""Shared benchmark infra: trained reduced model pairs (cached), timers.
+
+sigma/alpha in every benchmark come from REAL speculative-decoding runs of
+reduced models trained on the synthetic workloads; timing terms come from
+the v5e simulator (DESIGN.md §2).  Trained params are cached under
+results/bench_models/ so the full bench suite trains each model once.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.configs.registry import get_config
+from repro.data.pipeline import packed_batches, prompt_batch
+from repro.models.model import Model
+from repro.training.checkpoint import (latest_checkpoint, restore_checkpoint,
+                                       save_checkpoint)
+from repro.training.train_loop import init_train_state, make_train_step
+
+CACHE_DIR = os.environ.get("BENCH_MODEL_DIR", "results/bench_models")
+TRAIN_STEPS = int(os.environ.get("BENCH_TRAIN_STEPS", "220"))
+
+
+def _train(model: Model, steps: int, kind: str, seed: int):
+    params, opt = init_train_state(model, jax.random.PRNGKey(seed))
+    step = jax.jit(make_train_step(model, TrainConfig(
+        learning_rate=3e-3, total_steps=steps, warmup_steps=steps // 10)),
+        donate_argnums=(0, 1))
+    it = packed_batches(model.cfg.vocab_size, 8, 64, kind=kind, seed=seed)
+    for _ in range(steps):
+        params, opt, _ = step(params, opt,
+                              {k: jnp.asarray(v) for k, v in next(it).items()})
+    return params
+
+
+def trained_params(arch: str, kind: str, seed: int,
+                   overrides: dict | None = None):
+    """Train-or-load a reduced arch on a workload kind."""
+    cfg = get_config(arch, reduced=True, **(overrides or {}))
+    model = Model(cfg)
+    tag = f"{cfg.name}_{kind}_{seed}"
+    ckdir = os.path.join(CACHE_DIR, tag)
+    params = model.init(jax.random.PRNGKey(seed))  # template
+    path = latest_checkpoint(ckdir)
+    if path:
+        restored, _ = restore_checkpoint(path, {"params": params})
+        return model, restored["params"]
+    params = _train(model, TRAIN_STEPS, kind, seed)
+    save_checkpoint(ckdir, TRAIN_STEPS, {"params": params}, {"arch": cfg.name})
+    return model, params
+
+
+def trained_pair(target_arch: str = "qwen2-57b-a14b", kind: str = "code"):
+    """(target model+params, draft model+params) trained on one workload."""
+    t, pt = trained_params(target_arch, kind, seed=0)
+    d, pd = trained_params("qwen2-0.5b", kind, seed=1,
+                           overrides={"vocab_size":
+                                      get_config(target_arch, reduced=True).vocab_size})
+    return (t, pt), (d, pd)
+
+
+def measure_sigma(target, params_t, draft, params_d, *, batch: int,
+                  gamma: int, temperature: float, kind: str,
+                  max_new: int = 32, seed: int = 0):
+    """REAL sigma/alpha from the engine on a real prompt batch."""
+    from repro.core.spec_decode import SpecDecoder
+    pb = prompt_batch(target.cfg.vocab_size, batch, kind=kind, seed=seed)
+    sd = SpecDecoder(target, draft, gamma=gamma, temperature=temperature)
+    _, stats = sd.generate(params_t, params_d, jnp.asarray(pb["tokens"]),
+                           max_new, lengths=jnp.asarray(pb["lengths"]),
+                           key=jax.random.PRNGKey(seed))
+    return stats
+
+
+class Timer:
+    def __init__(self):
+        self.t0 = time.perf_counter()
+
+    def us(self, n_calls: int = 1) -> float:
+        return (time.perf_counter() - self.t0) * 1e6 / max(n_calls, 1)
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,37 @@
+"""Table 3 — modeling MSE vs number of fitting measurements m (stride
+sampling of the 228-row frame, Appendix C.2/C.3)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer, csv_row
+from benchmarks.sparsity_sweep import build_frame
+from repro.configs.registry import get_config
+from repro.core.perf_model import SpeedupModel, stride_sample
+
+
+def run() -> list:
+    rows = []
+    target = get_config("qwen2-57b-a14b")
+    draft = get_config("qwen2-0.5b")
+    from repro.core.simulator import Simulator
+    frame = build_frame(Simulator(), target, draft)
+    Y = np.array([r.speedup for r in frame])
+    B = np.array([r.batch for r in frame])
+    G = np.array([r.gamma for r in frame])
+    K = np.array([r.top_k for r in frame])
+    E = np.array([r.num_experts for r in frame])
+    S = np.array([r.sigma for r in frame])
+    assert len(frame) == 228, len(frame)
+    for m in (10, 12, 15, 21, 38, 76, 228):
+        t0 = Timer()
+        model = SpeedupModel(engine_semantics=True)
+        fit = model.fit(stride_sample(frame, m), target, draft, n_restarts=6)
+        pred = model.predict(B, G, K, E, S)
+        full_mse = float(np.mean((pred - Y) ** 2))
+        batches = sorted({r.batch for r in stride_sample(frame, m)})
+        rows.append(csv_row(
+            f"table3_m{m}", t0.us(),
+            f"fit_mse={fit['mse']:.4f};full_mse={full_mse:.4f};"
+            f"batch_coverage={len(batches)}"))
+    return rows

@@ -1,0 +1,53 @@
+"""Benchmark driver — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig2,table3]
+
+Prints ``name,us_per_call,derived`` CSV rows (one per measurement)."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = [
+    ("fig1_activation", "benchmarks.activation"),
+    ("fig2_speedup_vs_batch", "benchmarks.speedup_vs_batch"),
+    ("fig3_moe_vs_dense", "benchmarks.moe_vs_dense"),
+    ("fig4_sparsity_sweep", "benchmarks.sparsity_sweep"),
+    ("table12_peak_speedup", "benchmarks.peak_speedup"),
+    ("table3_fitting", "benchmarks.fitting"),
+    ("sec34_offloading", "benchmarks.offloading"),
+    ("sec2_prefetch_utility", "benchmarks.prefetch_utility"),
+    ("kernels", "benchmarks.kernels"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated substring filters")
+    args = ap.parse_args()
+    filters = args.only.split(",") if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, modpath in MODULES:
+        if filters and not any(f in name for f in filters):
+            continue
+        t0 = time.time()
+        try:
+            import importlib
+            mod = importlib.import_module(modpath)
+            for row in mod.run():
+                print(row)
+            print(f"{name}_total,{(time.time()-t0)*1e6:.0f},ok")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name}_total,{(time.time()-t0)*1e6:.0f},"
+                  f"FAIL:{type(e).__name__}:{e}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Quickstart: the full API in ~60 lines.
+
+1. build a small MoE target + tiny dense draft,
+2. train both on a synthetic code corpus,
+3. serve a batch with speculative decoding and verify it is lossless,
+4. ask the paper's performance model where SD pays off.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.configs.registry import get_config
+from repro.core.autotune import AutoTuner
+from repro.core.spec_decode import SpecDecoder, generate_ar
+from repro.data.pipeline import packed_batches, prompt_batch
+from repro.models.model import Model
+from repro.training.train_loop import init_train_state, make_train_step
+
+
+def train(model, steps, kind, seed, lr=3e-3):
+    params, opt = init_train_state(model, jax.random.PRNGKey(seed))
+    step = jax.jit(make_train_step(model, TrainConfig(
+        learning_rate=lr, total_steps=steps, warmup_steps=steps // 10)))
+    it = packed_batches(model.cfg.vocab_size, 8, 64, kind=kind, seed=seed)
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, opt, m = step(params, opt, batch)
+        if i % 50 == 0:
+            print(f"  [{model.cfg.name}] step {i:4d} loss {float(m['loss']):.3f}")
+    return params
+
+
+def main():
+    # 1. models — the paper's pairing, reduced: MoE target + small dense draft
+    tcfg = get_config("qwen2-57b-a14b", reduced=True)
+    dcfg = get_config("qwen2-0.5b", reduced=True)
+    target, draft = Model(tcfg), Model(dcfg)
+
+    # 2. train both on the same distribution so the draft can speculate
+    print("training target (reduced Qwen2-57B-A14B)...")
+    params_t = train(target, 200, "code", seed=0)
+    print("training draft (reduced Qwen2-0.5B)...")
+    params_d = train(draft, 200, "code", seed=1)
+
+    # 3. batched speculative decoding — and the losslessness check
+    pb = prompt_batch(tcfg.vocab_size, 8, kind="code", seed=7)
+    prompts, lengths = jnp.asarray(pb["tokens"]), jnp.asarray(pb["lengths"])
+    sd = SpecDecoder(target, draft, gamma=4, temperature=0.0)
+    out_sd, stats = sd.generate(params_t, params_d, prompts, 32,
+                                lengths=lengths)
+    out_ar = generate_ar(target, params_t, prompts, 32, lengths=lengths)
+    assert np.array_equal(out_sd, out_ar), "SD must be lossless"
+    print(f"\nSD lossless ✓  alpha={stats.alpha:.2f} sigma={stats.sigma:.2f} "
+          f"rounds={stats.rounds} (AR would need 32)")
+
+    # 4. the paper's model: where does SD pay off for the FULL config?
+    tuner = AutoTuner(get_config("qwen2-57b-a14b"), get_config("qwen2-0.5b"),
+                      alpha=stats.alpha)
+    win = tuner.speedup_window()
+    print(f"predicted on TPU v5e: peak {win['peak']:.2f}x at batch "
+          f"{win['peak_batch']}, SD-favourable window B∈{win['window']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Config registry: --arch <id> resolution, reduced smoke variants, drafts."""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from repro.configs.base import ModelConfig
+
+_REGISTRY: Dict[str, Callable[[], ModelConfig]] = {}
+_REDUCED: Dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(name: str, full: Callable[[], ModelConfig],
+             reduced: Callable[[], ModelConfig]):
+    _REGISTRY[name] = full
+    _REDUCED[name] = reduced
+
+
+def get_config(name: str, *, reduced: bool = False, **overrides) -> ModelConfig:
+    table = _REDUCED if reduced else _REGISTRY
+    if name not in table:
+        _load_all()
+    if name not in table:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(table)}")
+    cfg = table[name]()
+    return cfg.with_overrides(**overrides) if overrides else cfg
+
+
+def list_archs() -> list:
+    _load_all()
+    return sorted(_REGISTRY)
+
+
+ASSIGNED = (
+    "gemma-7b", "minicpm3-4b", "whisper-base", "qwen2-vl-2b", "gemma3-12b",
+    "jamba-v0.1-52b", "qwen2-7b", "dbrx-132b", "qwen3-moe-30b-a3b", "xlstm-1.3b",
+)
+
+
+def _load_all():
+    from repro.configs import (  # noqa: F401
+        gemma_7b, minicpm3_4b, whisper_base, qwen2_vl_2b, gemma3_12b,
+        jamba_v01_52b, qwen2_7b, dbrx_132b, qwen3_moe_30b_a3b, xlstm_1_3b,
+        qwen2_57b_a14b, mixtral_8x7b, drafts,
+    )
+
+
+def draft_for(cfg: ModelConfig) -> ModelConfig:
+    """Default draft model for a target: small dense decoder sharing the
+    target's vocab (paper pattern: Qwen2-0.5B for Qwen2-57B-A14B)."""
+    return ModelConfig(
+        name=f"{cfg.name}-draft",
+        family="dense",
+        num_layers=4,
+        d_model=min(512, cfg.d_model),
+        num_heads=8,
+        num_kv_heads=2,
+        d_ff=4 * min(512, cfg.d_model),
+        vocab_size=cfg.vocab_size,
+        rope_type="rope" if cfg.rope_type in ("rope", "mrope") else "sinusoidal"
+        if cfg.rope_type == "sinusoidal" else "rope",
+        dtype=cfg.dtype,
+        source="framework default draft",
+    )

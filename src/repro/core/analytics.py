@@ -1,0 +1,64 @@
+"""Closed-form theory from the paper (Sec. 3.2, Eqs. 6-11, Appendix B).
+
+All functions are numpy-friendly scalars/arrays; jnp not required since
+these feed benchmarks and the perf model, not the training graph.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def expected_activated_experts(t, num_experts: int, top_k: int):
+    """Eq. 8:  N(t) = E * (1 - ((E-K)/E)^t)  — expected #activated experts
+    for t tokens through the gate, i.i.d. uniform routing."""
+    t = np.asarray(t, dtype=np.float64)
+    E = np.asarray(num_experts, dtype=np.float64)
+    K = np.asarray(top_k, dtype=np.float64)
+    return E * (1.0 - ((E - K) / E) ** t)
+
+
+def activation_threshold(rho: float, tau: float = 0.95) -> int:
+    """Eq. 9:  T_thres = ceil(log_{1-rho}(1-tau)) — tokens needed so that
+    N(t) >= tau * E (near-full expert activation)."""
+    if rho >= 1.0:
+        return 1
+    return int(np.ceil(np.log(1.0 - tau) / np.log(1.0 - rho)))
+
+
+def mean_tokens_per_expert(t, rho: float):
+    """Eq. 10:  T̄_exp(t; rho) = rho * t / (1 - (1-rho)^t) — average tokens
+    each *activated* expert processes.  Monotone increasing in rho for t>1
+    (Appendix B), hence sparser MoE ⇒ fewer tokens/expert ⇒ more
+    memory-bound."""
+    t = np.asarray(t, dtype=np.float64)
+    rho = np.asarray(rho, dtype=np.float64)
+    denom = 1.0 - (1.0 - rho) ** t
+    dense = rho >= 1.0
+    return np.where(
+        t == 0, 0.0,
+        np.where(dense, t, rho * t / np.maximum(denom, 1e-300)))
+
+
+def roofline_response(t, knee: float, s: float):
+    """Eq. 11:  G(t; knee, s) — execution-time response to token count.
+    Exponential (slow start) below the ridge-point knee, C^1-continuous
+    linear beyond it."""
+    t = np.asarray(t, dtype=np.float64)
+    s = max(float(s), 1.0 + 1e-9)
+    below = np.power(s, np.minimum(t, knee))
+    above = (s ** knee) * (1.0 + np.log(s) * (t - knee))
+    return np.where(t <= knee, below, above)
+
+
+def sigma_from_alpha(alpha, gamma: int):
+    """Eq. 5: sigma = (1 - alpha^(gamma+1)) / ((1 - alpha)(gamma+1))."""
+    alpha = np.asarray(alpha, dtype=np.float64)
+    safe = np.abs(1.0 - alpha) > 1e-9
+    num = np.where(safe, (1.0 - alpha ** (gamma + 1)) / np.where(safe, 1.0 - alpha, 1.0),
+                   gamma + 1.0)
+    return num / (gamma + 1)
+
+
+def expected_accepted_len(alpha, gamma: int):
+    """S/R = sigma * (gamma + 1): mean tokens committed per SD round."""
+    return sigma_from_alpha(alpha, gamma) * (gamma + 1)

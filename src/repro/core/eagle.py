@@ -1,0 +1,199 @@
+"""EAGLE-style speculation head (arXiv:2401.15077) — the paper's second SD
+configuration (its Mixtral experiments use an Eagle head as the draft).
+
+Instead of a standalone small model, the draft is a single transformer
+block grafted onto the TARGET's feature stream:
+
+    f̂_{t+1} = Block( W_fuse [ embed(x_{t+1}) ; f_t ] )
+    p̂(x_{t+2}) = TargetHead( f̂_{t+1} )
+
+where f_t is the target's final hidden state at the last verified position.
+During a propose chain the block feeds on its own predicted features
+(EAGLE's autoregressive feature prediction); verification refreshes f from
+the real target features, which is why acceptance stays high.
+
+The head reuses the target's embedding and unembedding — its own params are
+one fusion matrix + one block (~2 target layers' worth), matching the
+paper's T_D/T_T ≪ 1 requirement.
+
+``EagleSpecDecoder`` mirrors core/spec_decode.SpecDecoder (same rejection
+sampling, same cache discipline) with the feature-carry threaded through
+rounds; greedy losslessness is preserved by construction and tested.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.rejection import probs_from_logits, rejection_sample, sample_from
+from repro.core.spec_decode import SDStats
+from repro.models import transformer as tfm
+from repro.models.layers import dense_init
+from repro.models.model import Model
+
+
+class EagleHead:
+    """One-block speculation head bound to a target Model."""
+
+    def __init__(self, target: Model):
+        self.target = target
+        cfg = target.cfg
+        # the head's block is a plain dense-FFN attention block in the
+        # target's hidden size (no MoE — drafts are dense, paper Sec. 3.3)
+        self.cfg = cfg.with_overrides(
+            name=f"{cfg.name}-eagle", num_layers=1, layer_pattern=("attn",),
+            moe_pattern=(False,), num_experts=0, num_experts_per_tok=0,
+            d_ff=4 * cfg.d_model,
+            num_heads=max(4, cfg.num_heads // 4),
+            num_kv_heads=max(2, cfg.num_kv_heads // 4),
+            head_dim=64)
+
+    def init(self, key: jax.Array) -> dict:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        k1, k2 = jax.random.split(key)
+        return {
+            "fuse": dense_init(k1, (2 * cfg.d_model, cfg.d_model), dt),
+            "layers": tfm.init_stack(k2, cfg, dt),
+        }
+
+    def init_cache(self, batch: int, max_seq: int) -> dict:
+        return {
+            "layers": tfm.make_stack_cache(self.cfg, batch, max_seq,
+                                           jnp.dtype(self.cfg.dtype)),
+            "lengths": jnp.zeros((batch,), jnp.int32),
+        }
+
+    # ------------------------------------------------------------------ step
+    def step(self, params_target, params, feat: jnp.ndarray,
+             token: jnp.ndarray, cache: dict):
+        """One propose step: (feature (B,d) at pos-1, token (B,) at pos) →
+        (next-token logits (B,V), predicted next feature (B,d), cache)."""
+        tgt = self.target
+        emb = tgt._embed(params_target, token[:, None], cache["lengths"][:, None])
+        x = jnp.concatenate([emb[:, 0], feat.astype(emb.dtype)], axis=-1)
+        x = (x @ params["fuse"])[:, None]                   # (B, 1, d)
+        positions = cache["lengths"][:, None]
+        x, new_layers, _ = tfm.stack_forward(
+            params["layers"], self.cfg, x, positions, cache["layers"],
+            mode="extend")
+        new_cache = dict(cache, layers=new_layers,
+                         lengths=cache["lengths"] + 1)
+        logits = tgt._head(params_target, x)[:, 0]          # tied target head
+        return logits, x[:, 0], new_cache
+
+    # ----------------------------------------------------------- prefill feat
+    def prefill(self, params_target, params, prompts, max_seq, *,
+                lengths=None):
+        """Prefill the target AND capture its last hidden feature."""
+        tgt = self.target
+        B, T = prompts.shape
+        if lengths is None:
+            lengths = jnp.full((B,), T, jnp.int32)
+        t_cache = tgt.init_cache(B, max_seq)
+        # run prefill via extend_with_hidden from an empty cache
+        logits, hidden, t_cache = tgt.extend_with_hidden(
+            params_target, prompts, t_cache, collect=True)
+        t_cache = tgt.commit(t_cache, lengths, collected=True)
+        last_h = jnp.take_along_axis(
+            hidden, (lengths - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+        last_logits = jnp.take_along_axis(
+            logits, (lengths - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+        e_cache = self.init_cache(B, max_seq)
+        e_cache = dict(e_cache, lengths=lengths.astype(jnp.int32))
+        return last_logits, last_h, t_cache, e_cache
+
+
+class EagleSpecDecoder:
+    """SpecDecoder with an EagleHead draft (feature-carry across rounds)."""
+
+    def __init__(self, target: Model, head: EagleHead, gamma: int = 4,
+                 temperature: float = 0.0):
+        assert not target.cfg.is_recurrent, \
+            "Eagle feature-carry assumes attention targets"
+        self.target, self.head = target, head
+        self.gamma, self.temperature = gamma, temperature
+        self._round_jit = jax.jit(self._round)
+
+    def _round(self, params_t, params_e, t_cache, e_cache, last_token,
+               last_feat, key):
+        gamma = self.gamma
+        B = last_token.shape[0]
+        key, k_rej = jax.random.split(key)
+        base_len = t_cache["lengths"]
+
+        # PROPOSE: chain the head on its own predicted features
+        feat, token = last_feat, last_token
+        ec = e_cache
+        qs, ds = [], []
+        for i in range(gamma):
+            logits, feat, ec = self.head.step(params_t, params_e, feat,
+                                              token, ec)
+            key, ks = jax.random.split(key)
+            q = probs_from_logits(logits, self.temperature)
+            token = sample_from(q, ks, self.temperature)
+            qs.append(q)
+            ds.append(token)
+        drafts = jnp.stack(ds, 1)
+        q_dist = jnp.stack(qs, 1)
+
+        # VERIFY (with hidden capture)
+        verify_tokens = jnp.concatenate([last_token[:, None], drafts], 1)
+        logits_v, hidden_v, pend = self.target.extend_with_hidden(
+            params_t, verify_tokens, t_cache, collect=True)
+        p_dist = probs_from_logits(logits_v, self.temperature)
+
+        n_accept, next_token, _ = rejection_sample(
+            p_dist, q_dist, drafts, k_rej, self.temperature)
+        n_commit = n_accept + 1
+        t_cache = self.target.commit(pend, n_commit, collected=True)
+        # eagle cache: attention-only → lengths rollback
+        e_cache = dict(ec, lengths=base_len + n_commit)
+        # feature of the LAST VERIFIED committed token = hidden at index n
+        new_feat = jnp.take_along_axis(
+            hidden_v, n_accept[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+
+        slot = jnp.arange(gamma + 1)[None, :]
+        drafts_pad = jnp.concatenate([drafts, jnp.zeros((B, 1), drafts.dtype)], 1)
+        committed = jnp.where(slot < n_accept[:, None], drafts_pad,
+                              next_token[:, None])
+        return (t_cache, e_cache, next_token, new_feat, committed, n_commit,
+                jnp.sum(n_accept), key)
+
+    def generate(self, params_t, params_e, prompts, max_new_tokens, *,
+                 lengths=None, key=None) -> Tuple[np.ndarray, SDStats]:
+        B, Tp = prompts.shape
+        gamma = self.gamma
+        key = key if key is not None else jax.random.PRNGKey(0)
+        max_seq = Tp + max_new_tokens + gamma + 2
+        last_logits, feat, t_cache, e_cache = self.head.prefill(
+            params_t, params_e, prompts, max_seq, lengths=lengths)
+        key, k0 = jax.random.split(key)
+        last_token = sample_from(probs_from_logits(last_logits,
+                                                   self.temperature), k0,
+                                 self.temperature)
+        out = np.zeros((B, max_new_tokens + gamma + 1), np.int32)
+        out[:, 0] = np.asarray(last_token)
+        n_out = np.ones((B,), np.int32)
+        stats = SDStats()
+        while int(n_out.min()) < max_new_tokens:
+            (t_cache, e_cache, last_token, feat, committed, n_commit, n_acc,
+             key) = self._round_jit(params_t, params_e, t_cache, e_cache,
+                                    last_token, feat, key)
+            committed = np.asarray(committed)
+            ncn = np.asarray(n_commit)
+            for b in range(B):
+                n = int(ncn[b])
+                w = min(n, out.shape[1] - n_out[b])
+                out[b, n_out[b]: n_out[b] + w] = committed[b, :w]
+                n_out[b] += w
+            stats.rounds += 1
+            stats.generated += int(ncn.sum())
+            stats.max_possible += (gamma + 1) * B
+            stats.accept_events += int(np.asarray(n_acc))
+            stats.draft_events += gamma * B
+        return out[:, :max_new_tokens], stats

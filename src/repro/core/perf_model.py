@@ -1,0 +1,163 @@
+"""Algorithm 1 — the paper's fitted SD-speedup model + TRR fitting.
+
+  T_target(t) = bias + k1·G(t; λRP, s) + k2·N(t) + k3·G(T̄_exp(t); λRP, s)
+  T_draft(t)  = draft_bias + draft_k·G(t; λRP, s)
+  T_reject(t) = reject_bias + reject_k·t
+
+  Speedup(B, γ, K, E, σ) =
+      σ(γ+1) · T_target(B) / (γ·T_draft(B) + T_target(B·γ) + T_reject(B·γ))
+
+Ten relaxation parameters are fitted against measurements with
+scipy.optimize.least_squares (Trust Region Reflective) under the physical
+bounds of Appendix C.2 — bias/k2/draft_bias bounded by [1×, 5×] the
+theoretical minimum load time from hardware constants.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Sequence
+
+import numpy as np
+from scipy.optimize import least_squares
+
+from repro.configs.base import ModelConfig
+from repro.core.analytics import (
+    expected_activated_experts,
+    mean_tokens_per_expert,
+    roofline_response,
+)
+from repro.core.simulator import Hardware, V5E
+
+PARAM_NAMES = ("bias", "k1", "k2", "k3", "draft_bias", "draft_k",
+               "reject_bias", "reject_k", "lam", "s")
+
+
+@dataclass
+class Measurement:
+    """One row of Alg. 1's measurement input M_i."""
+    batch: int
+    gamma: int
+    top_k: int
+    num_experts: int
+    sigma: float
+    speedup: float
+
+
+@dataclass
+class SpeedupModel:
+    """``engine_semantics=False`` is the paper-faithful Alg. 1 (verify = B*gamma
+    tokens, gamma draft forwards); True matches our engine (B*(gamma+1) verify
+    tokens, gamma+1 draft forwards — the last draft forward only writes KV)."""
+    hw: Hardware = V5E
+    params: np.ndarray | None = None
+    engine_semantics: bool = False
+
+    # ------------------------------------------------------------ components
+    def _terms(self, p: np.ndarray):
+        (bias, k1, k2, k3, draft_bias, draft_k, reject_bias, reject_k,
+         lam, s) = p
+        knee = lam * self.hw.ridge_point
+
+        def T_target(t, K, E):
+            n = expected_activated_experts(t, E, K)
+            t_exp = mean_tokens_per_expert(t, K / E)
+            return (bias + k1 * roofline_response(t, knee, s)
+                    + k2 * n + k3 * roofline_response(t_exp, knee, s))
+
+        def T_draft(t):
+            return draft_bias + draft_k * roofline_response(t, knee, s)
+
+        def T_reject(t):
+            return reject_bias + reject_k * t
+
+        return T_target, T_draft, T_reject
+
+    def compute_speedup(self, p: np.ndarray, batch, gamma, top_k,
+                        num_experts, sigma):
+        """Alg. 1 line 3 — vectorized over measurement arrays."""
+        batch = np.asarray(batch, np.float64)
+        gamma = np.asarray(gamma, np.float64)
+        T_target, T_draft, T_reject = self._terms(p)
+        gv = gamma + 1.0 if self.engine_semantics else gamma
+        t_ar = T_target(batch, np.asarray(top_k, np.float64),
+                        np.asarray(num_experts, np.float64))
+        t_ver = T_target(batch * gv, np.asarray(top_k, np.float64),
+                         np.asarray(num_experts, np.float64))
+        t_sd = gv * T_draft(batch) + t_ver + T_reject(batch * gv)
+        return np.asarray(sigma, np.float64) * (gamma + 1.0) * t_ar / t_sd
+
+    def predict(self, batch, gamma, top_k, num_experts, sigma):
+        assert self.params is not None, "fit() first"
+        return self.compute_speedup(self.params, batch, gamma, top_k,
+                                    num_experts, sigma)
+
+    # ---------------------------------------------------------------- bounds
+    def bounds(self, target_cfg: ModelConfig, draft_cfg: ModelConfig,
+               t_rej_max: float, dtype_bytes: int = 2):
+        """Appendix C.2 physically-grounded search bounds."""
+        bw = self.hw.hbm_bw
+        v_dense = (target_cfg.param_count()
+                   - target_cfg.num_experts * 3 * target_cfg.d_model
+                   * target_cfg.moe_d_ff
+                   * sum(target_cfg.moe_pattern) * target_cfg.num_periods)
+        v_dense = max(v_dense, 1)
+        bias_min = v_dense * dtype_bytes / bw
+        v_exp = 3 * target_cfg.d_model * target_cfg.moe_d_ff \
+            * sum(target_cfg.moe_pattern) * target_cfg.num_periods
+        k2_min = max(v_exp, 1) * dtype_bytes / bw / max(target_cfg.num_experts, 1)
+        db_min = draft_cfg.param_count() * dtype_bytes / bw
+        lo = np.array([bias_min, 0.0, k2_min, 0.0, db_min, 0.0,
+                       0.0, 0.0, 0.2, 1.0])
+        hi = np.array([5 * bias_min, np.inf, 5 * k2_min, np.inf, 5 * db_min,
+                       np.inf, t_rej_max, t_rej_max, 1.0, 2.0])
+        return lo, hi
+
+    # ------------------------------------------------------------------ fit
+    def fit(self, measurements: Sequence[Measurement],
+            target_cfg: ModelConfig, draft_cfg: ModelConfig,
+            t_rej_max: float = 1e-3, seed: int = 0,
+            n_restarts: int = 8) -> dict:
+        """Multi-start TRR: the loss surface has local minima, so we restart
+        from ``n_restarts`` log-uniform points inside the bounds and keep the
+        best solution (the paper fits once on GPU data; simulator data is
+        smoother and rewards restarts)."""
+        m = measurements
+        B = np.array([x.batch for x in m], np.float64)
+        G = np.array([x.gamma for x in m], np.float64)
+        K = np.array([x.top_k for x in m], np.float64)
+        E = np.array([x.num_experts for x in m], np.float64)
+        S = np.array([x.sigma for x in m], np.float64)
+        Y = np.array([x.speedup for x in m], np.float64)
+        lo, hi = self.bounds(target_cfg, draft_cfg, t_rej_max)
+
+        def resid(p):
+            return self.compute_speedup(p, B, G, K, E, S) - Y
+
+        rng = np.random.default_rng(seed)
+        # scale for unbounded coefficients: draft-model load time is a
+        # natural unit for the k's
+        unit = lo[4] if lo[4] > 0 else 1e-4
+        best = None
+        total_nfev = 0
+        for r in range(n_restarts):
+            x0 = np.empty(10)
+            for i in range(10):
+                if np.isinf(hi[i]):
+                    x0[i] = unit * 10 ** rng.uniform(-3, 1)
+                else:
+                    x0[i] = lo[i] + rng.uniform(0.05, 0.95) * (hi[i] - lo[i])
+            sol = least_squares(resid, x0, bounds=(lo, hi), method="trf",
+                                max_nfev=5_000)
+            total_nfev += sol.nfev
+            if best is None or sol.cost < best.cost:
+                best = sol
+        self.params = best.x
+        mse = float(np.mean(best.fun ** 2))
+        return {"params": dict(zip(PARAM_NAMES, best.x)), "mse": mse,
+                "cost": float(best.cost), "nfev": total_nfev}
+
+
+def stride_sample(rows: List[Measurement], m: int) -> List[Measurement]:
+    """Appendix C.2 selection: M = df[::stride] with m = ceil(len/stride)."""
+    stride = max(1, int(np.ceil(len(rows) / m)))
+    return rows[::stride]

@@ -1,0 +1,82 @@
+"""Batched rejection sampling for speculative decoding (Leviathan et al.).
+
+Losslessness: for every sequence the emitted tokens are distributed exactly
+as samples from the target model.  Accept draft token d_i with probability
+min(1, p_i(d_i)/q_i(d_i)); on the first rejection sample from the residual
+norm(max(p_i − q_i, 0)); if all gamma drafts are accepted, emit a bonus
+token from p_gamma.  Greedy decoding is the temperature→0 limit: p and q
+become one-hot, acceptance degenerates to argmax equality, and SD output is
+token-for-token identical to autoregressive greedy decoding (tested).
+
+Everything is vectorized over the batch: ``n_accept`` is per-sequence.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def probs_from_logits(logits: jnp.ndarray, temperature: float) -> jnp.ndarray:
+    """Softmax with temperature; temperature <= 0 → one-hot argmax (greedy)."""
+    if temperature <= 0.0:
+        return jax.nn.one_hot(
+            jnp.argmax(logits, axis=-1), logits.shape[-1], dtype=jnp.float32)
+    return jax.nn.softmax(logits.astype(jnp.float32) / temperature, axis=-1)
+
+
+def sample_from(probs: jnp.ndarray, key: jax.Array, temperature: float) -> jnp.ndarray:
+    if temperature <= 0.0:
+        return jnp.argmax(probs, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, jnp.log(jnp.maximum(probs, 1e-30))).astype(jnp.int32)
+
+
+def rejection_sample(
+    p: jnp.ndarray,            # (B, gamma+1, V) target distributions
+    q: jnp.ndarray,            # (B, gamma,   V) draft distributions
+    drafts: jnp.ndarray,       # (B, gamma)      proposed tokens
+    key: jax.Array,
+    temperature: float,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (n_accept (B,), next_token (B,), accept_mask (B, gamma)).
+
+    Committed tokens per sequence = drafts[:n_accept] + [next_token], i.e.
+    n_accept + 1 new tokens."""
+    B, gamma = drafts.shape
+    k_u, k_res = jax.random.split(key)
+
+    p_d = jnp.take_along_axis(p[:, :gamma], drafts[..., None], axis=-1)[..., 0]
+    q_d = jnp.take_along_axis(q, drafts[..., None], axis=-1)[..., 0]
+    ratio = p_d / jnp.maximum(q_d, 1e-30)
+    if temperature <= 0.0:
+        accept = p_d > 0.5                              # one-hot match
+    else:
+        u = jax.random.uniform(k_u, (B, gamma))
+        accept = u < ratio
+    # n_accept = number of leading accepts
+    prefix = jnp.cumprod(accept.astype(jnp.int32), axis=-1)
+    n_accept = jnp.sum(prefix, axis=-1)                 # (B,)
+
+    # distribution for the extra token: residual at the rejection position,
+    # or the bonus distribution p_gamma when everything was accepted
+    p_at = jnp.take_along_axis(p, n_accept[:, None, None], axis=1)[:, 0]   # (B,V)
+    q_pad = jnp.concatenate([q, jnp.zeros_like(q[:, :1])], axis=1)
+    q_at = jnp.take_along_axis(q_pad, n_accept[:, None, None], axis=1)[:, 0]
+    rejected_somewhere = n_accept < gamma
+    residual = jnp.maximum(p_at - q_at, 0.0)
+    residual_sum = jnp.sum(residual, axis=-1, keepdims=True)
+    # fall back to p when the residual vanishes (q == p pointwise)
+    residual = jnp.where(residual_sum > 1e-12, residual / jnp.maximum(residual_sum, 1e-30), p_at)
+    extra_dist = jnp.where(rejected_somewhere[:, None], residual, p_at)
+    next_token = sample_from(extra_dist, k_res, temperature)
+    return n_accept.astype(jnp.int32), next_token, accept
+
+
+def sigma_from_alpha(alpha, gamma: int):
+    """Eq. 5: expected generated / max possible per round."""
+    import numpy as np
+    alpha = np.asarray(alpha, dtype=np.float64)
+    num = np.where(
+        np.abs(1 - alpha) < 1e-9, gamma + 1.0, (1 - alpha ** (gamma + 1)) / (1 - alpha))
+    return num / (gamma + 1)

@@ -1,0 +1,259 @@
+"""Batched speculative-decoding engine (the paper's serving mechanism).
+
+One SD round (Sec. 3.1):
+  1. PROPOSE  — the draft model autoregressively emits gamma tokens per
+     sequence (gamma+1 draft forwards of one token: the last one only
+     writes d_gamma's KV so the draft cache stays aligned on full accept).
+  2. VERIFY   — the target model processes [last_token, d_1..d_gamma]
+     (gamma+1 tokens) in ONE forward, yielding gamma+1 next-token
+     distributions.
+  3. REJECT   — batched rejection sampling (rejection.py) accepts a per-
+     sequence prefix of the drafts and emits one extra token (residual
+     sample or bonus).  n_commit = n_accept + 1 ∈ [1, gamma+1].
+
+Cache discipline:
+  * target/draft attention KV: fresh tokens are written at offsets
+    ``lengths``; a rejected suffix is simply left stale (masked by
+    position) and ``lengths += n_commit``.
+  * recurrent states (SSM/xLSTM targets or drafts): verify collects
+    per-step states and ``commit`` gathers the state of the last accepted
+    token (models/model.py).  Recurrent drafts re-run the verify pass from
+    a pre-round snapshot (γ+1 cheap draft tokens) since their propose loop
+    advances state destructively.
+
+The engine never mixes tokens across sequences — per-sequence lengths make
+the batch ragged, exactly like continuous batching in vLLM.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rejection import probs_from_logits, rejection_sample, sample_from
+from repro.models.model import Model
+
+
+@dataclass
+class SDStats:
+    rounds: int = 0
+    generated: int = 0                      # total committed tokens (all seqs)
+    max_possible: int = 0                   # rounds * (gamma+1) * B
+    accept_events: int = 0                  # accepted draft tokens
+    draft_events: int = 0                   # proposed draft tokens
+    propose_time: float = 0.0
+    verify_time: float = 0.0
+    reject_time: float = 0.0
+
+    @property
+    def sigma(self) -> float:               # paper's σ (Eq. 5 empirical)
+        return self.generated / max(self.max_possible, 1)
+
+    @property
+    def alpha(self) -> float:               # empirical acceptance rate
+        return self.accept_events / max(self.draft_events, 1)
+
+
+def _gather_snapshot(snaps, n_commit):
+    """snaps: pytree stacked (gamma+1, P, B, ...); pick index n_commit-1 per seq."""
+    idx = n_commit - 1
+
+    def g(a):
+        moved = jnp.moveaxis(a, 2, 0)                   # (B, G+1, P, ...)
+        sel = jax.vmap(lambda ab, n: ab[n])(moved, idx)
+        return jnp.moveaxis(sel, 0, 1)                  # (G+1→, ...) -> (P,B,...)
+
+    return jax.tree.map(g, snaps)
+
+
+class SpecDecoder:
+    """Pairs a target and a draft model for batched speculative decoding."""
+
+    def __init__(self, target: Model, draft: Model, gamma: int = 4,
+                 temperature: float = 0.0):
+        self.target = target
+        self.draft = draft
+        self.gamma = gamma
+        self.temperature = temperature
+        self._round_jit = jax.jit(self._round)
+
+    # ------------------------------------------------------------- one round
+    def _propose(self, params_d, draft_cache, last_token, key):
+        """gamma+1 single-token draft forwards; returns drafts, q-dists and
+        the draft cache with all gamma+1 tokens written (lengths NOT bumped
+        for attention slots; recurrent slots committed per step)."""
+        gamma = self.gamma
+        recurrent = self.draft.cfg.is_recurrent
+        c = draft_cache
+        token = last_token
+        qs, ds = [], []
+        snapshot = None
+        if recurrent:
+            snapshot = c                                    # pre-round state
+        for i in range(gamma):
+            if recurrent:
+                logits, pend = self.draft.extend(params_d, token[:, None], c,
+                                                 collect=True)
+                c = self.draft.commit(pend, jnp.ones_like(c["lengths"]),
+                                      collected=True)
+            else:
+                logits, c = self.draft.extend(params_d, token[:, None], c)
+                c = dict(c, lengths=c["lengths"] + 1)
+            key, k_s = jax.random.split(key)
+            q = probs_from_logits(logits[:, 0], self.temperature)
+            token = sample_from(q, k_s, self.temperature)
+            qs.append(q)
+            ds.append(token)
+        # write d_gamma's KV so the cache is complete on full acceptance
+        if recurrent:
+            logits, pend = self.draft.extend(params_d, token[:, None], c, collect=True)
+            c = self.draft.commit(pend, jnp.ones_like(c["lengths"]), collected=True)
+        else:
+            _, c = self.draft.extend(params_d, token[:, None], c)
+        drafts = jnp.stack(ds, axis=1)                      # (B, gamma)
+        q_dist = jnp.stack(qs, axis=1)                      # (B, gamma, V)
+        return drafts, q_dist, c, snapshot
+
+    def _round(self, params_t, params_d, target_cache, draft_cache,
+               last_token, key):
+        gamma = self.gamma
+        B = last_token.shape[0]
+        key, k_prop, k_rej = jax.random.split(key, 3)
+        base_len = target_cache["lengths"]
+
+        drafts, q_dist, d_cache, d_snapshot = self._propose(
+            params_d, draft_cache, last_token, k_prop)
+
+        # VERIFY: one target forward over [last, d_1..d_gamma]
+        verify_tokens = jnp.concatenate([last_token[:, None], drafts], axis=1)
+        logits_v, pend_t = self.target.extend(
+            params_t, verify_tokens, target_cache, collect=True)
+        p_dist = probs_from_logits(logits_v, self.temperature)  # (B, γ+1, V)
+
+        # REJECT
+        n_accept, next_token, accept_mask = rejection_sample(
+            p_dist, q_dist, drafts, k_rej, self.temperature)
+        n_commit = n_accept + 1
+
+        # COMMIT target
+        t_cache = self.target.commit(pend_t, n_commit, collected=True)
+
+        # COMMIT draft
+        if self.draft.cfg.is_recurrent:
+            # re-run from the pre-round snapshot and gather accepted state
+            _, pend_d = self.draft.extend(
+                params_d, verify_tokens,
+                dict(d_snapshot), collect=True)
+            d_cache = self.draft.commit(pend_d, n_commit, collected=True)
+        else:
+            d_cache = dict(d_cache, lengths=base_len + n_commit)
+
+        # committed new tokens this round: [d_1..d_n, next]  (n_commit each)
+        slot = jnp.arange(gamma + 1)[None, :]
+        drafts_pad = jnp.concatenate([drafts, jnp.zeros((B, 1), drafts.dtype)], 1)
+        committed = jnp.where(slot < n_accept[:, None], drafts_pad,
+                              next_token[:, None])          # (B, γ+1)
+        return (t_cache, d_cache, next_token, committed, n_commit,
+                jnp.sum(n_accept), key)
+
+    # --------------------------------------------------------------- prefill
+    def prefill(self, params_t, params_d, prompts: jnp.ndarray,
+                max_seq: int, *, lengths=None, key=None,
+                prefill_kwargs: Optional[dict] = None):
+        """Prefill both models; returns (target_cache, draft_cache, last_token)."""
+        B = prompts.shape[0]
+        kw = prefill_kwargs or {}
+        t_cache = self.target.init_cache(B, max_seq)
+        d_cache = self.draft.init_cache(B, max_seq)
+        last_t, t_cache = self.target.prefill(params_t, prompts, t_cache,
+                                              lengths=lengths, **kw)
+        _, d_cache = self.draft.prefill(params_d, prompts, d_cache,
+                                        lengths=lengths)
+        key = key if key is not None else jax.random.PRNGKey(0)
+        p = probs_from_logits(last_t, self.temperature)
+        last_token = sample_from(p, key, self.temperature)
+        return t_cache, d_cache, last_token
+
+    # -------------------------------------------------------------- generate
+    def generate(
+        self,
+        params_t,
+        params_d,
+        prompts: jnp.ndarray,               # (B, T_prompt)
+        max_new_tokens: int,
+        *,
+        lengths=None,
+        key: Optional[jax.Array] = None,
+        prefill_kwargs: Optional[dict] = None,
+        timed: bool = False,
+    ) -> Tuple[np.ndarray, SDStats]:
+        """Run SD rounds until every sequence has >= max_new_tokens."""
+        B, Tp = prompts.shape
+        gamma = self.gamma
+        key = key if key is not None else jax.random.PRNGKey(0)
+        max_seq = Tp + max_new_tokens + gamma + 2
+        t_cache, d_cache, last_token = self.prefill(
+            params_t, params_d, prompts, max_seq, lengths=lengths, key=key,
+            prefill_kwargs=prefill_kwargs)
+
+        out = np.zeros((B, max_new_tokens + gamma + 1), np.int32)
+        n_out = np.zeros((B,), np.int32)
+        # the first sampled token (from prefill) counts as generated
+        out[:, 0] = np.asarray(last_token)
+        n_out += 1
+
+        stats = SDStats()
+        while int(n_out.min()) < max_new_tokens:
+            t0 = time.perf_counter()
+            (t_cache, d_cache, last_token, committed, n_commit, n_acc, key) = \
+                self._round_jit(params_t, params_d, t_cache, d_cache,
+                                last_token, key)
+            committed = np.asarray(committed)
+            n_commit_np = np.asarray(n_commit)
+            if timed:
+                jax.block_until_ready(last_token)
+                stats.verify_time += time.perf_counter() - t0
+            for b in range(B):
+                n = int(n_commit_np[b])
+                w = min(n, out.shape[1] - n_out[b])
+                out[b, n_out[b]: n_out[b] + w] = committed[b, :w]
+                n_out[b] += w
+            stats.rounds += 1
+            stats.generated += int(n_commit_np.sum())
+            stats.max_possible += (gamma + 1) * B
+            stats.accept_events += int(np.asarray(n_acc))
+            stats.draft_events += gamma * B
+        return out[:, :max_new_tokens], stats
+
+
+# ---------------------------------------------------------------------------
+# plain autoregressive baseline (T_AR in the paper's speedup definition)
+# ---------------------------------------------------------------------------
+
+def generate_ar(model: Model, params, prompts: jnp.ndarray,
+                max_new_tokens: int, *, temperature: float = 0.0,
+                lengths=None, key=None,
+                prefill_kwargs: Optional[dict] = None) -> np.ndarray:
+    B, Tp = prompts.shape
+    key = key if key is not None else jax.random.PRNGKey(0)
+    cache = model.init_cache(B, Tp + max_new_tokens + 2)
+    kw = prefill_kwargs or {}
+    last_logits, cache = model.prefill(params, prompts, cache,
+                                       lengths=lengths, **kw)
+    step = jax.jit(model.decode_step)
+    out = np.zeros((B, max_new_tokens), np.int32)
+    p = probs_from_logits(last_logits, temperature)
+    key, k0 = jax.random.split(key)
+    token = sample_from(p, k0, temperature)
+    out[:, 0] = np.asarray(token)
+    for t in range(1, max_new_tokens):
+        logits, cache = step(params, token, cache)
+        key, kt = jax.random.split(key)
+        token = sample_from(probs_from_logits(logits, temperature), kt, temperature)
+        out[:, t] = np.asarray(token)
+    return out

@@ -1,0 +1,56 @@
+"""Target efficiency — the paper's new systemic metric (Sec. 3.1).
+
+    eta_target(B, gamma) = T_T(B, 1) / T_T(B, gamma)
+
+It isolates how the TARGET model's architecture + workload shape SD
+speedup, independent of the draft algorithm's acceptance rate.  Two ways to
+obtain it here:
+
+  * ``measure``   — wall-clock the target's extend() for T=1 vs T=gamma+1
+                    on the current backend (CPU: qualitative trends only).
+  * ``predict``   — evaluate the analytic TPU-v5e simulator / fitted perf
+                    model (core/simulator.py, core/perf_model.py) — the
+                    quantitative path used in benchmarks.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+def measure_extend_time(model: Model, params, cache, n_tokens: int,
+                        iters: int = 5, warmup: int = 2) -> float:
+    """Median wall-clock seconds of one extend() of ``n_tokens``/sequence.
+
+    Runs against a copy of the cache (never commits), so repeated calls see
+    identical state."""
+    B = cache["lengths"].shape[0]
+    tokens = jnp.zeros((B, n_tokens), jnp.int32)
+    fn = jax.jit(lambda p, t, c: model.extend(p, t, c)[0])
+    times = []
+    for i in range(warmup + iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(params, tokens, cache))
+        if i >= warmup:
+            times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def measure_target_efficiency(model: Model, params, cache, gamma: int,
+                              iters: int = 5) -> dict:
+    t1 = measure_extend_time(model, params, cache, 1, iters)
+    tg = measure_extend_time(model, params, cache, gamma + 1, iters)
+    return {"T_T_1": t1, "T_T_gamma": tg, "target_efficiency": t1 / tg}
+
+
+def predicted_target_efficiency(sim, arch_cfg, batch: int, gamma: int) -> dict:
+    """Analytic target efficiency from the v5e simulator (core/simulator.py)."""
+    t1 = sim.forward_time(arch_cfg, batch, 1)
+    tg = sim.forward_time(arch_cfg, batch, gamma + 1)
+    return {"T_T_1": t1, "T_T_gamma": tg, "target_efficiency": t1 / tg}

@@ -1,0 +1,180 @@
+"""Expert-parallel MoE dispatch via shard_map (the §Perf optimization).
+
+The baseline one-hot dispatch (models/moe.py) runs EVERY token through
+EVERY expert — E/K-fold redundant compute (usefulness ≈ K/E in the
+roofline table) that GSPMD cannot eliminate.  This module replaces it with
+explicit expert parallelism:
+
+  * expert weights are sharded over the "model" axis (E/m experts/shard),
+  * activations arrive batch-sharded over data and replicated over model,
+  * each model shard bins ONLY tokens routed to its local experts
+    (capacity bins, paper's balanced-routing assumption), runs the local
+    expert FFN, scatters partial outputs, and one psum over "model"
+    combines expert contributions.
+
+Per-layer collective cost: one (N, d) all-reduce over the model axis —
+instead of E/K-fold FLOPs.  Dense compute per shard: N*K/m tokens worth of
+expert FFN (capacity-padded).
+
+Used with Model(..., moe_dispatch="ep"); requires constraints.set_mesh().
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.constraints import get_mesh
+
+
+def _act(x, activation):
+    return jax.nn.gelu(x, approximate=True) if activation == "gelu" else jax.nn.silu(x)
+
+
+def _local_moe(x, router_w, w_gate, w_up, w_down, *, top_k: int,
+               num_experts: int, capacity: int, activation: str,
+               model_axis: str):
+    """Runs inside shard_map.  x: (N, d) local tokens (replicated over the
+    model axis); w_*: (E_local, d, f) this shard's experts."""
+    e_local = w_gate.shape[0]
+    m_idx = jax.lax.axis_index(model_axis)
+    first = m_idx * e_local                               # global id of expert 0
+
+    logits = x.astype(jnp.float32) @ router_w             # (N, E) full router
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, indices = jax.lax.top_k(probs, top_k)        # (N, K) global ids
+    weights = (weights / jnp.sum(weights, -1, keepdims=True)).astype(x.dtype)
+
+    # keep only (token, k) pairs routed to experts owned by this shard
+    local = (indices >= first) & (indices < first + e_local)
+    lidx = jnp.where(local, indices - first, e_local)     # e_local = drop bin
+    flat_e = lidx.reshape(-1)                             # (N*K,)
+    onehot = jax.nn.one_hot(flat_e, e_local + 1, dtype=jnp.int32)
+    rank = (jnp.cumsum(onehot, axis=0) - onehot)
+    slot = jnp.sum(rank * onehot, -1)
+    kept = local.reshape(-1) & (slot < capacity)
+    slot = jnp.where(kept, slot, capacity - 1)
+    tok = jnp.repeat(jnp.arange(x.shape[0]), top_k)
+    bins = jnp.zeros((e_local, capacity, x.shape[1]), x.dtype)
+    bins = bins.at[jnp.where(kept, flat_e, 0), slot].add(
+        jnp.where(kept[:, None], x[tok], 0))
+
+    h = _act(jnp.einsum("ecd,edf->ecf", bins, w_gate), activation) \
+        * jnp.einsum("ecd,edf->ecf", bins, w_up)
+    y_bins = jnp.einsum("ecf,efd->ecd", h, w_down)        # (E_local, C, d)
+
+    gathered = y_bins[jnp.where(kept, flat_e, 0), slot]
+    gathered = jnp.where(kept[:, None], gathered, 0)
+    wk = (weights.reshape(-1) * kept).astype(y_bins.dtype)
+    partial_out = jnp.zeros_like(x).at[tok].add(gathered * wk[:, None])
+    # combine expert contributions across model shards
+    return jax.lax.psum(partial_out, model_axis)
+
+
+def _local_moe_a2a(x, router_w, w_gate, w_up, w_down, *, top_k: int,
+                   num_experts: int, capacity: int, activation: str,
+                   model_axis: str, m_shards: int):
+    """Two-hop all-to-all EP (DeepSpeed-MoE style), for the FSDP layout
+    where tokens are sharded over the model axis too: each tile routes its
+    own disjoint tokens, EXCHANGES them with the shards owning the chosen
+    experts (all-to-all), computes locally, and exchanges back.  No psum —
+    each (token, k) pair is computed exactly once.
+
+    x: (N_loc, d) tokens of this tile; w_*: (e_local, d, f)."""
+    N, d = x.shape
+    e_local = w_gate.shape[0]
+    E = num_experts
+    logits = x.astype(jnp.float32) @ router_w
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, indices = jax.lax.top_k(probs, top_k)
+    weights = (weights / jnp.sum(weights, -1, keepdims=True)).astype(x.dtype)
+
+    flat_e = indices.reshape(-1)                          # (N*K,) global ids
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    slot = jnp.sum((jnp.cumsum(onehot, 0) - onehot) * onehot, -1)
+    kept = slot < capacity
+    slot = jnp.where(kept, slot, capacity - 1)
+    tok = jnp.repeat(jnp.arange(N), top_k)
+    send = jnp.zeros((E, capacity, d), x.dtype)
+    send = send.at[jnp.where(kept, flat_e, 0), slot].add(
+        jnp.where(kept[:, None], x[tok], 0))
+    send = send.reshape(m_shards, e_local, capacity, d)
+
+    recv = jax.lax.all_to_all(send, model_axis, split_axis=0, concat_axis=0)
+    # recv[j] = tokens from shard j destined to MY experts
+    xin = recv.transpose(1, 0, 2, 3).reshape(e_local, m_shards * capacity, d)
+    h = _act(jnp.einsum("ecd,edf->ecf", xin, w_gate), activation) \
+        * jnp.einsum("ecd,edf->ecf", xin, w_up)
+    y = jnp.einsum("ecf,efd->ecd", h, w_down)
+    y = y.reshape(e_local, m_shards, capacity, d).transpose(1, 0, 2, 3)
+    back = jax.lax.all_to_all(y, model_axis, split_axis=0, concat_axis=0)
+    back = back.reshape(E, capacity, d)
+
+    gathered = back[jnp.where(kept, flat_e, 0), slot]
+    gathered = jnp.where(kept[:, None], gathered, 0)
+    wk = (weights.reshape(-1) * kept).astype(gathered.dtype)
+    return jnp.zeros_like(x).at[tok].add(gathered * wk[:, None])
+
+
+def moe_ep_forward(params: dict, cfg, x: jnp.ndarray, *,
+                   capacity_factor: float = 2.0):
+    """(B, T, d) → (B, T, d) expert-parallel MoE FFN.  Falls back to the
+    dense one-hot path when no mesh is active (single-device tests)."""
+    mesh = get_mesh()
+    if mesh is None or "model" not in mesh.axis_names \
+            or cfg.num_experts % mesh.shape["model"] != 0:
+        from repro.models import moe as moe_mod
+        return moe_mod.moe_forward(params, cfg, x, dispatch="onehot")[0]
+
+    import math
+    from repro.distributed.constraints import get_layout
+    B, T, d = x.shape
+    layout = get_layout()
+    if layout == "fsdp":
+        token_axes = tuple(mesh.axis_names)
+    else:
+        token_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    d_size = math.prod(mesh.shape[a] for a in token_axes) if token_axes else 1
+    if (B * T) % max(d_size, 1) != 0:
+        token_axes = ()
+        d_size = 1
+        layout = "tp"
+    n_local = B * T // d_size
+    # capacity: 128-lane tiles when the workload is large (MXU efficiency),
+    # 8-row sublane granularity when tiny — a 128 floor makes EP pad MORE
+    # work than one-hot's E/K redundancy at decode scale (§Perf A-iterations)
+    want = -(-int(n_local * cfg.num_experts_per_tok * capacity_factor)
+             // cfg.num_experts)
+    align = 128 if want >= 128 else 8
+    capacity = max(align, -(-want // align) * align)
+
+    xf = x.reshape(B * T, d)
+    in_specs = (P(token_axes or None, None),              # tokens
+                P(),                                      # router (replicated)
+                P("model", None, None), P("model", None, None),
+                P("model", None, None))
+    out_specs = P(token_axes or None, None)
+    if layout == "fsdp":
+        # tokens sharded over "model" too → two-hop all-to-all EP
+        local_fn = partial(_local_moe_a2a, top_k=cfg.num_experts_per_tok,
+                           num_experts=cfg.num_experts, capacity=capacity,
+                           activation=cfg.mlp_activation, model_axis="model",
+                           m_shards=mesh.shape["model"])
+    else:
+        # tokens replicated over "model" → local-select EP + psum combine
+        local_fn = partial(_local_moe, top_k=cfg.num_experts_per_tok,
+                           num_experts=cfg.num_experts, capacity=capacity,
+                           activation=cfg.mlp_activation, model_axis="model")
+    fn = shard_map(
+        local_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=False)
+    y = fn(xf, params["router"], params["w_gate"], params["w_up"],
+           params["w_down"])
+    if "shared" in params:
+        s = params["shared"]
+        y = y + (_act(xf @ s["w_gate"], cfg.mlp_activation)
+                 * (xf @ s["w_up"])) @ s["w_down"]
+    return y.reshape(B, T, d)

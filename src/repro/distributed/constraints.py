@@ -1,0 +1,62 @@
+"""Activation sharding constraints (MaxText-style logical annotations).
+
+GSPMD propagates shardings from inputs, but at contraction points with
+FSDP-sharded weights it can resolve conflicts by replicating activations
+(observed: the loss head replicated (B, chunk, vocab) logits because the
+embedding table's d-dim carried the 'data' axis).  Explicit constraints at
+a few strategic points pin the batch axis to ("pod","data") and let the
+partitioner all-gather weights instead.
+
+The module is a process-global switch so model code stays mesh-agnostic:
+launch code calls ``set_mesh(mesh)``; tests/single-device runs leave it
+unset and ``constrain`` is a no-op.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: Optional[Mesh] = None
+_LAYOUT: str = "tp"
+
+
+def set_mesh(mesh: Optional[Mesh], layout: str = "tp"):
+    global _MESH, _LAYOUT
+    _MESH = mesh
+    _LAYOUT = layout
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+def get_layout() -> str:
+    return _LAYOUT
+
+
+def _data_axes(mesh):
+    if _LAYOUT == "fsdp":
+        return tuple(mesh.axis_names) or None
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data")) or None
+
+
+def constrain(x, kind: str):
+    """kind: 'hidden' (batch-major activation) | 'logits' (vocab-last)."""
+    mesh = _MESH
+    if mesh is None:
+        return x
+    d_axes = _data_axes(mesh)
+    import math
+    d_size = math.prod(mesh.shape[a] for a in (d_axes or ()))
+    if x.shape[0] % max(d_size, 1) != 0:
+        d_axes = None
+    if kind == "logits":
+        m_size = mesh.shape.get("model", 1)
+        vocab_axis = ("model" if _LAYOUT == "tp" and x.shape[-1] % m_size == 0
+                      else None)
+        spec = P(d_axes, *([None] * (x.ndim - 2)), vocab_axis)
+    else:
+        spec = P(d_axes, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,133 @@
+"""Decode / SD-verify attention Pallas TPU kernel.
+
+The paper's verification step attends T = gamma+1 fresh query tokens against
+a long KV cache at per-sequence offsets ``lengths`` — this kernel is that
+hot spot.  Compared to prefill flash attention:
+
+  * T is tiny (1..8): one q block covers all queries; the q tile is padded
+    to the 8-row TPU sublane minimum.
+  * masking is ``k_pos <= length + t`` (per sequence, per query row), not a
+    static triangle,
+  * grid (B, Hkv, S/bk) — KV innermost, online softmax in VMEM scratch; the
+    g = Hq/Hkv query heads of a KV head are folded into the q-tile rows
+    (rows = g * T_pad), so GQA costs no extra KV traffic.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    len_ref,                   # scalar prefetch: (B,) lengths
+    q_ref, k_ref, v_ref, o_ref,
+    m_ref, l_ref, acc_ref,
+    *,
+    bk: int, nk: int, t_pad: int, t_real: int, scale: float, logit_cap: float,
+):
+    b, ik = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    rows = q_ref.shape[2]                                  # g * t_pad
+    # query position per row: length + (row % t_pad), capped by t_real
+    row_t = jax.lax.broadcasted_iota(jnp.int32, (rows, bk), 0) % t_pad
+    q_pos = length + row_t
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (rows, bk), 1)
+    valid = (k_pos <= q_pos) & (row_t < t_real)
+
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)                # (rows, d)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        if logit_cap > 0:
+            s = jnp.tanh(s / logit_cap) * logit_cap
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    # skip KV blocks entirely beyond the newest query position
+    pl.when(ik * bk <= length + t_real - 1)(_step)
+
+    @pl.when(ik == nk - 1)
+    def _emit():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "logit_cap", "bk", "interpret"))
+def decode_attention_bhtd(
+    q: jnp.ndarray,            # (B, Hq, T, D), T = gamma+1 fresh queries
+    k: jnp.ndarray,            # (B, Hkv, S, D) cache INCLUDING fresh writes
+    v: jnp.ndarray,
+    lengths: jnp.ndarray,      # (B,) committed lengths (queries at length+t)
+    *,
+    scale: float = 0.0,
+    logit_cap: float = 0.0,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, Hq, T, D = q.shape
+    _, Hkv, S, _ = k.shape
+    g = Hq // Hkv
+    if scale == 0.0:
+        scale = 1.0 / math.sqrt(D)
+    t_pad = max(8 // max(g, 1), T)                          # sublane alignment
+    rows = g * t_pad
+    # fold (g, T) query heads/steps into rows of one tile
+    qf = q.reshape(B, Hkv, g, T, D)
+    qf = jnp.pad(qf, ((0, 0), (0, 0), (0, 0), (0, t_pad - T), (0, 0)))
+    qf = qf.reshape(B, Hkv, rows, D)
+    bk = min(bk, S)
+    pad = (-S) % bk
+    if pad:  # pad the KV length; padded slots sit beyond every query position
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nk = S // bk
+    kernel = functools.partial(
+        _decode_kernel, bk=bk, nk=nk, t_pad=t_pad, t_real=T,
+        scale=scale, logit_cap=logit_cap)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, Hkv, nk),
+            in_specs=[
+                pl.BlockSpec((1, 1, rows, D), lambda b, h, j, lens: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, bk, D), lambda b, h, j, lens: (b, h, j, 0)),
+                pl.BlockSpec((1, 1, bk, D), lambda b, h, j, lens: (b, h, j, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, rows, D), lambda b, h, j, lens: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((rows, 1), jnp.float32),
+                pltpu.VMEM((rows, 1), jnp.float32),
+                pltpu.VMEM((rows, D), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, rows, D), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qf, k, v)
+    out = out.reshape(B, Hkv, g, t_pad, D)[:, :, :, :T]
+    return out.reshape(B, Hq, T, D)

@@ -1,0 +1,25 @@
+"""Public jit wrapper, (B, T, H, D) layout."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.decode_attention import decode_attention_bhtd
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def decode_attention(
+    q: jnp.ndarray,            # (B, T, Hq, D)
+    k: jnp.ndarray,            # (B, S, Hkv, D)
+    v: jnp.ndarray,
+    lengths: jnp.ndarray,      # (B,)
+    *,
+    scale: float = 0.0,
+    logit_cap: float = 0.0,
+    interpret: bool = INTERPRET,
+) -> jnp.ndarray:
+    out = decode_attention_bhtd(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        lengths, scale=scale, logit_cap=logit_cap, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for decode/verify attention."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,            # (B, Hq, T, D)
+    k: jnp.ndarray,            # (B, Hkv, S, D)
+    v: jnp.ndarray,
+    lengths: jnp.ndarray,      # (B,)
+    *,
+    scale: float = 0.0,
+    logit_cap: float = 0.0,
+) -> jnp.ndarray:
+    B, Hq, T, D = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    if scale == 0.0:
+        scale = 1.0 / math.sqrt(D)
+    k = jnp.repeat(k, g, axis=1)
+    v = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if logit_cap > 0:
+        s = jnp.tanh(s / logit_cap) * logit_cap
+    q_pos = lengths[:, None, None, None] + jnp.arange(T)[None, None, :, None]
+    k_pos = jnp.arange(S)[None, None, None, :]
+    s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhts,bhsd->bhtd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

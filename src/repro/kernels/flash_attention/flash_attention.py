@@ -1,0 +1,127 @@
+"""Causal (optionally sliding-window) flash attention, Pallas TPU.
+
+Online-softmax tiling: grid (B, Hq, Tq/bq, S/bk), KV innermost.  Running
+max / sum / accumulator live in VMEM scratch across the KV dimension,
+initialized at k==0 and written out at the last *visited* KV block.  GQA is
+handled in the index map — the K/V block index is ``h // group`` — so K/V
+are never repeated in memory.
+
+VMEM budget per step (bq=bk=128, d=256, bf16 in / f32 acc):
+  q 64 KiB + k 64 KiB + v 64 KiB + acc 128 KiB + m/l 1 KiB  ≈ 0.3 MiB ≪ 16 MiB.
+Block shapes are MXU-aligned (128 lanes); the two matmuls per step hit the
+systolic array at full tile occupancy.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref,       # blocks
+    m_ref, l_ref, acc_ref,            # VMEM scratch
+    *,
+    bq: int, bk: int, nk: int,
+    scale: float, causal: bool, window: int, logit_cap: float,
+):
+    iq, ik = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)               # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)               # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bk)
+        if logit_cap > 0:
+            s = jnp.tanh(s / logit_cap) * logit_cap
+        if causal:
+            mask = k_pos <= q_pos
+            if window > 0:
+                mask &= k_pos > q_pos - window
+            s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        m_ref[...] = m_new
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    if causal:
+        # whole-block visibility test (cheap skip of fully-masked blocks)
+        needed = (ik * bk) <= (iq * bq + bq - 1)
+        if window > 0:
+            needed = jnp.logical_and(needed, (ik * bk + bk - 1) > (iq * bq - window))
+        pl.when(needed)(_step)
+    else:
+        _step()
+
+    @pl.when(ik == nk - 1)
+    def _emit():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "logit_cap", "bq", "bk", "interpret"),
+)
+def flash_attention_bhtd(
+    q: jnp.ndarray,            # (B, Hq, T, D)
+    k: jnp.ndarray,            # (B, Hkv, S, D)
+    v: jnp.ndarray,            # (B, Hkv, S, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: float = 0.0,
+    logit_cap: float = 0.0,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, Hq, T, D = q.shape
+    _, Hkv, S, _ = k.shape
+    g = Hq // Hkv
+    if scale == 0.0:
+        scale = 1.0 / math.sqrt(D)
+    bq, bk = min(bq, T), min(bk, S)
+    assert T % bq == 0 and S % bk == 0, (T, S, bq, bk)
+    nq, nk = T // bq, S // bk
+    grid = (B, Hq, nq, nk)
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, nk=nk, scale=scale,
+        causal=causal, window=window, logit_cap=logit_cap)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, T, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,27 @@
+"""Public jit wrapper: (B, T, H, D) layout used by the model code."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_bhtd
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def flash_attention(
+    q: jnp.ndarray,            # (B, T, Hq, D)
+    k: jnp.ndarray,            # (B, S, Hkv, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: float = 0.0,
+    logit_cap: float = 0.0,
+    interpret: bool = INTERPRET,
+) -> jnp.ndarray:
+    out = flash_attention_bhtd(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+        causal=causal, window=window, scale=scale, logit_cap=logit_cap,
+        interpret=interpret)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for the gmm kernel and the capacity dispatch around it."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def gmm_capacity_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """(E, C, D) @ (E, D, F) → (E, C, F), plain einsum in f32 accumulation."""
+    out = jnp.einsum(
+        "ecd,edf->ecf", x.astype(jnp.float32), w.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def dispatch_ref(
+    x: jnp.ndarray,            # (N, D) tokens
+    indices: jnp.ndarray,      # (N, K) expert ids
+    num_experts: int,
+    capacity: int,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Capacity-binned dispatch.
+
+    Returns (bins (E, C, D), slot (N, K) position inside the bin or -1 if
+    dropped, kept (N, K) bool).  Position = rank of the (token, k) pair
+    among all pairs routed to that expert, in flat (n*K + k) order.
+    """
+    N, K = indices.shape
+    flat = indices.reshape(-1)                                  # (N*K,)
+    onehot = jax.nn.one_hot(flat, num_experts, dtype=jnp.int32)  # (NK, E)
+    rank = jnp.cumsum(onehot, axis=0) - onehot                  # rank within expert
+    slot = jnp.sum(rank * onehot, axis=-1)                      # (NK,)
+    kept = slot < capacity
+    slot = jnp.where(kept, slot, -1)
+    bins = jnp.zeros((num_experts, capacity, x.shape[-1]), x.dtype)
+    tok = jnp.repeat(jnp.arange(N), K)
+    bins = bins.at[flat, jnp.where(kept, slot, capacity - 1)].add(
+        jnp.where(kept[:, None], x[tok], 0).astype(x.dtype)
+    )
+    return bins, slot.reshape(N, K), kept.reshape(N, K)
+
+
+def combine_ref(
+    y_bins: jnp.ndarray,       # (E, C, F) expert outputs
+    indices: jnp.ndarray,      # (N, K)
+    weights: jnp.ndarray,      # (N, K)
+    slot: jnp.ndarray,         # (N, K)
+    kept: jnp.ndarray,         # (N, K)
+) -> jnp.ndarray:              # (N, F)
+    N, K = indices.shape
+    gathered = y_bins[indices.reshape(-1), jnp.maximum(slot.reshape(-1), 0)]
+    gathered = jnp.where(kept.reshape(-1)[:, None], gathered, 0)
+    w = (weights * kept).reshape(-1)[:, None].astype(gathered.dtype)
+    return jnp.sum((gathered * w).reshape(N, K, -1), axis=1)
+
+
+def moe_ffn_ref(x, w_gate, w_up, w_down, weights, indices, activation="silu"):
+    """Reference for the whole capacity-free MoE FFN: exact one-hot combine
+    (no drops) — the ground truth the capacity path approaches as the
+    capacity factor grows."""
+    E = w_gate.shape[0]
+    act = jax.nn.gelu if activation == "gelu" else jax.nn.silu
+    combine = jnp.einsum(
+        "nk,nke->ne", weights, jax.nn.one_hot(indices, E, dtype=weights.dtype))
+    h = act(jnp.einsum("nd,edf->enf", x, w_gate)) * jnp.einsum("nd,edf->enf", x, w_up)
+    y = jnp.einsum("enf,efd->end", h, w_down)
+    return jnp.einsum("end,ne->nd", y, combine.astype(y.dtype))

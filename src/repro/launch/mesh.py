@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+Single pod: 16x16 = 256 v5e chips, axes ("data", "model").
+Multi-pod:  2x16x16 = 512 chips, axes ("pod", "data", "model") — "pod"
+carries data parallelism across the pod boundary (DCN-ish links), so only
+gradient/all-reduce traffic crosses pods; "model" stays intra-pod.
+
+A FUNCTION, not a module constant: importing this module must never touch
+jax device state (device count is locked at first backend init; see
+launch/dryrun.py which force-creates 512 host devices *before* any import).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CPU integration tests (requires >= prod(shape) devices,
+    e.g. via XLA_FLAGS=--xla_force_host_platform_device_count=4)."""
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple:
+    """The batch-parallel axes of a mesh: ("pod","data") or ("data",)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis_size(mesh) -> int:
+    return mesh.shape["model"]
+
+
+def data_axis_size(mesh) -> int:
+    import math
+    return math.prod(mesh.shape[a] for a in data_axes(mesh))

@@ -1,0 +1,182 @@
+"""Roofline analysis over dry-run results (EXPERIMENTS.md §Roofline).
+
+Reads the dry-run JSONL and derives, per (arch × shape × mesh):
+
+    compute term    = HLO_FLOPs_per_device / (peak_FLOP/s)
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+
+(cost_analysis is per-device post-SPMD, verified empirically, so the
+"/chips" in the spec formula is already applied), plus
+
+    MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) for train,
+                  2·N(_active)·D for inference forwards,
+    usefulness  = MODEL_FLOPS / (HLO_FLOPs_per_device × devices)
+
+which exposes remat recompute and redundant-dispatch waste (ratio < 1).
+
+    PYTHONPATH=src python -m repro.launch.roofline results/sweep_sp_*.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import sys
+
+PEAK_FLOPS = 197e12          # bf16, per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+
+def model_flops(rec: dict) -> float:
+    """Useful model FLOPs for the whole step (global, not per-device)."""
+    from repro.configs.base import INPUT_SHAPES
+    shape = INPUT_SHAPES[rec["shape"]]
+    n_active = rec["active_params"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch * (1 + rec.get("gamma", 0))
+    return 2.0 * n_active * tokens
+
+
+def per_device_costs(rec: dict):
+    """(flops, bytes, collective_bytes) per device.
+
+    XLA's cost_analysis counts a while/scan body ONCE (verified
+    empirically in tests/test_roofline.py), and our stacks nest scans
+    (layers, loss chunks, SSM time steps), so raw HLO FLOPs/bytes are
+    deflated by data-dependent factors.  We therefore derive the compute
+    and memory numerators ANALYTICALLY from the architecture (the same
+    census the v5e simulator prices, validated against HLO on scan-free
+    lowers), divide by device count, and take the COLLECTIVE census from
+    the partitioned HLO (x trip count, since collectives sit inside the
+    layer-stack scan body)."""
+    from repro.configs.base import INPUT_SHAPES
+    from repro.configs.registry import get_config
+    from repro.core.simulator import Simulator
+    from repro.launch.specs import arch_for_shape
+    shape = INPUT_SHAPES[rec["shape"]]
+    cfg = arch_for_shape(rec["arch"], shape, rec.get("gamma", 0))
+    n_dev = rec["devices"]
+    sim = Simulator()
+    if shape.kind == "train":
+        costs = sim.forward_costs(cfg, shape.global_batch, shape.seq_len,
+                                  context_len=shape.seq_len, train=True)
+    elif shape.kind == "prefill":
+        costs = sim.forward_costs(cfg, shape.global_batch, shape.seq_len,
+                                  context_len=shape.seq_len)
+    else:
+        costs = sim.forward_costs(cfg, shape.global_batch,
+                                  1 + rec.get("gamma", 0),
+                                  context_len=shape.seq_len)
+    P = cfg.num_periods
+    coll = rec["collective_bytes_per_device"]
+    if "in_loop" in coll:
+        c = coll["in_loop"] * P + coll["outside"]
+    else:  # legacy record without loop attribution: conservative x P
+        c = coll["total"] * P
+    return costs["flops"] / n_dev, costs["bytes"] / n_dev, c, P
+
+
+def next_move(rec: dict, dominant: str, usefulness: float) -> str:
+    """One sentence per (arch, shape): what would move the dominant term
+    down (the §Roofline deliverable).  Grounded in the measured §Perf
+    iterations, not generic advice."""
+    from repro.configs.base import INPUT_SHAPES
+    from repro.configs.registry import get_config
+    shape = INPUT_SHAPES[rec["shape"]]
+    try:
+        cfg = get_config(rec["arch"])
+    except KeyError:
+        return ""
+    is_moe = cfg.num_experts > 0
+    if dominant == "collective":
+        if shape.kind == "train" and is_moe:
+            return ("--moe-dispatch ep --layout fsdp: a2a expert dispatch + "
+                    "no-TP layout (measured -90% on jamba)")
+        if shape.kind == "train":
+            return ("--layout fsdp removes per-layer TP activation "
+                    "all-reduces (measured -91% gemma3, -95% xlstm)")
+        return ("decode/prefill collectives are cache-update resharding: "
+                "align kv_mode with the head/seq split")
+    if dominant == "memory":
+        if shape.kind == "decode":
+            return ("this is the paper's opportunity: SD verify rides the "
+                    "same reads (gamma+1 tokens, +<3% t_mem); beyond that, "
+                    "int8 weights / KV quantization")
+        return "recompute less (remat policy) or raise arithmetic intensity"
+    # compute-dominant
+    if usefulness < 0.6 and is_moe:
+        return "--moe-dispatch ep removes the E/K one-hot redundancy"
+    return (f"at {usefulness:.0%} of useful-FLOP roofline: raise per-chip "
+            "batch or trim remat recompute")
+
+
+def analyze(rec: dict) -> dict:
+    n_dev = rec["devices"]
+    f, b, c, P = per_device_costs(rec)
+    t_compute = f / PEAK_FLOPS
+    t_memory = b / HBM_BW
+    coll = rec["collective_bytes_per_device"]
+    t_coll = c / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    useful = mf / max(f * n_dev, 1.0)
+    bound = max(terms.values())
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": mf, "usefulness": useful,
+        "scan_trip_count": P,
+        "hlo_flops_per_device_raw": rec["flops_per_device"],
+        "roofline_bound_s": bound,
+        # XLA CPU memory analysis: peak ≈ argument residency (params, opt
+        # state, caches); temp_bytes is the SUM of temp allocations — an
+        # upper bound on intermediate traffic, not simultaneous residency.
+        # Real TPU HBM peak lies between; both are reported.
+        "peak_bytes_gb": rec["memory"].get("peak_bytes", 0) / 1e9,
+        "temp_sum_gb": rec["memory"]["temp_bytes"] / 1e9,
+        "fits_16gb": rec["memory"].get("peak_bytes", 0) < 16e9,
+        "next_move": next_move(rec, dominant, useful),
+        "collective_breakdown": coll,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="+")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+    recs = []
+    for pat in args.files:
+        for f in glob.glob(pat):
+            with open(f) as fh:
+                for ln in fh:
+                    d = json.loads(ln)
+                    if d.get("status") == "ok":
+                        recs.append(analyze(d))
+    recs.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    if args.csv:
+        print("arch,shape,mesh,t_compute_s,t_memory_s,t_collective_s,"
+              "dominant,usefulness,peak_gb,temp_sum_gb,fits_16gb,next_move")
+        for r in recs:
+            print(f"{r['arch']},{r['shape']},{r['mesh']},"
+                  f"{r['t_compute_s']:.4g},{r['t_memory_s']:.4g},"
+                  f"{r['t_collective_s']:.4g},{r['dominant']},"
+                  f"{r['usefulness']:.3f},{r['peak_bytes_gb']:.2f},"
+                  f"{r['temp_sum_gb']:.2f},{r['fits_16gb']},"
+                  f"\"{r['next_move']}\"")
+    else:
+        for r in recs:
+            print(json.dumps(r))
+
+
+if __name__ == "__main__":
+    main()

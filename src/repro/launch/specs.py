@@ -1,0 +1,81 @@
+"""Shape/variant resolution + abstract input specs (shared by the dry-run
+and the roofline analyzer; no jax device-count side effects here)."""
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, ModelConfig, ShapeConfig
+from repro.configs.registry import get_config
+from repro.models.model import Model
+
+SWA_VARIANT_WINDOW = 4096
+
+
+def arch_for_shape(arch: str, shape: ShapeConfig, gamma: int = 0) -> ModelConfig:
+    """Resolve the config actually lowered for a shape.
+
+    long_500k on architectures without native sub-quadratic decode gets the
+    documented SWA-4096 variant (DESIGN.md §5): every full-attention block
+    kind ("attn"/"mla") becomes "swa".  MLA→SWA also switches the attention
+    parameterization — an explicit, recorded deviation."""
+    cfg = get_config(arch)
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        pattern = tuple("swa" if k in ("attn", "mla") else k
+                        for k in cfg.layer_pattern)
+        cfg = cfg.with_overrides(
+            name=f"{cfg.name}+swa{SWA_VARIANT_WINDOW}",
+            layer_pattern=pattern, sliding_window=SWA_VARIANT_WINDOW)
+    if cfg.is_encoder_decoder and shape.kind == "decode":
+        pattern = tuple("swa" if (shape.name == "long_500k" and k == "attn") else k
+                        for k in cfg.layer_pattern)
+        if shape.name == "long_500k":
+            cfg = cfg.with_overrides(
+                name=f"{cfg.name}+swa{SWA_VARIANT_WINDOW}",
+                layer_pattern=pattern, sliding_window=SWA_VARIANT_WINDOW)
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct input builders (never allocate)
+# ---------------------------------------------------------------------------
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, model: Model,
+                gamma: int = 0) -> dict:
+    """Abstract inputs for the step function of a shape.kind."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = {"tokens": sds((B, S), jnp.int32),
+                 "labels": sds((B, S), jnp.int32),
+                 "mask": sds((B, S), jnp.float32)}
+        if cfg.is_encoder_decoder:
+            batch["encoder_embeds"] = sds((B, cfg.encoder_seq_len, cfg.d_model),
+                                          jnp.dtype(cfg.dtype))
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        out = {"tokens": sds((B, S), jnp.int32),
+               "cache": jax.eval_shape(lambda: model.init_cache(B, S)),
+               "lengths": sds((B,), jnp.int32)}
+        if cfg.is_encoder_decoder:
+            out["encoder_embeds"] = sds((B, cfg.encoder_seq_len, cfg.d_model),
+                                        jnp.dtype(cfg.dtype))
+        return out
+    # decode: ONE new token (or gamma+1 verify) against a seq_len cache
+    cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    if cfg.is_encoder_decoder:
+        # cross-attn K/V computed at prefill time: (P, B, S_enc, Hkv, hd)
+        dt = jnp.dtype(cfg.dtype)
+        kv = sds((cfg.num_periods, B, cfg.encoder_seq_len,
+                  cfg.num_kv_heads, cfg.head_dim), dt)
+        cache = dict(cache, cross=[{"k": kv, "v": kv}
+                                   for _ in range(cfg.period)])
+    if gamma > 0:
+        return {"tokens": sds((B, gamma + 1), jnp.int32),
+                "n_commit": sds((B,), jnp.int32), "cache": cache}
+    return {"token": sds((B,), jnp.int32), "cache": cache}
+
+

@@ -1,0 +1,84 @@
+"""Training launcher.
+
+Reduced configs run for real on this host; full configs are for the
+dry-run (use launch/dryrun.py).  On a real multi-host TPU deployment this
+same file runs under `python -m repro.launch.train --arch ... --mesh prod`
+after jax.distributed.initialize() — the step function and shardings are
+identical to the dry-run's.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-7b --reduced \
+      --steps 50 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import get_config
+from repro.data.pipeline import packed_batches
+from repro.models.model import Model
+from repro.training.checkpoint import save_checkpoint
+from repro.training.train_loop import init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--kind", default="code", choices=["code", "chat"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    tcfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
+                       warmup_steps=max(args.steps // 10, 1), seed=args.seed)
+    model = Model(cfg, remat=True)
+    params, opt = init_train_state(model, jax.random.PRNGKey(args.seed))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"batch={args.batch}x{args.seq}")
+
+    step_fn = jax.jit(make_train_step(model, tcfg), donate_argnums=(0, 1))
+    it = packed_batches(cfg.vocab_size, args.batch, args.seq, kind=args.kind,
+                        seed=args.seed)
+
+    def make_batch():
+        b = next(it)
+        out = {k: jnp.asarray(v) for k, v in b.items()}
+        if cfg.is_encoder_decoder:
+            out["encoder_embeds"] = jax.random.normal(
+                jax.random.PRNGKey(0),
+                (args.batch, cfg.encoder_seq_len, cfg.d_model),
+                jnp.dtype(cfg.dtype)) * 0.02
+        return out
+
+    t0 = time.perf_counter()
+    for step in range(1, args.steps + 1):
+        params, opt, metrics = step_fn(params, opt, make_batch())
+        if step % args.log_every == 0 or step == 1:
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            print(f"step {step:5d}  loss {float(metrics['loss']):.4f}  "
+                  f"aux {float(metrics['aux_loss']):.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}  "
+                  f"lr {float(metrics['lr']):.2e}  {dt:.1f}s")
+    if args.ckpt_dir:
+        path = save_checkpoint(args.ckpt_dir, args.steps,
+                               {"params": params, "opt": opt},
+                               {"arch": cfg.name})
+        print("saved", path)
+
+
+if __name__ == "__main__":
+    main()

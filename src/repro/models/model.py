@@ -1,0 +1,307 @@
+"""Unified model: embedding → (optional encoder) → decoder stack → head.
+
+API (all pure functions of params):
+
+    model = Model(cfg)
+    params = model.init(key)
+    logits, metrics = model.forward_train(params, tokens)
+    cache  = model.init_cache(batch, max_seq)
+    logits, cache = model.prefill(params, tokens, cache, lengths=...)
+    logits, pend  = model.extend(params, tokens, cache, collect=True)
+    cache  = model.commit(pend, n_commit)
+
+Cache layout::
+
+    {"layers": [slot_0, ...], "lengths": (B,) int32,
+     "cross": [slot_i ...] | None}
+
+``extend`` consumes T tokens per sequence at offsets ``lengths`` — T=1 is
+plain autoregressive decode, T=gamma+1 is a speculative-decoding verify
+pass.  With ``collect=True`` recurrent slots return per-step states
+(leading T axis); ``commit`` gathers the state of the last consumed-and-
+accepted token and bumps ``lengths``.  Attention slots are committed in
+place (stale entries are masked by position, see attention.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.constraints import constrain
+from repro.models import attention as attn_mod
+from repro.models import transformer as tfm
+from repro.models.layers import (
+    apply_norm,
+    embed,
+    init_embedding,
+    init_norm,
+    sinusoidal_positions,
+    unembed,
+)
+from repro.models.transformer import ATTN_KINDS, RECURRENT_KINDS
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def sinusoidal_at(positions: jnp.ndarray, d_model: int) -> jnp.ndarray:
+    """Sinusoidal embedding evaluated at arbitrary positions (B,T) → (B,T,d)."""
+    pos = positions.astype(jnp.float32)[..., None]
+    i = jnp.arange(d_model // 2, dtype=jnp.float32)
+    ang = pos / jnp.power(10_000.0, 2 * i / d_model)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+class Model:
+    """Architecture-agnostic decoder(-encoder) language model."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        *,
+        moe_dispatch: str = "onehot",
+        use_flash: bool = False,
+        remat: bool = False,
+    ):
+        self.cfg = cfg
+        self.moe_dispatch = moe_dispatch
+        self.use_flash = use_flash
+        self.remat = remat
+
+    # ------------------------------------------------------------------ init
+    def init(self, key: jax.Array) -> dict:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        k_emb, k_stack, k_enc, k_head, k_fn = jax.random.split(key, 5)
+        params: Dict[str, Any] = {
+            "embed": init_embedding(k_emb, cfg.vocab_size, cfg.d_model, dt),
+            "final_norm": init_norm(cfg, dt),
+            "layers": tfm.init_stack(k_stack, cfg, dt, cross=cfg.is_encoder_decoder),
+        }
+        if not cfg.tie_embeddings:
+            params["head"] = init_embedding(k_head, cfg.vocab_size, cfg.d_model, dt)
+        if cfg.is_encoder_decoder:
+            enc_cfg = cfg.with_overrides(
+                num_layers=cfg.encoder_layers,
+                layer_pattern=("attn",),
+                moe_pattern=(False,),
+                num_experts=0, num_experts_per_tok=0,
+            )
+            params["encoder"] = {
+                "layers": tfm.init_stack(k_enc, enc_cfg, dt, cross=False),
+                "final_norm": init_norm(enc_cfg, dt),
+            }
+            self._enc_cfg = enc_cfg
+        return params
+
+    @property
+    def enc_cfg(self):
+        cfg = self.cfg
+        return cfg.with_overrides(
+            num_layers=cfg.encoder_layers, layer_pattern=("attn",),
+            moe_pattern=(False,), num_experts=0, num_experts_per_tok=0)
+
+    # ----------------------------------------------------------------- embed
+    def _embed(self, params, tokens, positions, inputs_embeds=None):
+        cfg = self.cfg
+        if inputs_embeds is not None:
+            x = inputs_embeds.astype(_dtype(cfg))
+        else:
+            x = embed(params["embed"], tokens, scale=cfg.name.startswith("gemma"))
+        if cfg.rope_type == "sinusoidal":
+            x = x + sinusoidal_at(positions, cfg.d_model).astype(x.dtype)
+        return constrain(x, "hidden")
+
+    def _head(self, params, x):
+        cfg = self.cfg
+        x = apply_norm(params["final_norm"], x, cfg.norm_eps)
+        table = params["embed"] if cfg.tie_embeddings else params["head"]
+        return constrain(unembed(table, x, cfg.final_logit_softcap), "logits")
+
+    # --------------------------------------------------------------- encoder
+    def encode(self, params, encoder_embeds: jnp.ndarray) -> jnp.ndarray:
+        """Whisper-style encoder over stub frame embeddings (B, S_enc, d)."""
+        cfg = self.enc_cfg
+        B, S, _ = encoder_embeds.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        x = encoder_embeds.astype(_dtype(cfg))
+        x = x + sinusoidal_at(positions, cfg.d_model).astype(x.dtype)
+        x, _, _ = tfm.stack_forward(
+            params["encoder"]["layers"], cfg, x, positions, None,
+            mode="train", causal=False, use_flash=False, remat=self.remat)
+        return apply_norm(params["encoder"]["final_norm"], x, cfg.norm_eps)
+
+    def _cross_kvs(self, params, enc_out):
+        """Project encoder output through every decoder layer's cross-attn."""
+        cfg = self.cfg
+        out = []
+        for i in range(cfg.period):
+            slot = params["layers"][i]["cross"]
+            kv = jax.vmap(
+                lambda p: attn_mod.cross_attn_prefill_cache(p, cfg, enc_out, _dtype(cfg))
+            )(slot)
+            out.append(kv)
+        return out
+
+    # ----------------------------------------------------------------- train
+    def forward_hidden(
+        self,
+        params,
+        tokens: jnp.ndarray,                       # (B, T)
+        *,
+        inputs_embeds: Optional[jnp.ndarray] = None,
+        encoder_embeds: Optional[jnp.ndarray] = None,
+        mrope_positions: Optional[jnp.ndarray] = None,
+    ) -> Tuple[jnp.ndarray, dict]:
+        """Final pre-head hidden states (B, T, d) + MoE metrics.  The head is
+        applied separately (chunked in training) so (B, T, vocab) logits are
+        never materialized for long sequences."""
+        cfg = self.cfg
+        B, T = tokens.shape[:2] if tokens is not None else inputs_embeds.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+        x = self._embed(params, tokens, positions, inputs_embeds)
+        cross_kvs = None
+        if cfg.is_encoder_decoder:
+            enc_out = self.encode(params, encoder_embeds)
+            cross_kvs = self._cross_kvs(params, enc_out)
+        x, _, metrics = tfm.stack_forward(
+            params["layers"], cfg, x, positions, None,
+            mode="train", dispatch=self.moe_dispatch, use_flash=self.use_flash,
+            remat=self.remat, cross_kvs=cross_kvs, mrope_positions=mrope_positions)
+        return x, metrics
+
+    def forward_train(self, params, tokens, **kw) -> Tuple[jnp.ndarray, dict]:
+        x, metrics = self.forward_hidden(params, tokens, **kw)
+        return self._head(params, x), metrics
+
+    # ----------------------------------------------------------------- cache
+    def init_cache(self, batch: int, max_seq: int) -> dict:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        cache: Dict[str, Any] = {
+            "layers": tfm.make_stack_cache(cfg, batch, max_seq, dt),
+            "lengths": jnp.zeros((batch,), jnp.int32),
+        }
+        return cache
+
+    # --------------------------------------------------------------- prefill
+    def prefill(
+        self,
+        params,
+        tokens: jnp.ndarray,                       # (B, T) padded prompts
+        cache: dict,
+        *,
+        lengths: Optional[jnp.ndarray] = None,     # (B,) true prompt lengths
+        inputs_embeds: Optional[jnp.ndarray] = None,
+        encoder_embeds: Optional[jnp.ndarray] = None,
+        mrope_positions: Optional[jnp.ndarray] = None,
+    ) -> Tuple[jnp.ndarray, dict]:
+        """Returns logits at each sequence's last prompt position (B, V)."""
+        cfg = self.cfg
+        B, T = tokens.shape
+        if lengths is None:
+            lengths = jnp.full((B,), T, jnp.int32)
+        positions = jnp.broadcast_to(jnp.arange(T)[None, :], (B, T))
+        x = self._embed(params, tokens, positions, inputs_embeds)
+        cross_kvs = None
+        if cfg.is_encoder_decoder:
+            enc_out = self.encode(params, encoder_embeds)
+            cross_kvs = self._cross_kvs(params, enc_out)
+            cache = dict(cache, cross=cross_kvs)
+        x, new_layers, _ = tfm.stack_forward(
+            params["layers"], cfg, x, positions, cache["layers"],
+            mode="prefill", dispatch=self.moe_dispatch, use_flash=self.use_flash,
+            remat=self.remat, cross_kvs=cross_kvs, mrope_positions=mrope_positions)
+        # head only at each sequence's last prompt position — never (B,T,V)
+        last_h = jnp.take_along_axis(
+            x, (lengths - 1)[:, None, None].astype(jnp.int32), axis=1)
+        last = self._head(params, last_h)[:, 0]
+        new_cache = dict(cache, layers=new_layers,
+                         lengths=lengths.astype(jnp.int32))
+        return last, new_cache
+
+    # ---------------------------------------------------------------- extend
+    def extend(
+        self,
+        params,
+        tokens: jnp.ndarray,                       # (B, T) new tokens
+        cache: dict,
+        *,
+        collect: bool = False,
+    ) -> Tuple[jnp.ndarray, dict]:
+        """Decode/verify T tokens per sequence at offsets ``lengths``.
+
+        NOTE on recurrent prefill semantics: prefill must be called with
+        unpadded (equal-length) prompts for recurrent archs, since states
+        advance strictly sequentially.
+        """
+        cfg = self.cfg
+        B, T = tokens.shape
+        positions = cache["lengths"][:, None] + jnp.arange(T)[None, :]
+        x = self._embed(params, tokens, positions)
+        x, new_layers, _ = tfm.stack_forward(
+            params["layers"], cfg, x, positions, cache["layers"],
+            mode="extend", collect=collect, dispatch=self.moe_dispatch,
+            use_flash=self.use_flash, cross_kvs=cache.get("cross"))
+        logits = self._head(params, x)                           # (B, T, V)
+        pend = dict(cache, layers=new_layers)
+        return logits, pend
+
+    def extend_with_hidden(self, params, tokens, cache, *, collect=False):
+        """extend() variant that also returns the final hidden states
+        (B, T, d) — consumed by EAGLE-style speculation heads
+        (core/eagle.py), which predict the NEXT token's features from the
+        target's current features."""
+        cfg = self.cfg
+        B, T = tokens.shape
+        positions = cache["lengths"][:, None] + jnp.arange(T)[None, :]
+        x = self._embed(params, tokens, positions)
+        x, new_layers, _ = tfm.stack_forward(
+            params["layers"], cfg, x, positions, cache["layers"],
+            mode="extend", collect=collect, dispatch=self.moe_dispatch,
+            use_flash=self.use_flash, cross_kvs=cache.get("cross"))
+        logits = self._head(params, x)
+        return logits, x, dict(cache, layers=new_layers)
+
+    # ---------------------------------------------------------------- commit
+    def commit(self, pend: dict, n_commit: jnp.ndarray, collected: bool = False) -> dict:
+        """Accept ``n_commit`` (B,) tokens of the last extend.
+
+        Attention slots: lengths bump only (stale K/V masked out).
+        Recurrent slots (when ``collected``): gather state index
+        ``n_commit - 1`` per sequence from the (T, B, ...) pending stack.
+        """
+        cfg = self.cfg
+        new_layers = []
+        for i, kind in enumerate(cfg.layer_pattern):
+            slot = pend["layers"][i]
+            if kind in RECURRENT_KINDS and collected:
+                idx = n_commit - 1                                # (B,)
+
+                def gather(a):
+                    # a: (P, T, B, ...) → (P, B, ...) selecting per-seq step
+                    moved = jnp.moveaxis(a, 2, 0)                 # (B, P, T, ...)
+                    sel = jax.vmap(lambda ab, n: ab[:, n])(moved, idx)
+                    return jnp.moveaxis(sel, 0, 1)                # (P, B, ...)
+
+                new_layers.append(jax.tree.map(gather, slot))
+            else:
+                new_layers.append(slot)
+        return dict(pend, layers=new_layers,
+                    lengths=pend["lengths"] + n_commit.astype(jnp.int32))
+
+    # ------------------------------------------------------------ decode 1tk
+    def decode_step(self, params, token: jnp.ndarray, cache: dict):
+        """Plain AR decode of one token per sequence. token: (B,) → (B,V)."""
+        logits, pend = self.extend(params, token[:, None], cache, collect=True)
+        cache = self.commit(pend, jnp.ones_like(cache["lengths"]), collected=True)
+        return logits[:, 0], cache
+
+
+def build_model(cfg: ModelConfig, **kw) -> Model:
+    return Model(cfg, **kw)

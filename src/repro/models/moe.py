@@ -1,0 +1,156 @@
+"""Mixture-of-Experts FFN: top-k router, expert dispatch, load-balance loss.
+
+Two dispatch strategies, one interface:
+
+  * ``onehot``  — dense einsum over a (tokens, experts) one-hot combine
+                  tensor.  GSPMD-friendly: the expert axis shards cleanly over
+                  the ``model`` mesh axis (expert parallelism), XLA turns the
+                  dispatch into all-to-all-ish collectives.  Used for
+                  training, dry-runs and small tests.
+  * ``gmm``     — tokens sorted by expert id, grouped matmul via the Pallas
+                  ``gmm`` kernel (MXU-tiled, megablox-style).  Serving path.
+
+The router also reports which experts were activated — the measurement
+behind the paper's N(t) validation (Fig. 1a/b).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def init_moe(key, cfg, dtype) -> dict:
+    d, f = cfg.d_model, cfg.moe_d_ff
+    E = cfg.num_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, E), jnp.float32),  # router in fp32
+        "w_gate": dense_init(ks[1], (E, d, f), dtype),
+        "w_up": dense_init(ks[2], (E, d, f), dtype),
+        "w_down": dense_init(ks[3], (E, f, d), dtype),
+    }
+    if cfg.num_shared_experts:
+        fs = f * cfg.num_shared_experts
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(k1, (d, fs), dtype),
+            "w_up": dense_init(k2, (d, fs), dtype),
+            "w_down": dense_init(k3, (fs, d), dtype),
+        }
+    return p
+
+
+def _act(x, activation: str):
+    return jax.nn.gelu(x, approximate=True) if activation == "gelu" else jax.nn.silu(x)
+
+
+def router_topk(
+    params: dict, cfg, x: jnp.ndarray, rng: Optional[jax.Array] = None
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: (N, d) → (weights (N,K), indices (N,K), router_probs (N,E))."""
+    logits = x.astype(jnp.float32) @ params["router"]
+    if cfg.router_jitter > 0 and rng is not None:
+        logits = logits + cfg.router_jitter * jax.random.normal(rng, logits.shape)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, indices = jax.lax.top_k(probs, cfg.num_experts_per_tok)
+    weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    return weights, indices, probs
+
+
+def load_balance_loss(probs: jnp.ndarray, indices: jnp.ndarray, num_experts: int) -> jnp.ndarray:
+    """Switch-transformer aux loss: E * sum_e f_e * P_e  (arXiv:2101.03961)."""
+    one_hot = jax.nn.one_hot(indices, num_experts, dtype=jnp.float32)   # (N,K,E)
+    f = jnp.mean(jnp.sum(one_hot, axis=1), axis=0)                      # fraction per expert
+    p = jnp.mean(probs, axis=0)
+    return num_experts * jnp.sum(f * p)
+
+
+def expert_activation_counts(indices: jnp.ndarray, num_experts: int) -> jnp.ndarray:
+    """Tokens routed to each expert — the paper's N(t)/T̄_exp measurement."""
+    one_hot = jax.nn.one_hot(indices, num_experts, dtype=jnp.int32)
+    return jnp.sum(one_hot, axis=tuple(range(one_hot.ndim - 1)))
+
+
+def _dispatch_onehot(params, cfg, x, weights, indices):
+    """(N,d) → (N,d) via dense one-hot combine.  Experts axis = leading dim of
+    w_*: shards over the `model` mesh axis → expert parallelism under GSPMD."""
+    E = cfg.num_experts
+    combine = jnp.einsum(
+        "nk,nke->ne", weights, jax.nn.one_hot(indices, E, dtype=weights.dtype)
+    )                                                      # (N, E)
+    # per-expert FFN on every token, weighted combine (dense but shardable)
+    h_gate = jnp.einsum("nd,edf->enf", x, params["w_gate"])
+    h_up = jnp.einsum("nd,edf->enf", x, params["w_up"])
+    h = _act(h_gate, cfg.mlp_activation) * h_up
+    y = jnp.einsum("enf,efd->end", h, params["w_down"])    # (E,N,d)
+    return jnp.einsum("end,ne->nd", y, combine.astype(y.dtype))
+
+
+def _dispatch_gmm(params, cfg, x, weights, indices):
+    """Sort tokens by expert, grouped matmul (Pallas gmm kernel)."""
+    from repro.kernels.gmm import ops as gmm_ops
+
+    N, d = x.shape
+    K, E = cfg.num_experts_per_tok, cfg.num_experts
+    flat_expert = indices.reshape(-1)                       # (N*K,)
+    order = jnp.argsort(flat_expert)
+    token_of = order // K                                   # source token per slot
+    xs = x[token_of]                                        # (N*K, d) sorted by expert
+    group_sizes = jnp.bincount(flat_expert, length=E)
+
+    h_gate = gmm_ops.gmm(xs, params["w_gate"], group_sizes)
+    h_up = gmm_ops.gmm(xs, params["w_up"], group_sizes)
+    h = _act(h_gate, cfg.mlp_activation) * h_up
+    ys = gmm_ops.gmm(h, params["w_down"], group_sizes)      # (N*K, d)
+
+    w_flat = weights.reshape(-1)[order].astype(ys.dtype)    # (N*K,)
+    out = jnp.zeros((N, d), ys.dtype)
+    return out.at[token_of].add(ys * w_flat[:, None])
+
+
+def moe_forward(
+    params: dict,
+    cfg,
+    x: jnp.ndarray,                  # (B, T, d)
+    *,
+    dispatch: str = "onehot",        # "onehot" | "gmm"
+    rng: Optional[jax.Array] = None,
+    return_metrics: bool = False,
+):
+    B, T, d = x.shape
+    if dispatch == "ep":
+        # expert-parallel shard_map path (distributed/collectives.py);
+        # router runs inside the shard, so metrics come from a cheap
+        # replicated re-route below.
+        from repro.distributed.collectives import moe_ep_forward
+        y = moe_ep_forward(params, cfg, x)
+        if return_metrics:
+            xf = x.reshape(B * T, d)
+            _, indices, probs = router_topk(params, cfg, xf, rng)
+            return y, {
+                "aux_loss": load_balance_loss(probs, indices, cfg.num_experts),
+                "expert_counts": expert_activation_counts(indices, cfg.num_experts),
+            }
+        return y, None
+    xf = x.reshape(B * T, d)
+    weights, indices, probs = router_topk(params, cfg, xf, rng)
+    if dispatch == "gmm":
+        y = _dispatch_gmm(params, cfg, xf, weights.astype(x.dtype), indices)
+    else:
+        y = _dispatch_onehot(params, cfg, xf, weights.astype(x.dtype), indices)
+    if "shared" in params:
+        s = params["shared"]
+        h = _act(xf @ s["w_gate"], cfg.mlp_activation) * (xf @ s["w_up"])
+        y = y + h @ s["w_down"]
+    y = y.reshape(B, T, d)
+    if return_metrics:
+        metrics = {
+            "aux_loss": load_balance_loss(probs, indices, cfg.num_experts),
+            "expert_counts": expert_activation_counts(indices, cfg.num_experts),
+        }
+        return y, metrics
+    return y, None

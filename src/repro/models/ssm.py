@@ -1,0 +1,314 @@
+"""Recurrent blocks: Mamba selective SSM (Jamba) and xLSTM (mLSTM / sLSTM).
+
+All blocks share the interface
+
+    forward(params, cfg, x, state, collect_states=False)
+        -> (y, final_state) or (y, stacked_states)
+
+where ``x`` is (B, T, d) processed sequentially from ``state``.  With
+``collect_states=True`` every per-step state is returned with a leading time
+axis (T, B, ...) — the speculative-decoding engine gathers the state at the
+last *accepted* position instead of rolling back (recurrent states cannot be
+rolled back in place; see DESIGN.md §5).
+
+Recurrent states:
+  mamba  {"conv": (B, c-1, d_in), "ssm": (B, d_in, n_state)}
+  mlstm  {"conv": (B, c-1, d_in), "C": (B, H, hd, hd), "n": (B, H, hd), "m": (B, H)}
+  slstm  {"c": (B, d), "n": (B, d), "m": (B, d), "h": (B, d)}
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+CONV_K = 4  # causal conv kernel size (mamba / mlstm)
+
+# Backward through a T-step recurrent scan saves the carry at every step —
+# O(T x state) residuals (the 1.5 TB/device xlstm train_4k baseline in
+# EXPERIMENTS.md §Perf).  Chunking the time axis and jax.checkpoint-ing each
+# chunk keeps only T/SCAN_CHUNK checkpoints and recomputes inside chunks.
+SCAN_CHUNK = 256
+
+
+def _scan_time(step, carry0, xs, collect: bool):
+    """lax.scan over time with chunked rematerialization.
+
+    xs: pytree with leading T axis.  With ``collect`` (SD verify: tiny T,
+    needs per-step states) or non-divisible T, falls back to a plain scan."""
+    T = jax.tree.leaves(xs)[0].shape[0]
+    if collect or T <= SCAN_CHUNK or T % SCAN_CHUNK != 0:
+        return jax.lax.scan(step, carry0, xs)
+    n = T // SCAN_CHUNK
+
+    def reshape(a):
+        return a.reshape((n, SCAN_CHUNK) + a.shape[1:])
+
+    @jax.checkpoint
+    def outer(carry, xc):
+        return jax.lax.scan(step, carry, xc)
+
+    carry, ys = jax.lax.scan(outer, carry0, jax.tree.map(reshape, xs))
+    ys = jax.tree.map(
+        lambda a: a.reshape((T,) + a.shape[2:]) if a is not None else None, ys)
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM, arXiv:2312.00752 as used by Jamba arXiv:2403.19887)
+# ---------------------------------------------------------------------------
+
+def _dt_rank(cfg) -> int:
+    return cfg.ssm_dt_rank or -(-cfg.d_model // 16)
+
+
+def init_mamba(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    n = cfg.ssm_state_dim
+    r = _dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    A = jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (d_in, n))
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * d_in), dtype),
+        "conv_w": dense_init(ks[1], (CONV_K, d_in), dtype, scale=1.0),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "w_xdbc": dense_init(ks[2], (d_in, r + 2 * n), dtype),
+        "w_dt": dense_init(ks[3], (r, d_in), dtype),
+        "dt_bias": jnp.full((d_in,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "A_log": jnp.log(A),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "w_out": dense_init(ks[4], (d_in, d), dtype),
+    }
+
+
+def make_mamba_state(cfg, batch: int, dtype) -> dict:
+    d_in = cfg.ssm_expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, CONV_K - 1, d_in), dtype),
+        "ssm": jnp.zeros((batch, d_in, cfg.ssm_state_dim), jnp.float32),
+    }
+
+
+def mamba_forward(params, cfg, x, state, collect_states: bool = False):
+    B, T, d = x.shape
+    d_in = cfg.ssm_expand * d
+    n = cfg.ssm_state_dim
+    r = _dt_rank(cfg)
+
+    xz = x @ params["w_in"]
+    xb, z = jnp.split(xz, 2, axis=-1)                       # (B,T,d_in) each
+
+    # causal depthwise conv with carried state
+    conv_in = jnp.concatenate([state["conv"].astype(xb.dtype), xb], axis=1)  # (B,T+K-1,d_in)
+    idx = jnp.arange(T)[:, None] + jnp.arange(CONV_K)[None, :]               # (T,K)
+    windows = conv_in[:, idx, :]                            # (B,T,K,d_in)
+    xc = jnp.einsum("btkd,kd->btd", windows, params["conv_w"]) + params["conv_b"]
+    xc = jax.nn.silu(xc)
+    new_conv = conv_in[:, T:, :]  # last K-1 inputs, any T
+
+    dbc = xc @ params["w_xdbc"]
+    dt = jax.nn.softplus(dbc[..., :r] @ params["w_dt"] + params["dt_bias"])  # (B,T,d_in)
+    Bmat = dbc[..., r : r + n].astype(jnp.float32)           # (B,T,n)
+    Cmat = dbc[..., r + n :].astype(jnp.float32)             # (B,T,n)
+    A = -jnp.exp(params["A_log"])                            # (d_in,n)
+
+    def step(h, inputs):
+        # decay/drive computed per step IN f32 from half-precision inputs:
+        # materializing them for the whole sequence costs
+        # (B, T, d_in, n_state) f32 — 137 GB/device on jamba train_4k; and
+        # keeping the scan inputs in model dtype (not f32) halves the
+        # backward residuals again (EXPERIMENTS.md §Perf C2/C3).
+        dt_t, B_t, C_t, x_t = inputs                         # (B,d_in)/(B,n)
+        dt_f = dt_t.astype(jnp.float32)
+        dec_t = jnp.exp(dt_f[..., None] * A)                 # (B,d_in,n)
+        drv_t = (dt_f * x_t.astype(jnp.float32))[..., None] \
+            * B_t.astype(jnp.float32)[:, None, :]
+        h = dec_t * h + drv_t                                # (B,d_in,n)
+        y = jnp.einsum("bdn,bn->bd", h, C_t.astype(jnp.float32))
+        return h, (y, h) if collect_states else (y, None)
+
+    md = x.dtype
+    (h_final, ys_states) = _scan_time(
+        step, state["ssm"],
+        (dt.astype(md).transpose(1, 0, 2), Bmat.astype(md).transpose(1, 0, 2),
+         Cmat.astype(md).transpose(1, 0, 2), xc.transpose(1, 0, 2)),
+        collect_states,
+    )
+    ys, hs = ys_states
+    y = ys.transpose(1, 0, 2)                                # (B,T,d_in)
+    y = y + params["D"] * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ params["w_out"]
+
+    if collect_states:
+        # stacked conv states: state after consuming tokens 0..t
+        conv_hist = jnp.stack(
+            [jax.lax.dynamic_slice_in_dim(conv_in, t + 1, CONV_K - 1, axis=1)
+             for t in range(T)], axis=0)                      # (T,B,K-1,d_in)
+        return out, {"conv": conv_hist, "ssm": hs}            # hs: (T,B,d_in,n)
+    return out, {"conv": new_conv.astype(state["conv"].dtype), "ssm": h_final}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix memory, arXiv:2405.04517)
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    d_in = 2 * d
+    H = cfg.num_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], (d, 2 * d_in), dtype),
+        "conv_w": dense_init(ks[1], (CONV_K, d_in), dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "wq": dense_init(ks[2], (d_in, d_in), dtype),
+        "wk": dense_init(ks[3], (d_in, d_in), dtype),
+        "wv": dense_init(ks[4], (d_in, d_in), dtype),
+        "w_i": dense_init(ks[5], (d_in, H), jnp.float32),
+        "w_f": dense_init(ks[6], (d_in, H), jnp.float32),
+        "f_bias": jnp.full((H,), 3.0, jnp.float32),   # forget ~1 at init
+        "i_bias": jnp.zeros((H,), jnp.float32),
+        "w_down": dense_init(ks[7], (d_in, d), dtype),
+    }
+
+
+def make_mlstm_state(cfg, batch: int, dtype) -> dict:
+    d_in = 2 * cfg.d_model
+    H = cfg.num_heads
+    hd = d_in // H
+    return {
+        "conv": jnp.zeros((batch, CONV_K - 1, d_in), dtype),
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.zeros((batch, H), jnp.float32),
+    }
+
+
+def mlstm_forward(params, cfg, x, state, collect_states: bool = False):
+    B, T, d = x.shape
+    d_in = 2 * d
+    H = cfg.num_heads
+    hd = d_in // H
+
+    up = x @ params["w_up"]
+    xb, z = jnp.split(up, 2, axis=-1)
+
+    conv_in = jnp.concatenate([state["conv"].astype(xb.dtype), xb], axis=1)
+    idx = jnp.arange(T)[:, None] + jnp.arange(CONV_K)[None, :]
+    windows = conv_in[:, idx, :]
+    xc = jax.nn.silu(
+        jnp.einsum("btkd,kd->btd", windows, params["conv_w"]) + params["conv_b"]
+    )
+
+    q = (xc @ params["wq"]).reshape(B, T, H, hd).astype(jnp.float32)
+    k = (xc @ params["wk"]).reshape(B, T, H, hd).astype(jnp.float32) / jnp.sqrt(hd)
+    v = (xc @ params["wv"]).reshape(B, T, H, hd).astype(jnp.float32)
+    i_raw = xc.astype(jnp.float32) @ params["w_i"] + params["i_bias"]   # (B,T,H)
+    f_raw = xc.astype(jnp.float32) @ params["w_f"] + params["f_bias"]
+    f_log = jax.nn.log_sigmoid(f_raw)
+
+    def step(carry, inputs):
+        C, n_s, m = carry
+        q_t, k_t, v_t, i_t, f_t = inputs                    # (B,H,hd) / (B,H)
+        m_new = jnp.maximum(f_t + m, i_t)
+        i_p = jnp.exp(i_t - m_new)[..., None]               # (B,H,1)
+        f_p = jnp.exp(f_t + m - m_new)[..., None]
+        C = f_p[..., None] * C + i_p[..., None] * (v_t[..., :, None] * k_t[..., None, :])
+        n_s = f_p * n_s + i_p * k_t
+        h_num = jnp.einsum("bhij,bhj->bhi", C, q_t)
+        h_den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n_s, q_t)), 1.0)
+        h = h_num / h_den[..., None]
+        out = (C, n_s, m_new)
+        return out, (h, out if collect_states else None)
+
+    tq = lambda a: a.transpose(1, 0, 2, 3)
+    tg = lambda a: a.transpose(1, 0, 2)
+    (C_f, n_f, m_f), (hs, states) = _scan_time(
+        step, (state["C"], state["n"], state["m"]),
+        (tq(q), tq(k), tq(v), tg(i_raw), tg(f_log)),
+        collect_states,
+    )
+    h = hs.transpose(1, 0, 2, 3).reshape(B, T, d_in).astype(x.dtype)
+    out = (h * jax.nn.silu(z)) @ params["w_down"]
+
+    if collect_states:
+        Cs, ns, ms = states
+        conv_hist = jnp.stack(
+            [jax.lax.dynamic_slice_in_dim(conv_in, t + 1, CONV_K - 1, axis=1)
+             for t in range(T)], axis=0)
+        return out, {"conv": conv_hist, "C": Cs, "n": ns, "m": ms}
+    return out, {
+        "conv": conv_in[:, T:, :].astype(state["conv"].dtype),
+        "C": C_f, "n": n_f, "m": m_f,
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar memory with exponential gating)
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    f = (4 * d) // 3
+    ks = jax.random.split(key, 11)
+    p = {}
+    for i, g in enumerate(("z", "i", "f", "o")):
+        p[f"w_{g}"] = dense_init(ks[i], (d, d), dtype)
+        p[f"r_{g}"] = dense_init(ks[4 + i], (d, d), dtype)
+        p[f"b_{g}"] = (jnp.full((d,), 3.0, jnp.float32) if g == "f"
+                       else jnp.zeros((d,), jnp.float32))
+    p["w_ffn_up"] = dense_init(ks[8], (d, f), dtype)
+    p["w_ffn_down"] = dense_init(ks[9], (f, d), dtype)
+    return p
+
+
+def make_slstm_state(cfg, batch: int, dtype) -> dict:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z, "m": z, "h": z}
+
+
+def slstm_forward(params, cfg, x, state, collect_states: bool = False):
+    B, T, d = x.shape
+    x32 = x.astype(jnp.float32)
+    pre = {g: x32 @ params[f"w_{g}"].astype(jnp.float32) for g in ("z", "i", "f", "o")}
+
+    def step(carry, inputs):
+        c, n, m, h = carry
+        pz, pi, pf, po = inputs
+        z_t = jnp.tanh(pz + h @ params["r_z"].astype(jnp.float32) + params["b_z"])
+        i_t = pi + h @ params["r_i"].astype(jnp.float32) + params["b_i"]
+        f_t = jax.nn.log_sigmoid(pf + h @ params["r_f"].astype(jnp.float32) + params["b_f"])
+        o_t = jax.nn.sigmoid(po + h @ params["r_o"].astype(jnp.float32) + params["b_o"])
+        m_new = jnp.maximum(f_t + m, i_t)
+        i_p = jnp.exp(i_t - m_new)
+        f_p = jnp.exp(f_t + m - m_new)
+        c_new = f_p * c + i_p * z_t
+        n_new = f_p * n + i_p
+        h_new = o_t * c_new / jnp.maximum(n_new, 1e-6)
+        out = (c_new, n_new, m_new, h_new)
+        return out, (h_new, out if collect_states else None)
+
+    t = lambda a: a.transpose(1, 0, 2)
+    (c_f, n_f, m_f, h_f), (hs, states) = _scan_time(
+        step, (state["c"], state["n"], state["m"], state["h"]),
+        (t(pre["z"]), t(pre["i"]), t(pre["f"]), t(pre["o"])),
+        collect_states,
+    )
+    h = hs.transpose(1, 0, 2).astype(x.dtype)
+    out = jax.nn.gelu(h @ params["w_ffn_up"], approximate=True) @ params["w_ffn_down"]
+
+    if collect_states:
+        cs, ns, ms, hss = states
+        return out, {"c": cs, "n": ns, "m": ms, "h": hss}
+    return out, {"c": c_f, "n": n_f, "m": m_f, "h": h_f}
+
+
+FORWARD = {"mamba": mamba_forward, "mlstm": mlstm_forward, "slstm": slstm_forward}
+INIT = {"mamba": init_mamba, "mlstm": init_mlstm, "slstm": init_slstm}
+MAKE_STATE = {"mamba": make_mamba_state, "mlstm": make_mlstm_state, "slstm": make_slstm_state}

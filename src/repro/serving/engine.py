@@ -1,0 +1,159 @@
+"""Serving engine: request queue → batched speculative decoding → completions.
+
+Private-serving shape (the paper's target scenario, Sec. 3.4): tens of
+concurrent requests, batched together, decoded with SD.  The engine:
+
+  * admits up to ``max_batch`` requests per generation wave (static batch
+    per wave, continuous across waves — the moderate-batch regime),
+  * consults the AutoTuner (core/autotune.py, beyond-paper) to pick
+    {use_sd, gamma} for the admitted batch size from the fitted perf model,
+  * runs SpecDecoder rounds until every sequence in the wave is done,
+  * reports per-wave SDStats (sigma, alpha, rounds) and target-efficiency
+    measurements, feeding alpha back into the tuner.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.autotune import AutoTuner
+from repro.core.spec_decode import SDStats, SpecDecoder, generate_ar
+from repro.data.tokenizer import PAD
+from repro.models.model import Model
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                   # (T,) token ids
+    max_new_tokens: int = 64
+    temperature: float = 0.0
+    output: Optional[np.ndarray] = None
+    submitted_at: float = field(default_factory=time.perf_counter)
+    finished_at: Optional[float] = None
+
+
+@dataclass
+class WaveReport:
+    batch: int
+    gamma: int
+    used_sd: bool
+    stats: Optional[SDStats]
+    wall_time: float
+    tokens_out: int
+
+    @property
+    def tokens_per_second(self) -> float:
+        return self.tokens_out / max(self.wall_time, 1e-9)
+
+
+class ServingEngine:
+    def __init__(
+        self,
+        target: Model,
+        draft: Model,
+        params_t,
+        params_d,
+        *,
+        max_batch: int = 32,
+        tuner: Optional[AutoTuner] = None,
+        gamma: int = 4,
+        temperature: float = 0.0,
+        force_sd: Optional[bool] = None,
+        draft_kind: str = "model",          # "model" | "eagle"
+    ):
+        self.draft_kind = draft_kind
+        self.target, self.draft = target, draft
+        self.params_t, self.params_d = params_t, params_d
+        self.max_batch = max_batch
+        self.tuner = tuner
+        self.gamma = gamma
+        self.temperature = temperature
+        self.force_sd = force_sd
+        self.queue: Deque[Request] = deque()
+        self.done: Dict[int, Request] = {}
+        self.reports: List[WaveReport] = []
+        self._uid = 0
+
+    # ----------------------------------------------------------------- queue
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 64) -> int:
+        self._uid += 1
+        self.queue.append(Request(self._uid, np.asarray(prompt, np.int32),
+                                  max_new_tokens))
+        return self._uid
+
+    def _admit(self) -> List[Request]:
+        wave = []
+        while self.queue and len(wave) < self.max_batch:
+            wave.append(self.queue.popleft())
+        return wave
+
+    # ------------------------------------------------------------------ wave
+    def _pad_prompts(self, wave: List[Request]):
+        T = max(len(r.prompt) for r in wave)
+        toks = np.full((len(wave), T), PAD, np.int32)
+        lengths = np.zeros((len(wave),), np.int32)
+        for i, r in enumerate(wave):
+            toks[i, : len(r.prompt)] = r.prompt
+            lengths[i] = len(r.prompt)
+        return jnp.asarray(toks), jnp.asarray(lengths)
+
+    def step(self, key: Optional[jax.Array] = None) -> Optional[WaveReport]:
+        """Process one wave; returns its report (None if queue empty)."""
+        wave = self._admit()
+        if not wave:
+            return None
+        B = len(wave)
+        gamma, use_sd = self.gamma, True
+        if self.tuner is not None:
+            plan = self.tuner.plan(B)
+            gamma, use_sd = plan["gamma"], plan["use_sd"]
+        if self.force_sd is not None:
+            use_sd = self.force_sd
+        max_new = max(r.max_new_tokens for r in wave)
+        toks, lengths = self._pad_prompts(wave)
+        key = key if key is not None else jax.random.PRNGKey(self._uid)
+
+        t0 = time.perf_counter()
+        if use_sd:
+            if self.draft_kind == "eagle":
+                from repro.core.eagle import EagleSpecDecoder
+                sd = EagleSpecDecoder(self.target, self.draft, gamma=gamma,
+                                      temperature=self.temperature)
+            else:
+                sd = SpecDecoder(self.target, self.draft, gamma=gamma,
+                                 temperature=self.temperature)
+            out, stats = sd.generate(self.params_t, self.params_d, toks,
+                                     max_new, lengths=lengths, key=key)
+            if self.tuner is not None and stats.draft_events:
+                self.tuner.update_alpha(stats.alpha)
+        else:
+            out = generate_ar(self.target, self.params_t, toks, max_new,
+                              temperature=self.temperature,
+                              lengths=lengths, key=key)
+            stats = None
+        wall = time.perf_counter() - t0
+
+        n_tokens = 0
+        for i, r in enumerate(wave):
+            r.output = out[i, : r.max_new_tokens]
+            r.finished_at = time.perf_counter()
+            n_tokens += len(r.output)
+            self.done[r.uid] = r
+        report = WaveReport(B, gamma, use_sd, stats, wall, n_tokens)
+        self.reports.append(report)
+        return report
+
+    def run(self, key: Optional[jax.Array] = None) -> List[WaveReport]:
+        reports = []
+        while self.queue:
+            r = self.step(key)
+            if r:
+                reports.append(r)
+        return reports

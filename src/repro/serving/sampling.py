@@ -1,0 +1,33 @@
+"""Serving-side sampling policies (temperature / top-k / top-p)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    max_new_tokens: int = 64
+
+
+def sample_logits(logits: jnp.ndarray, key: jax.Array, sp: SamplingParams) -> jnp.ndarray:
+    """logits (B, V) → tokens (B,)."""
+    if sp.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / sp.temperature
+    if sp.top_k > 0:
+        kth = jnp.sort(logits, axis=-1)[:, -sp.top_k][:, None]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    if sp.top_p < 1.0:
+        sorted_l = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_l, axis=-1)
+        csum = jnp.cumsum(probs, axis=-1)
+        cutoff_idx = jnp.sum(csum < sp.top_p, axis=-1)
+        cutoff = jnp.take_along_axis(sorted_l, cutoff_idx[:, None], axis=-1)
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return jax.random.categorical(key, logits).astype(jnp.int32)

@@ -1,0 +1,46 @@
+"""The jit-facing serving step functions.
+
+These are the exact functions the multi-pod dry-run lowers for decode
+shapes (launch/dryrun.py): one new token per sequence against a KV cache of
+``seq_len``, or a gamma+1-token SD verify — the paper's verification
+workload as a first-class lowering target.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+
+
+def make_decode_step(model: Model):
+    """AR decode: (params, token (B,), cache) → (logits (B,V), cache)."""
+
+    def decode_step(params, token, cache):
+        logits, pend = model.extend(params, token[:, None], cache, collect=True)
+        cache = model.commit(pend, jnp.ones_like(cache["lengths"]), collected=True)
+        return logits[:, 0], cache
+
+    return decode_step
+
+
+def make_verify_step(model: Model, gamma: int):
+    """SD verify: (params, tokens (B, gamma+1), n_commit (B,), cache) →
+    (logits (B, gamma+1, V), cache).  n_commit is data (from rejection), so
+    one lowering serves every acceptance outcome."""
+
+    def verify_step(params, tokens, n_commit, cache):
+        logits, pend = model.extend(params, tokens, cache, collect=True)
+        cache = model.commit(pend, n_commit, collected=True)
+        return logits, cache
+
+    return verify_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, tokens, cache, lengths=None, **kw):
+        return model.prefill(params, tokens, cache, lengths=lengths, **kw)
+
+    return prefill_step

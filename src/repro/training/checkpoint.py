@@ -1,0 +1,66 @@
+"""Checkpointing: pytree ↔ directory of .npy leaves + msgpack manifest.
+
+No orbax in this environment; this writes every leaf as a .npy file keyed
+by its tree path, plus a manifest with step / config metadata.  Restore
+rebuilds into the *template's* structure and dtypes, so it round-trips
+through sharded trees (leaves are fully gathered — fine at example scale).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(re.sub(r"[\[\]'\.]", "", str(p)) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
+                    metadata: Optional[dict] = None) -> str:
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(os.path.join(path, key.replace("/", "__") + ".npy"), arr)
+    manifest = {"step": step, "keys": sorted(flat.keys()),
+                "metadata": metadata or {}}
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return path
+
+
+def latest_checkpoint(ckpt_dir: str) -> Optional[str]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [d for d in os.listdir(ckpt_dir) if d.startswith("step_")]
+    return os.path.join(ckpt_dir, max(steps)) if steps else None
+
+
+def restore_checkpoint(path: str, template: Any) -> tuple[Any, dict]:
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat_t = _flatten(template)
+    if sorted(flat_t.keys()) != manifest["keys"]:
+        missing = set(manifest["keys"]) ^ set(flat_t.keys())
+        raise ValueError(f"checkpoint/template structure mismatch: {sorted(missing)[:5]}")
+    loaded = {}
+    for key in manifest["keys"]:
+        arr = np.load(os.path.join(path, key.replace("/", "__") + ".npy"))
+        loaded[key] = jnp.asarray(arr, dtype=flat_t[key].dtype)
+    # rebuild in template order
+    leaves_order = [loaded[k] for k in flat_t.keys()]
+    treedef = jax.tree.structure(template)
+    flat_template_order = list(flat_t.keys())
+    # tree_flatten_with_path and tree.flatten agree on leaf order
+    return treedef.unflatten(leaves_order), manifest

@@ -1,0 +1,69 @@
+"""AdamW + cosine schedule + global-norm clipping, pure JAX (no optax).
+
+State and update are plain pytree functions so they shard transparently
+under pjit (moments inherit the parameter sharding — FSDP-friendly).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray       # scalar int32
+    mu: dict                # first moment  (pytree like params)
+    nu: dict                # second moment
+
+
+def init_adam(params) -> AdamState:
+    zeros = lambda p: jax.tree.map(lambda a: jnp.zeros_like(a, jnp.float32), p)
+    return AdamState(step=jnp.zeros((), jnp.int32), mu=zeros(params), nu=zeros(params))
+
+
+def cosine_schedule(step, cfg: TrainConfig):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gnorm
+
+
+def adamw_update(
+    params, grads, state: AdamState, cfg: TrainConfig
+) -> Tuple[dict, AdamState, dict]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = cosine_schedule(step, cfg)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * jnp.square(g32)
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamState(step, new_m, new_v), {"lr": lr, "grad_norm": gnorm}

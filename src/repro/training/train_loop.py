@@ -1,0 +1,99 @@
+"""Training step: causal-LM loss (+ MoE aux loss) + AdamW.
+
+``make_train_step`` builds the pure step function used both by the real
+training examples (examples/train_100m.py) and by the multi-pod dry-run
+(launch/dryrun.py lowers exactly this function for train_4k shapes).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models.model import Model
+from repro.training.optimizer import AdamState, adamw_update, init_adam
+
+
+def lm_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+            mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Cross entropy; logits[:, t] predicts labels[:, t] (labels are
+    pre-shifted by the data pipeline: labels = tokens >> 1)."""
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+    return jnp.sum(nll * mask.astype(jnp.float32)) / jnp.maximum(
+        jnp.sum(mask), 1.0)
+
+
+def chunked_lm_loss(model: Model, params, hidden: jnp.ndarray,
+                    labels: jnp.ndarray, mask: Optional[jnp.ndarray],
+                    chunk: int = 512) -> jnp.ndarray:
+    """Cross entropy without materializing (B, T, vocab): scan the head over
+    T-chunks.  hidden[:, t] predicts labels[:, t] (labels pre-shifted by the
+    pipeline: labels = tokens >> 1)."""
+    B, T, d = hidden.shape
+    chunk = min(chunk, T)
+    pad = (-T) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        m = jnp.zeros((B, T + pad), jnp.float32).at[:, :T].set(
+            jnp.ones((B, T), jnp.float32) if mask is None else mask.astype(jnp.float32))
+    else:
+        m = jnp.ones((B, T), jnp.float32) if mask is None else mask.astype(jnp.float32)
+    n = hidden.shape[1] // chunk
+    hc = hidden.reshape(B, n, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+    mc = m.reshape(B, n, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        # checkpointed: backward recomputes this chunk's logits instead of
+        # the scan saving (n, B, chunk, vocab) residuals — the whole point
+        # of chunking the loss.
+        h, tgt, msk = xs
+        logits = model._head(params, h).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+        s, c = carry
+        return (s + jnp.sum(nll * msk), c + jnp.sum(msk)), None
+
+    (s, c), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), (hc, lc, mc))
+    return s / jnp.maximum(c, 1.0)
+
+
+def make_train_step(model: Model, tcfg: TrainConfig):
+    cfg = model.cfg
+
+    def loss_fn(params, batch):
+        kwargs = {}
+        if cfg.is_encoder_decoder:
+            kwargs["encoder_embeds"] = batch["encoder_embeds"]
+        if cfg.frontend == "vision_stub" and "inputs_embeds" in batch:
+            kwargs["inputs_embeds"] = batch["inputs_embeds"]
+        hidden, metrics = model.forward_hidden(params, batch["tokens"], **kwargs)
+        loss = chunked_lm_loss(model, params, hidden, batch["labels"],
+                               batch.get("mask"))
+        aux = metrics["aux_loss"] / max(cfg.num_layers, 1)
+        total = loss + cfg.router_aux_loss_coef * aux
+        return total, {"loss": loss, "aux_loss": aux,
+                       "expert_counts": metrics["expert_counts"]}
+
+    def train_step(params, opt_state: AdamState, batch):
+        (total, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        params, opt_state, opt_metrics = adamw_update(params, grads, opt_state, tcfg)
+        metrics = dict(metrics, **opt_metrics, total_loss=total)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_train_state(model: Model, key: jax.Array) -> Tuple[dict, AdamState]:
+    params = model.init(key)
+    return params, init_adam(params)

@@ -1,0 +1,11 @@
+import numpy as np
+import pytest
+
+# NOTE: never set --xla_force_host_platform_device_count here — smoke tests
+# and benches must see exactly 1 device (the 512-device override belongs to
+# launch/dryrun.py ONLY).  Mesh integration tests spawn subprocesses.
+
+
+@pytest.fixture(autouse=True)
+def _seed_numpy():
+    np.random.seed(0)

@@ -1,0 +1,84 @@
+"""Paper theory (Eqs. 5-11): formulas vs Monte-Carlo + proven monotonicities."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.analytics import (
+    activation_threshold, expected_activated_experts, mean_tokens_per_expert,
+    roofline_response, sigma_from_alpha)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(4, 128), st.integers(1, 8), st.integers(1, 256),
+       st.integers(0, 10_000))
+def test_activated_experts_matches_simulation(E, K, t, seed):
+    """Eq. 8 vs Monte-Carlo of uniform top-K routing (the i.i.d. assumption
+    the paper validates on Deepseek/Qwen routers in Fig. 1a/b)."""
+    if K > E:
+        K = E
+    rng = np.random.default_rng(seed)
+    trials = 400
+    counts = np.zeros(trials)
+    for i in range(trials):
+        active = set()
+        for _ in range(t):
+            active.update(rng.choice(E, size=K, replace=False))
+        counts[i] = len(active)
+    pred = expected_activated_experts(t, E, K)
+    # i.i.d. approximation error is small; allow generous CI
+    se = counts.std() / np.sqrt(trials) + 1e-9
+    assert abs(counts.mean() - pred) < max(6 * se, 0.05 * E + 1.0)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(0.01, 0.99), st.floats(0.01, 0.99), st.integers(2, 512))
+def test_tokens_per_expert_monotone_in_rho(rho1, rho2, t):
+    """Appendix B: T̄_exp(t; rho) increases with rho for t > 1."""
+    lo, hi = sorted((rho1, rho2))
+    if hi - lo < 1e-6:
+        return
+    assert mean_tokens_per_expert(t, lo) <= mean_tokens_per_expert(t, hi) + 1e-9
+
+
+def test_tokens_per_expert_dense_limit():
+    assert mean_tokens_per_expert(37, 1.0) == 37
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(0.02, 0.9), st.floats(0.5, 0.99))
+def test_threshold_saturates(rho, tau):
+    """Eq. 9: at T_thres, N(t) >= tau*E; below it, not yet."""
+    E = 1000
+    K = rho * E
+    T = activation_threshold(rho, tau)
+    assert expected_activated_experts(T, E, K) >= tau * E - 1e-6
+    if T > 1:
+        assert expected_activated_experts(T - 1, E, K) < tau * E + 1e-6
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.floats(10, 400), st.floats(1.001, 2.0))
+def test_roofline_response_c1_continuous(knee, s):
+    """Eq. 11: G is continuous with continuous first derivative at the knee."""
+    eps = 1e-4
+    below = roofline_response(knee - eps, knee, s)
+    above = roofline_response(knee + eps, knee, s)
+    assert abs(above - below) < 1e-2 * max(below, 1.0)
+    d_below = (roofline_response(knee - eps, knee, s)
+               - roofline_response(knee - 2 * eps, knee, s)) / eps
+    d_above = (roofline_response(knee + 2 * eps, knee, s)
+               - roofline_response(knee + eps, knee, s)) / eps
+    assert abs(d_above - d_below) < 2e-2 * max(abs(d_below), 1e-3)
+
+
+def test_roofline_linear_beyond_knee():
+    g1 = roofline_response(300, 100, 1.05)
+    g2 = roofline_response(400, 100, 1.05)
+    g3 = roofline_response(500, 100, 1.05)
+    assert abs((g3 - g2) - (g2 - g1)) < 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(0.0, 1.0), st.integers(1, 8))
+def test_sigma_bounds(alpha, gamma):
+    s = sigma_from_alpha(alpha, gamma)
+    assert 1 / (gamma + 1) - 1e-9 <= s <= 1.0 + 1e-9

@@ -1,0 +1,86 @@
+"""Per-architecture smoke tests: REDUCED variant of each assigned family
+runs one forward + one train step + one decode step on CPU; asserts output
+shapes and finiteness (deliverable f)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import ASSIGNED, get_config
+from repro.models.model import Model
+from repro.training.train_loop import init_train_state, make_train_step
+
+ALL_ARCHS = list(ASSIGNED) + ["qwen2-57b-a14b", "mixtral-8x7b", "qwen2-0.5b"]
+
+
+def _batch_for(cfg, B, T, key):
+    batch = {
+        "tokens": jax.random.randint(key, (B, T), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (B, T), 0, cfg.vocab_size),
+        "mask": jnp.ones((B, T), jnp.float32),
+    }
+    if cfg.is_encoder_decoder:
+        batch["encoder_embeds"] = 0.02 * jax.random.normal(
+            key, (B, cfg.encoder_seq_len, cfg.d_model), jnp.dtype(cfg.dtype))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_reduced_smoke(arch):
+    cfg = get_config(arch, reduced=True)
+    assert cfg.num_layers <= 2 and cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+    B, T = 2, 16
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch_for(cfg, B, T, jax.random.PRNGKey(1))
+
+    # forward
+    kwargs = ({"encoder_embeds": batch["encoder_embeds"]}
+              if cfg.is_encoder_decoder else {})
+    logits, metrics = model.forward_train(params, batch["tokens"], **kwargs)
+    assert logits.shape == (B, T, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    # one train step
+    step = jax.jit(make_train_step(model, TrainConfig(total_steps=10)))
+    params2, opt = init_train_state(model, jax.random.PRNGKey(0))
+    params2, opt, m = step(params2, opt, batch)
+    assert np.isfinite(float(m["loss"]))
+    assert np.isfinite(float(m["grad_norm"]))
+
+    # prefill + decode step
+    cache = model.init_cache(B, T + 4)
+    last, cache = model.prefill(params, batch["tokens"], cache, **kwargs)
+    assert last.shape == (B, cfg.vocab_size)
+    tok = jnp.argmax(last, -1)
+    lg, cache = model.decode_step(params, tok, cache)
+    assert lg.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(lg, np.float32)).all()
+    assert int(cache["lengths"][0]) == T + 1
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_full_config_matches_assignment(arch):
+    """Full configs carry the exact assigned hyperparameters."""
+    spec = {
+        "gemma-7b": (28, 3072, 16, 16, 24576, 256000),
+        "minicpm3-4b": (62, 2560, 40, 40, 6400, 73448),
+        "whisper-base": (6, 512, 8, 8, 2048, 51865),
+        "qwen2-vl-2b": (28, 1536, 12, 2, 8960, 151936),
+        "gemma3-12b": (48, 3840, 16, 8, 15360, 262144),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+        "qwen2-7b": (28, 3584, 28, 4, 18944, 152064),
+        "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+        "qwen3-moe-30b-a3b": (48, 2048, 32, 4, 768, 151936),
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+    }[arch]
+    cfg = get_config(arch)
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == spec, (arch, got, spec)
+    moe = {"jamba-v0.1-52b": (16, 2), "dbrx-132b": (16, 4),
+           "qwen3-moe-30b-a3b": (128, 8)}
+    if arch in moe:
+        assert (cfg.num_experts, cfg.num_experts_per_tok) == moe[arch]

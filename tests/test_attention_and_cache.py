@@ -1,0 +1,125 @@
+"""Attention backends agree; cache semantics (ring, MLA, verify/commit)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import _causal_mask, _sdpa, chunked_sdpa
+from repro.models.model import Model
+
+
+def test_chunked_matches_naive_causal():
+    B, T, Hq, Hkv, D = 2, 64, 4, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, T, Hq, D))
+    k = jax.random.normal(ks[1], (B, T, Hkv, D))
+    v = jax.random.normal(ks[2], (B, T, Hkv, D))
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    ref = _sdpa(q, k, v, _causal_mask(pos, pos, 0), 0.25)
+    out = chunked_sdpa(q, k, v, pos, pos, scale=0.25, chunk=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5,
+                               atol=2e-5)
+
+
+def test_chunked_gradients_match_naive():
+    B, T, Hq, Hkv, D = 1, 32, 2, 1, 8
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, T, Hq, D))
+    k = jax.random.normal(ks[1], (B, T, Hkv, D))
+    v = jax.random.normal(ks[2], (B, T, Hkv, D))
+    pos = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+
+    def loss_ref(q, k, v):
+        return jnp.sum(jnp.tanh(_sdpa(q, k, v, _causal_mask(pos, pos, 8),
+                                      0.3, 4.0)))
+
+    def loss_chunked(q, k, v):
+        return jnp.sum(jnp.tanh(chunked_sdpa(q, k, v, pos, pos, scale=0.3,
+                                             window=8, logit_cap=4.0,
+                                             chunk=8)))
+
+    g1 = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(loss_chunked, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                                   atol=1e-4)
+
+
+CFGS = {
+    "dense": ModelConfig("c-dense", "dense", 2, 64, 4, 2, 128, 256,
+                         dtype="float32"),
+    "swa": ModelConfig("c-swa", "dense", 2, 64, 4, 2, 128, 256,
+                       layer_pattern=("swa",), sliding_window=6,
+                       dtype="float32"),
+    "mla": ModelConfig("c-mla", "dense", 2, 64, 4, 4, 128, 256,
+                       layer_pattern=("mla",), mla_kv_lora_rank=16,
+                       mla_q_lora_rank=0, mla_qk_rope_dim=8,
+                       mla_qk_nope_dim=16, mla_v_head_dim=16, head_dim=24,
+                       dtype="float32"),
+    "mamba": ModelConfig("c-mamba", "ssm", 2, 64, 4, 4, 128, 256,
+                         layer_pattern=("mamba",), rope_type="none",
+                         dtype="float32"),
+}
+
+
+@pytest.mark.parametrize("name", sorted(CFGS))
+def test_decode_matches_teacher_forcing(name):
+    """Prefill + T single decode steps reproduce the forward_train logits."""
+    cfg = CFGS[name]
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, T0, T1 = 2, 6, 5
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T0 + T1), 0, 256)
+    full_logits, _ = model.forward_train(params, toks)
+    cache = model.init_cache(B, T0 + T1 + 2)
+    last, cache = model.prefill(params, toks[:, :T0], cache)
+    np.testing.assert_allclose(np.asarray(last),
+                               np.asarray(full_logits[:, T0 - 1]),
+                               rtol=2e-4, atol=2e-4)
+    for t in range(T1):
+        lg, cache = model.decode_step(params, toks[:, T0 + t], cache)
+        if t + 1 < T1:
+            np.testing.assert_allclose(np.asarray(lg),
+                                       np.asarray(full_logits[:, T0 + t]),
+                                       rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 1000), st.integers(1, 4))
+def test_verify_commit_equals_sequential(seed, gamma):
+    """extend(T)+commit(n) == n single decode steps — for every n."""
+    cfg = CFGS["swa"]
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, T0 = 2, 8
+    key = jax.random.PRNGKey(seed)
+    toks = jax.random.randint(key, (B, T0), 0, 256)
+    drafts = jax.random.randint(jax.random.fold_in(key, 1), (B, gamma + 1),
+                                0, 256)
+    n_commit = jax.random.randint(jax.random.fold_in(key, 2), (B,), 1,
+                                  gamma + 2)
+
+    cache = model.init_cache(B, T0 + 16)
+    _, cache = model.prefill(params, toks, cache)
+    _, pend = model.extend(params, drafts, cache, collect=True)
+    cacheA = model.commit(pend, n_commit, collected=True)
+
+    cacheB = model.init_cache(B, T0 + 16)
+    _, cacheB = model.prefill(params, toks, cacheB)
+    for t in range(gamma + 1):
+        # only advance sequences with n_commit > t: emulate by advancing all
+        # then comparing only the final logits of a shared next token
+        pass
+    # compare next-token logits per sequence against a fresh prefix run
+    probe = jnp.full((B, 1), 7, jnp.int32)
+    lgA, _ = model.extend(params, probe, cacheA)
+    for b in range(B):
+        n = int(n_commit[b])
+        prefix = jnp.concatenate([toks[b: b + 1], drafts[b: b + 1, :n]], 1)
+        c = model.init_cache(1, T0 + 16)
+        _, c = model.prefill(params, prefix, c)
+        lgB, _ = model.extend(params, probe[:1], c)
+        np.testing.assert_allclose(np.asarray(lgA[b]), np.asarray(lgB[0]),
+                                   rtol=3e-4, atol=3e-4)

@@ -1,0 +1,75 @@
+"""Rejection sampling: distribution preservation (hypothesis) + mechanics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.analytics import sigma_from_alpha
+from repro.core.rejection import probs_from_logits, rejection_sample
+
+
+def _dist(rng, V, sharp=1.0):
+    x = rng.standard_normal(V) * sharp
+    e = np.exp(x - x.max())
+    return e / e.sum()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 6), st.floats(0.5, 3.0))
+def test_lossless_distribution(seed, vocab, sharp):
+    """Emitted-token marginal == target distribution p0, for arbitrary
+    (p, q) pairs: the Leviathan correctness property, checked by exact
+    enumeration over (draft token, accept/reject) outcomes."""
+    rng = np.random.default_rng(seed)
+    gamma = 1
+    p0 = _dist(rng, vocab, sharp)
+    p1 = _dist(rng, vocab, sharp)
+    q0 = _dist(rng, vocab, sharp)
+
+    # enumerate: P(first emitted token = v)
+    #  = q0(v)*min(1, p0(v)/q0(v))            [accepted draft]
+    #  + sum_d q0(d)*(1-min(1,p0/q0)) * residual(v)
+    acc = np.minimum(1.0, p0 / np.maximum(q0, 1e-30))
+    residual = np.maximum(p0 - q0, 0)
+    residual = residual / residual.sum() if residual.sum() > 1e-12 else p0
+    marginal = q0 * acc + (q0 * (1 - acc)).sum() * residual
+    np.testing.assert_allclose(marginal, p0, atol=1e-9)
+
+    # Monte-Carlo through the actual implementation
+    N = 4000
+    p = jnp.asarray(np.stack([np.stack([p0, p1])] * N))      # (N, 2, V)
+    q = jnp.asarray(np.stack([p0 * 0 + q0] * N))[:, None]    # (N, 1, V)
+    key = jax.random.PRNGKey(seed)
+    drafts = jax.random.categorical(
+        key, jnp.log(jnp.asarray(q0))[None, :].repeat(N, 0))[:, None]
+    n_acc, nxt, _ = rejection_sample(p, q, drafts, key, temperature=1.0)
+    emitted = np.where(np.asarray(n_acc) > 0, np.asarray(drafts[:, 0]),
+                       np.asarray(nxt))
+    counts = np.bincount(emitted, minlength=vocab) / N
+    assert np.abs(counts - p0).max() < 4.5 * np.sqrt(p0.max() / N) + 0.02
+
+
+def test_greedy_one_hot_path():
+    V = 8
+    p = jax.nn.one_hot(jnp.array([[3, 5, 1]]), V)                 # (1,3,V)
+    q = jax.nn.one_hot(jnp.array([[3, 0]]), V)                    # (1,2,V)
+    drafts = jnp.array([[3, 0]])
+    n, nxt, _ = rejection_sample(p, q, drafts, jax.random.PRNGKey(0), 0.0)
+    assert int(n[0]) == 1          # first accepted (argmax match), second not
+    assert int(nxt[0]) == 5        # corrected from p1's argmax
+
+
+def test_sigma_formula_vs_monte_carlo():
+    rng = np.random.default_rng(0)
+    for alpha in (0.3, 0.7, 0.95):
+        for gamma in (1, 3, 5):
+            acc = rng.random((200_000, gamma)) < alpha
+            n = np.cumprod(acc, 1).sum(1)
+            sigma_mc = (n + 1).mean() / (gamma + 1)
+            assert abs(sigma_mc - sigma_from_alpha(alpha, gamma)) < 5e-3
+
+
+def test_probs_from_logits_greedy_is_onehot():
+    logits = jnp.array([[0.1, 2.0, -1.0]])
+    p = probs_from_logits(logits, 0.0)
+    np.testing.assert_array_equal(np.asarray(p), [[0, 1, 0]])

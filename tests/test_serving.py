@@ -1,0 +1,81 @@
+"""Serving engine + sampling + target-efficiency measurement."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.autotune import AutoTuner
+from repro.core.target_efficiency import measure_target_efficiency
+from repro.models.model import Model
+from repro.serving.engine import ServingEngine
+from repro.serving.sampling import SamplingParams, sample_logits
+
+TCFG = ModelConfig("s-moe", "moe", 2, 128, 4, 2, 256, 512, num_experts=4,
+                   num_experts_per_tok=2, dtype="float32")
+DCFG = ModelConfig("s-draft", "dense", 2, 64, 2, 2, 128, 512, dtype="float32")
+
+
+def _models():
+    t, d = Model(TCFG), Model(DCFG)
+    return t, d, t.init(jax.random.PRNGKey(0)), d.init(jax.random.PRNGKey(1))
+
+
+def test_engine_serves_all_requests():
+    t, d, pt, pd = _models()
+    eng = ServingEngine(t, d, pt, pd, max_batch=4, gamma=2, force_sd=True)
+    uids = [eng.submit(np.arange(3, 10 + i), max_new_tokens=8)
+            for i in range(7)]
+    reports = eng.run()
+    assert len(eng.done) == 7
+    assert sum(r.batch for r in reports) == 7
+    assert all(len(eng.done[u].output) == 8 for u in uids)
+    assert all(r.stats is not None for r in reports)
+
+
+def test_engine_sd_matches_ar_greedy():
+    t, d, pt, pd = _models()
+    prompt = np.arange(3, 12)
+    outs = {}
+    for force in (True, False):
+        eng = ServingEngine(t, d, pt, pd, max_batch=1, gamma=3,
+                            force_sd=force)
+        uid = eng.submit(prompt, max_new_tokens=12)
+        eng.run()
+        outs[force] = eng.done[uid].output
+    np.testing.assert_array_equal(outs[True], outs[False])
+
+
+def test_tuner_integration_updates_alpha():
+    t, d, pt, pd = _models()
+    tuner = AutoTuner(TCFG, DCFG, alpha=0.9)
+    eng = ServingEngine(t, d, pt, pd, max_batch=4, tuner=tuner, force_sd=True)
+    for i in range(4):
+        eng.submit(np.arange(3, 11), max_new_tokens=6)
+    eng.run()
+    # random-weight pair: observed alpha ~0 drags the EMA down from 0.9
+    assert tuner.alpha < 0.9
+
+
+def test_sampling_params():
+    logits = jnp.asarray(np.random.default_rng(0).standard_normal((4, 32)))
+    greedy = sample_logits(logits, jax.random.PRNGKey(0),
+                           SamplingParams(temperature=0.0))
+    np.testing.assert_array_equal(np.asarray(greedy),
+                                  np.asarray(jnp.argmax(logits, -1)))
+    topk = sample_logits(logits, jax.random.PRNGKey(1),
+                         SamplingParams(temperature=1.0, top_k=3))
+    top3 = np.asarray(jnp.argsort(logits, -1)[:, -3:])
+    assert all(t in row for t, row in zip(np.asarray(topk), top3))
+    topp = sample_logits(logits, jax.random.PRNGKey(2),
+                         SamplingParams(temperature=1.0, top_p=0.5))
+    assert topp.shape == (4,)
+
+
+def test_measured_target_efficiency_in_range():
+    t, _, pt, _ = _models()
+    cache = t.init_cache(4, 64)
+    toks = jax.random.randint(jax.random.PRNGKey(2), (4, 16), 0, 512)
+    _, cache = t.prefill(pt, toks, cache)
+    te = measure_target_efficiency(t, pt, cache, gamma=4, iters=2)
+    assert 0.0 < te["target_efficiency"] <= 1.5   # CPU noise tolerance
+    assert te["T_T_1"] > 0 and te["T_T_gamma"] > 0
