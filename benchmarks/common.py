@@ -25,6 +25,9 @@ from repro.training.train_loop import init_train_state, make_train_step
 
 CACHE_DIR = os.environ.get("BENCH_MODEL_DIR", "results/bench_models")
 TRAIN_STEPS = int(os.environ.get("BENCH_TRAIN_STEPS", "220"))
+# drafting strategy for sigma/alpha measurement — any Proposer registry kind
+# ("model" | "eagle" | "none"); benchmarks/run.py --proposer sets this
+DEFAULT_PROPOSER = os.environ.get("BENCH_PROPOSER", "model")
 
 
 def _train(model: Model, steps: int, kind: str, seed: int):
@@ -65,16 +68,46 @@ def trained_pair(target_arch: str = "qwen2-57b-a14b", kind: str = "code"):
     return (t, pt), (d, pd)
 
 
+def draft_cost_config(proposer: str, target_cfg: ModelConfig,
+                      draft_cfg: ModelConfig) -> ModelConfig:
+    """The config whose forward time prices T_D in speedup formulas — must
+    match the drafter sigma was measured with ("eagle" is a one-block head
+    on the target, not the standalone small model)."""
+    if proposer == "eagle":
+        from repro.core.eagle import EagleHead
+        from repro.models.model import Model
+        return EagleHead(Model(target_cfg)).cfg
+    return draft_cfg
+
+
 def measure_sigma(target, params_t, draft, params_d, *, batch: int,
                   gamma: int, temperature: float, kind: str,
-                  max_new: int = 32, seed: int = 0):
-    """REAL sigma/alpha from the engine on a real prompt batch."""
-    from repro.core.spec_decode import SpecDecoder
+                  max_new: int = 32, seed: int = 0,
+                  proposer: str | None = None):
+    """REAL sigma/alpha from the engine on a real prompt batch, under any
+    registered drafting strategy (default: BENCH_PROPOSER or "model")."""
+    from repro.core.proposer import make_proposer
+    from repro.core.spec_decode import SDEngine
+
+    proposer = proposer if proposer is not None else DEFAULT_PROPOSER
+    from repro.core.eagle import EagleHead
+    if proposer == "eagle" and not isinstance(draft, EagleHead):
+        import warnings
+        warnings.warn(
+            "measure_sigma(proposer='eagle') was given a draft Model; "
+            "substituting a freshly initialized (UNTRAINED) EagleHead — "
+            "sigma/alpha will reflect an untrained head, not a tuned one",
+            stacklevel=2)
+        head = EagleHead(target)
+        draft, params_d = head, head.init(jax.random.PRNGKey(seed + 101))
     pb = prompt_batch(target.cfg.vocab_size, batch, kind=kind, seed=seed)
-    sd = SpecDecoder(target, draft, gamma=gamma, temperature=temperature)
-    _, stats = sd.generate(params_t, params_d, jnp.asarray(pb["tokens"]),
-                           max_new, lengths=jnp.asarray(pb["lengths"]),
-                           key=jax.random.PRNGKey(seed))
+    eng = SDEngine(target,
+                   make_proposer(proposer, target, draft,
+                                 temperature=temperature),
+                   gamma=gamma, temperature=temperature)
+    _, stats = eng.generate(params_t, params_d, jnp.asarray(pb["tokens"]),
+                            max_new, lengths=jnp.asarray(pb["lengths"]),
+                            key=jax.random.PRNGKey(seed))
     return stats
 
 

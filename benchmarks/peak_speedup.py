@@ -5,6 +5,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import Timer, csv_row, trained_pair, measure_sigma
 from repro.configs.registry import get_config
 from repro.core.simulator import Hardware, Simulator
@@ -26,15 +27,20 @@ def run() -> list:
         pairs[("mixtral", kind)] = trained_pair("mixtral-8x7b", kind)
 
     for model_name in ("qwen2", "mixtral"):
+        draft_cost = common.draft_cost_config(
+            common.DEFAULT_PROPOSER, full_t[model_name], full_d)
         for kind, ds in (("code", "humaneval-like"), ("chat", "mtbench-like")):
             (t, pt), (d, pd) = pairs[(model_name, kind)]
             for temp in (0.0, 1.0):
                 for gamma in (2, 3, 4):
                     stats = measure_sigma(t, pt, d, pd, batch=8, gamma=gamma,
-                                          temperature=temp, kind=kind)
+                                          temperature=temp, kind=kind,
+                                          proposer=common.DEFAULT_PROPOSER)
                     n += 1
-                    curve = [sim.sd_speedup(full_t[model_name], full_d, B,
-                                            gamma, stats.sigma)
+                    curve = [1.0 if common.DEFAULT_PROPOSER == "none"
+                             else sim.sd_speedup(full_t[model_name],
+                                                 draft_cost, B, gamma,
+                                                 stats.sigma)
                              for B in BATCHES]
                     i = int(np.argmax(curve))
                     t_ar = sim.forward_time(full_t[model_name], BATCHES[i], 1)
@@ -43,7 +49,8 @@ def run() -> list:
                         t0.us(n),
                         f"x={curve[i]:.2f};peak_B={BATCHES[i]};"
                         f"sigma={stats.sigma:.2f};alpha={stats.alpha:.2f};"
-                        f"T_AR_ms={t_ar*1e3:.2f}"))
+                        f"T_AR_ms={t_ar*1e3:.2f};"
+                        f"proposer={common.DEFAULT_PROPOSER}"))
 
     # Table 2 analogue: chip-count scaling (2 vs 4 chips):
     # larger groups cut absolute time but draft stays single-chip → x drops

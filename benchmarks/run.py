@@ -26,7 +26,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated substring filters")
+    from repro.core.proposer import registered_proposers
+    ap.add_argument("--proposer", default=None,
+                    choices=sorted(registered_proposers()),
+                    help="drafting strategy for sigma measurement "
+                         "(Proposer registry kind)")
     args = ap.parse_args()
+    if args.proposer:
+        # assign directly (not via env) so the flag wins regardless of
+        # whether benchmarks.common was already imported
+        import benchmarks.common as common
+        common.DEFAULT_PROPOSER = args.proposer
     filters = args.only.split(",") if args.only else None
 
     print("name,us_per_call,derived")

@@ -7,6 +7,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from benchmarks import common
 from benchmarks.common import Timer, csv_row, trained_pair, measure_sigma
 from repro.configs.registry import get_config
 from repro.core.simulator import Simulator
@@ -22,18 +23,23 @@ def run() -> list:
     (t, pt), (d, pd) = trained_pair(kind="code")
     t0 = Timer()
     n = 0
+    proposer = common.DEFAULT_PROPOSER
+    draft_cost = common.draft_cost_config(proposer, target_full, draft_full)
     for gamma in (2, 4):
         for B in BATCHES:
             stats = measure_sigma(t, pt, d, pd, batch=min(B, 16), gamma=gamma,
-                                  temperature=0.0, kind="code")
+                                  temperature=0.0, kind="code",
+                                  proposer=proposer)
             n += 1
-            spd = sim.sd_speedup(target_full, draft_full, B, gamma,
-                                 stats.sigma)
+            # "none" IS the AR baseline: x = T_AR/T_AR = 1 by definition
+            spd = 1.0 if proposer == "none" else sim.sd_speedup(
+                target_full, draft_cost, B, gamma, stats.sigma)
             eff = sim.target_efficiency(target_full, B, gamma)
             rows.append(csv_row(
                 f"fig2_qwen2moe_g{gamma}_B{B}", t0.us(n),
                 f"speedup={spd:.3f};target_eff={eff:.3f};"
-                f"sigma={stats.sigma:.3f};alpha={stats.alpha:.3f}"))
+                f"sigma={stats.sigma:.3f};alpha={stats.alpha:.3f};"
+                f"proposer={proposer}"))
     # trend assertions recorded as derived flags
     spds = [float(r.split("speedup=")[1].split(";")[0]) for r in rows
             if "_g4_" in r]

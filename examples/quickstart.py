@@ -14,7 +14,8 @@ import numpy as np
 from repro.configs.base import ModelConfig, TrainConfig
 from repro.configs.registry import get_config
 from repro.core.autotune import AutoTuner
-from repro.core.spec_decode import SpecDecoder, generate_ar
+from repro.core.proposer import make_proposer
+from repro.core.spec_decode import SDEngine, generate_ar
 from repro.data.pipeline import packed_batches, prompt_batch
 from repro.models.model import Model
 from repro.training.train_loop import init_train_state, make_train_step
@@ -45,10 +46,13 @@ def main():
     print("training draft (reduced Qwen2-0.5B)...")
     params_d = train(draft, 200, "code", seed=1)
 
-    # 3. batched speculative decoding — and the losslessness check
+    # 3. batched speculative decoding — one SDEngine session, any proposer
+    #    from the registry ("model" | "eagle" | "none") — and the
+    #    losslessness check against the AR baseline (the "none" path)
     pb = prompt_batch(tcfg.vocab_size, 8, kind="code", seed=7)
     prompts, lengths = jnp.asarray(pb["tokens"]), jnp.asarray(pb["lengths"])
-    sd = SpecDecoder(target, draft, gamma=4, temperature=0.0)
+    sd = SDEngine(target, make_proposer("model", target, draft),
+                  gamma=4, temperature=0.0)
     out_sd, stats = sd.generate(params_t, params_d, prompts, 32,
                                 lengths=lengths)
     out_ar = generate_ar(target, params_t, prompts, 32, lengths=lengths)

@@ -41,8 +41,10 @@ def main():
     # the tuner plans from the FULL Mixtral config on v5e
     tuner = AutoTuner(get_config("mixtral-8x7b"),
                       get_config("qwen2-0.5b"), alpha=0.6)
+    # one persistent decoding session per proposer kind — waves reuse the
+    # compiled SD rounds even as the tuner changes gamma between them
     eng = ServingEngine(target, draft, params_t, params_d, max_batch=8,
-                        tuner=tuner)
+                        tuner=tuner, proposer="model", seed=0)
     pb = prompt_batch(tcfg.vocab_size, 24, kind="chat", seed=5)
     for i in range(24):
         eng.submit(pb["tokens"][i][: pb["lengths"][i]], max_new_tokens=24)
@@ -50,7 +52,7 @@ def main():
     for r in eng.run():
         s = r.stats
         extra = (f"sigma={s.sigma:.2f} alpha={s.alpha:.2f} rounds={s.rounds}"
-                 if s else "AR mode")
+                 if r.used_sd and s else "AR mode")
         print(f"  wave B={r.batch} gamma={r.gamma} sd={r.used_sd} "
               f"{r.tokens_per_second:6.1f} tok/s  {extra}")
 
@@ -62,6 +64,10 @@ def main():
     print(f"measured target efficiency T(B,1)/T(B,5) = "
           f"{te['target_efficiency']:.2f} (CPU wall-clock)")
     print(f"tuner's final alpha estimate: {tuner.alpha:.2f}")
+    for kind, s in eng.session_stats().items():
+        print(f"session[{kind}]: constructed {s['constructions']}x for "
+              f"{len(eng.reports)} waves, gammas compiled "
+              f"{s['gammas_compiled']}, {len(s['traces'])} round traces")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Fast CI gate: the tier1 subset (fast, deterministic) with a hard timeout
+# so slow end-to-end decode tests never block iteration.
+#
+#   scripts/ci.sh              # tier1 only, 600s budget
+#   CI_TIMEOUT=300 scripts/ci.sh -k rejection
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+exec timeout "${CI_TIMEOUT:-600}" python -m pytest -q -m tier1 "$@"

@@ -16,9 +16,11 @@ The head reuses the target's embedding and unembedding — its own params are
 one fusion matrix + one block (~2 target layers' worth), matching the
 paper's T_D/T_T ≪ 1 requirement.
 
-``EagleSpecDecoder`` mirrors core/spec_decode.SpecDecoder (same rejection
-sampling, same cache discipline) with the feature-carry threaded through
-rounds; greedy losslessness is preserved by construction and tested.
+``EagleProposer`` plugs the head into the generic SD round
+(core/spec_decode.SDEngine) through the Proposer protocol: it declares
+``needs_hidden`` so the engine's verify pass hands it the target's hidden
+states, from which ``commit`` refreshes the feature carry.  Greedy
+losslessness is preserved by construction and tested.
 """
 from __future__ import annotations
 
@@ -26,11 +28,11 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.rejection import probs_from_logits, rejection_sample, sample_from
-from repro.core.spec_decode import SDStats
+from repro.core.proposer import register_proposer, stack_drafts
+from repro.core.rejection import probs_from_logits, sample_from
+from repro.core.spec_decode import SDEngine
 from repro.models import transformer as tfm
 from repro.models.layers import dense_init
 from repro.models.model import Model
@@ -86,114 +88,73 @@ class EagleHead:
         logits = tgt._head(params_target, x)[:, 0]          # tied target head
         return logits, x[:, 0], new_cache
 
-    # ----------------------------------------------------------- prefill feat
-    def prefill(self, params_target, params, prompts, max_seq, *,
-                lengths=None):
-        """Prefill the target AND capture its last hidden feature."""
-        tgt = self.target
-        B, T = prompts.shape
-        if lengths is None:
-            lengths = jnp.full((B,), T, jnp.int32)
-        t_cache = tgt.init_cache(B, max_seq)
-        # run prefill via extend_with_hidden from an empty cache
-        logits, hidden, t_cache = tgt.extend_with_hidden(
-            params_target, prompts, t_cache, collect=True)
-        t_cache = tgt.commit(t_cache, lengths, collected=True)
-        last_h = jnp.take_along_axis(
-            hidden, (lengths - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
-        last_logits = jnp.take_along_axis(
-            logits, (lengths - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
-        e_cache = self.init_cache(B, max_seq)
-        e_cache = dict(e_cache, lengths=lengths.astype(jnp.int32))
-        return last_logits, last_h, t_cache, e_cache
 
+@register_proposer("eagle")
+class EagleProposer:
+    """Proposer that chains an EagleHead on its own predicted features.
 
-class EagleSpecDecoder:
-    """SpecDecoder with an EagleHead draft (feature-carry across rounds)."""
+    State: ``{"cache": head_kv_cache, "feat": (B, d) feature carry}``; the
+    carry is initialised from the target prefill's last hidden state and
+    refreshed each round from the verify pass (``needs_hidden``).
+    """
 
-    def __init__(self, target: Model, head: EagleHead, gamma: int = 4,
+    kind = "eagle"
+    needs_hidden = True
+
+    def __init__(self, target: Model, draft: Optional[EagleHead] = None,
                  temperature: float = 0.0):
         assert not target.cfg.is_recurrent, \
             "Eagle feature-carry assumes attention targets"
-        self.target, self.head = target, head
-        self.gamma, self.temperature = gamma, temperature
-        self._round_jit = jax.jit(self._round)
+        if draft is not None and not isinstance(draft, EagleHead):
+            raise TypeError("EagleProposer draft must be an EagleHead "
+                            f"(got {type(draft).__name__})")
+        self.target = target
+        self.head = draft if draft is not None else EagleHead(target)
+        self.temperature = temperature
 
-    def _round(self, params_t, params_e, t_cache, e_cache, last_token,
-               last_feat, key):
-        gamma = self.gamma
-        B = last_token.shape[0]
-        key, k_rej = jax.random.split(key)
-        base_len = t_cache["lengths"]
+    def init_state(self, params, prompts, max_seq, *, lengths=None,
+                   last_hidden=None):
+        B, T = prompts.shape
+        if lengths is None:
+            lengths = jnp.full((B,), T, jnp.int32)
+        cache = self.head.init_cache(B, max_seq)
+        cache = dict(cache, lengths=lengths.astype(jnp.int32))
+        return {"cache": cache, "feat": last_hidden}
 
-        # PROPOSE: chain the head on its own predicted features
-        feat, token = last_feat, last_token
-        ec = e_cache
+    def propose(self, params, state, last_token, gamma, key):
+        feat, token, ec = state["feat"], last_token, state["cache"]
         qs, ds = [], []
-        for i in range(gamma):
-            logits, feat, ec = self.head.step(params_t, params_e, feat,
-                                              token, ec)
+        for _ in range(gamma):
+            logits, feat, ec = self.head.step(params["target"],
+                                              params["draft"], feat, token, ec)
             key, ks = jax.random.split(key)
             q = probs_from_logits(logits, self.temperature)
             token = sample_from(q, ks, self.temperature)
             qs.append(q)
             ds.append(token)
-        drafts = jnp.stack(ds, 1)
-        q_dist = jnp.stack(qs, 1)
+        drafts, q_dist = stack_drafts(ds, qs, last_token.shape[0],
+                                      self.target.cfg.vocab_size)
+        return drafts, q_dist, {"cache": ec, "feat": state["feat"]}
 
-        # VERIFY (with hidden capture)
-        verify_tokens = jnp.concatenate([last_token[:, None], drafts], 1)
-        logits_v, hidden_v, pend = self.target.extend_with_hidden(
-            params_t, verify_tokens, t_cache, collect=True)
-        p_dist = probs_from_logits(logits_v, self.temperature)
+    def commit(self, params, state, *, base_len, n_accept, n_commit,
+               verify_tokens, hidden):
+        # eagle cache is attention-only → lengths rollback; feature carry
+        # refreshes to the hidden state of the LAST VERIFIED committed token
+        cache = dict(state["cache"], lengths=base_len + n_commit)
+        feat = jnp.take_along_axis(
+            hidden, n_accept[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+        return {"cache": cache, "feat": feat}
 
-        n_accept, next_token, _ = rejection_sample(
-            p_dist, q_dist, drafts, k_rej, self.temperature)
-        n_commit = n_accept + 1
-        t_cache = self.target.commit(pend, n_commit, collected=True)
-        # eagle cache: attention-only → lengths rollback
-        e_cache = dict(ec, lengths=base_len + n_commit)
-        # feature of the LAST VERIFIED committed token = hidden at index n
-        new_feat = jnp.take_along_axis(
-            hidden_v, n_accept[:, None, None].astype(jnp.int32), axis=1)[:, 0]
 
-        slot = jnp.arange(gamma + 1)[None, :]
-        drafts_pad = jnp.concatenate([drafts, jnp.zeros((B, 1), drafts.dtype)], 1)
-        committed = jnp.where(slot < n_accept[:, None], drafts_pad,
-                              next_token[:, None])
-        return (t_cache, e_cache, next_token, new_feat, committed, n_commit,
-                jnp.sum(n_accept), key)
+class EagleSpecDecoder(SDEngine):
+    """Legacy shim: target + EagleHead == SDEngine("eagle").
 
-    def generate(self, params_t, params_e, prompts, max_new_tokens, *,
-                 lengths=None, key=None) -> Tuple[np.ndarray, SDStats]:
-        B, Tp = prompts.shape
-        gamma = self.gamma
-        key = key if key is not None else jax.random.PRNGKey(0)
-        max_seq = Tp + max_new_tokens + gamma + 2
-        last_logits, feat, t_cache, e_cache = self.head.prefill(
-            params_t, params_e, prompts, max_seq, lengths=lengths)
-        key, k0 = jax.random.split(key)
-        last_token = sample_from(probs_from_logits(last_logits,
-                                                   self.temperature), k0,
-                                 self.temperature)
-        out = np.zeros((B, max_new_tokens + gamma + 1), np.int32)
-        out[:, 0] = np.asarray(last_token)
-        n_out = np.ones((B,), np.int32)
-        stats = SDStats()
-        while int(n_out.min()) < max_new_tokens:
-            (t_cache, e_cache, last_token, feat, committed, n_commit, n_acc,
-             key) = self._round_jit(params_t, params_e, t_cache, e_cache,
-                                    last_token, feat, key)
-            committed = np.asarray(committed)
-            ncn = np.asarray(n_commit)
-            for b in range(B):
-                n = int(ncn[b])
-                w = min(n, out.shape[1] - n_out[b])
-                out[b, n_out[b]: n_out[b] + w] = committed[b, :w]
-                n_out[b] += w
-            stats.rounds += 1
-            stats.generated += int(ncn.sum())
-            stats.max_possible += (gamma + 1) * B
-            stats.accept_events += int(np.asarray(n_acc))
-            stats.draft_events += gamma * B
-        return out[:, :max_new_tokens], stats
+    Prefer ``SDEngine(target, make_proposer("eagle", target, head))``.
+    """
+
+    def __init__(self, target: Model, head: EagleHead, gamma: int = 4,
+                 temperature: float = 0.0):
+        super().__init__(target,
+                         EagleProposer(target, head, temperature=temperature),
+                         gamma=gamma, temperature=temperature)
+        self.head = head

@@ -1,0 +1,233 @@
+"""Unified Proposer API — the pluggable drafting seam of the SD engine.
+
+The paper's claim is about *serving regimes*, not one drafting strategy:
+speedup depends on batch size and target efficiency for ANY drafter whose
+T_D/T_T is small.  So drafting is a protocol, and the engine
+(core/spec_decode.SDEngine) is generic over it:
+
+    proposer = make_proposer("model" | "eagle" | "none", target, draft)
+    engine   = SDEngine(target, proposer, gamma=4)
+    out, stats = engine.generate(params_t, params_d, prompts, max_new)
+
+Protocol (all methods are pure and trace-safe; ``params`` is always the
+dict ``{"target": params_t, "draft": params_p}``):
+
+  * ``init_state(params, prompts, max_seq, *, lengths, last_hidden)``
+    → opaque pytree ``state`` (draft cache, feature carry, ...) built once
+    per generation after the target prefill.  ``last_hidden`` is the
+    target's pre-head hidden state at the last prompt position, provided
+    iff the proposer sets ``needs_hidden``.
+  * ``propose(params, state, last_token, gamma, key)``
+    → ``(drafts (B, g), q_dist (B, g, V), state)`` with g <= gamma.  The
+    engine infers the actual speculation width from ``drafts``, so a
+    degenerate proposer may return width 0 (the AR baseline).
+  * ``commit(params, state, *, base_len, n_accept, n_commit,
+    verify_tokens, hidden)`` → reconciled ``state`` after rejection
+    sampling.  ``hidden`` is the target's (B, gamma+1, d) verify hidden
+    states iff ``needs_hidden``.
+
+Registry: ``register_proposer(name)`` + ``make_proposer(name, ...)`` map
+strings to factories so serving configs / CLIs select drafters without
+importing their modules ("eagle" is resolved lazily).  Future drafters —
+prefetch-aware (SP-MoE, arXiv:2510.10302) or utility-driven
+(arXiv:2506.20675) speculation — drop in behind the same three methods.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Any, Callable, Dict, Optional, Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rejection import probs_from_logits, sample_from
+
+
+def stack_drafts(ds, qs, batch: int, vocab: int):
+    """Stack per-step draft tokens/distributions into the (B, g) / (B, g, V)
+    arrays `propose` returns, handling the zero-step (g=0) case."""
+    drafts = (jnp.stack(ds, axis=1) if ds
+              else jnp.zeros((batch, 0), jnp.int32))
+    q_dist = (jnp.stack(qs, axis=1) if qs
+              else jnp.zeros((batch, 0, vocab), jnp.float32))
+    return drafts, q_dist
+
+
+@runtime_checkable
+class Proposer(Protocol):
+    """Structural protocol every drafter implements (see module docstring)."""
+
+    kind: str
+    needs_hidden: bool
+
+    def init_state(self, params: dict, prompts: jnp.ndarray, max_seq: int, *,
+                   lengths: Optional[jnp.ndarray] = None,
+                   last_hidden: Optional[jnp.ndarray] = None) -> Any:
+        ...
+
+    def propose(self, params: dict, state: Any, last_token: jnp.ndarray,
+                gamma: int, key: jax.Array
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, Any]:
+        ...
+
+    def commit(self, params: dict, state: Any, *, base_len: jnp.ndarray,
+               n_accept: jnp.ndarray, n_commit: jnp.ndarray,
+               verify_tokens: jnp.ndarray,
+               hidden: Optional[jnp.ndarray]) -> Any:
+        ...
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Callable[..., "Proposer"]] = {}
+# kinds whose factory lives in a module we only import on first use, so the
+# serving engine never needs conditional imports in its hot path
+_LAZY_KINDS = {"eagle": "repro.core.eagle"}
+
+
+def register_proposer(name: str, factory: Optional[Callable] = None):
+    """Register ``factory(target, draft, temperature) -> Proposer``.
+
+    Usable directly or as a decorator::
+
+        @register_proposer("mykind")
+        def _make(target, draft, temperature=0.0): ...
+    """
+    def _register(f):
+        _REGISTRY[name] = f
+        return f
+
+    return _register(factory) if factory is not None else _register
+
+
+def registered_proposers() -> Tuple[str, ...]:
+    """All selectable kinds (registered + lazily importable)."""
+    return tuple(sorted(set(_REGISTRY) | set(_LAZY_KINDS)))
+
+
+def make_proposer(kind: str, target, draft=None, *,
+                  temperature: float = 0.0) -> "Proposer":
+    """Build a registered proposer by name.
+
+    ``draft`` is kind-specific: a draft ``Model`` for "model", an
+    ``EagleHead`` (or None to build one) for "eagle", ignored for "none".
+    """
+    if kind not in _REGISTRY and kind in _LAZY_KINDS:
+        importlib.import_module(_LAZY_KINDS[kind])   # module self-registers
+    if kind not in _REGISTRY:
+        raise KeyError(
+            f"unknown proposer {kind!r}; registered: {registered_proposers()}")
+    return _REGISTRY[kind](target, draft, temperature=temperature)
+
+
+# ---------------------------------------------------------------------------
+# "model": a standalone small draft model (the paper's main configuration)
+# ---------------------------------------------------------------------------
+
+class ModelProposer:
+    """Drafts with an autoregressive small model (paper Sec. 3.1).
+
+    State: ``{"cache": draft_cache}`` between rounds; within a round the
+    returned work-state additionally carries the pre-round snapshot that
+    recurrent drafts need to re-commit from (their propose loop advances
+    state destructively).
+    """
+
+    kind = "model"
+    needs_hidden = False
+
+    def __init__(self, target, draft, temperature: float = 0.0):
+        if draft is None:
+            raise ValueError("ModelProposer requires a draft Model")
+        self.draft = draft
+        self.temperature = temperature
+
+    def init_state(self, params, prompts, max_seq, *, lengths=None,
+                   last_hidden=None):
+        B = prompts.shape[0]
+        cache = self.draft.init_cache(B, max_seq)
+        _, cache = self.draft.prefill(params["draft"], prompts, cache,
+                                      lengths=lengths)
+        return {"cache": cache}
+
+    def propose(self, params, state, last_token, gamma, key):
+        """gamma single-token draft forwards + one extra that writes the
+        last draft's KV so the cache is complete on full acceptance."""
+        params_d = params["draft"]
+        recurrent = self.draft.cfg.is_recurrent
+        c = state["cache"]
+        snapshot = c if recurrent else None          # pre-round state
+        token = last_token
+        qs, ds = [], []
+        for _ in range(gamma):
+            if recurrent:
+                logits, pend = self.draft.extend(params_d, token[:, None], c,
+                                                 collect=True)
+                c = self.draft.commit(pend, jnp.ones_like(c["lengths"]),
+                                      collected=True)
+            else:
+                logits, c = self.draft.extend(params_d, token[:, None], c)
+                c = dict(c, lengths=c["lengths"] + 1)
+            key, k_s = jax.random.split(key)
+            q = probs_from_logits(logits[:, 0], self.temperature)
+            token = sample_from(q, k_s, self.temperature)
+            qs.append(q)
+            ds.append(token)
+        if recurrent:
+            _, pend = self.draft.extend(params_d, token[:, None], c,
+                                        collect=True)
+            c = self.draft.commit(pend, jnp.ones_like(c["lengths"]),
+                                  collected=True)
+        else:
+            _, c = self.draft.extend(params_d, token[:, None], c)
+        drafts, q_dist = stack_drafts(ds, qs, last_token.shape[0],
+                                      self.draft.cfg.vocab_size)
+        return drafts, q_dist, {"cache": c, "snapshot": snapshot}
+
+    def commit(self, params, state, *, base_len, n_accept, n_commit,
+               verify_tokens, hidden):
+        if self.draft.cfg.is_recurrent:
+            # re-run from the pre-round snapshot and gather accepted state
+            _, pend = self.draft.extend(params["draft"], verify_tokens,
+                                        dict(state["snapshot"]), collect=True)
+            cache = self.draft.commit(pend, n_commit, collected=True)
+        else:
+            # attention cache: rejected-suffix KV left stale (position-masked)
+            cache = dict(state["cache"], lengths=base_len + n_commit)
+        return {"cache": cache}
+
+
+# ---------------------------------------------------------------------------
+# "none": the degenerate drafter — SD round with zero drafts IS plain AR
+# ---------------------------------------------------------------------------
+
+class NoneProposer:
+    """Zero-width proposer: the round degenerates to one target forward of
+    ``last_token`` and a sample from its distribution — exactly the AR
+    baseline (T_AR in the paper's speedup definition), sharing the engine
+    loop, cache discipline, and SDStats with real SD."""
+
+    kind = "none"
+    needs_hidden = False
+
+    def __init__(self, target, draft=None, temperature: float = 0.0):
+        self.vocab_size = target.cfg.vocab_size
+
+    def init_state(self, params, prompts, max_seq, *, lengths=None,
+                   last_hidden=None):
+        return None
+
+    def propose(self, params, state, last_token, gamma, key):
+        B = last_token.shape[0]
+        return (jnp.zeros((B, 0), jnp.int32),
+                jnp.zeros((B, 0, self.vocab_size), jnp.float32), state)
+
+    def commit(self, params, state, *, base_len, n_accept, n_commit,
+               verify_tokens, hidden):
+        return state
+
+
+register_proposer("model", ModelProposer)
+register_proposer("none", NoneProposer)

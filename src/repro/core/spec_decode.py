@@ -1,15 +1,24 @@
 """Batched speculative-decoding engine (the paper's serving mechanism).
 
-One SD round (Sec. 3.1):
-  1. PROPOSE  — the draft model autoregressively emits gamma tokens per
-     sequence (gamma+1 draft forwards of one token: the last one only
-     writes d_gamma's KV so the draft cache stays aligned on full accept).
-  2. VERIFY   — the target model processes [last_token, d_1..d_gamma]
-     (gamma+1 tokens) in ONE forward, yielding gamma+1 next-token
-     distributions.
+One SD round (Sec. 3.1), generic over any registered Proposer
+(core/proposer.py):
+
+  1. PROPOSE  — ``proposer.propose`` emits g <= gamma draft tokens per
+     sequence with their draft distributions (a small model, an EAGLE
+     head, or nothing at all for the AR baseline).
+  2. VERIFY   — the target model processes [last_token, d_1..d_g]
+     (g+1 tokens) in ONE forward, yielding g+1 next-token distributions.
   3. REJECT   — batched rejection sampling (rejection.py) accepts a per-
      sequence prefix of the drafts and emits one extra token (residual
-     sample or bonus).  n_commit = n_accept + 1 ∈ [1, gamma+1].
+     sample or bonus).  n_commit = n_accept + 1 ∈ [1, g+1].
+  4. COMMIT   — target cache commit + ``proposer.commit`` reconcile both
+     sides to the accepted prefix.
+
+The AR baseline is the degenerate g=0 instance of the SAME loop (the
+"none" proposer): the round collapses to one target forward of
+``last_token`` plus a sample — so SD and AR timings come from identical
+machinery, which is what the paper's speedup definition x = T_AR/T_SD
+requires.
 
 Cache discipline:
   * target/draft attention KV: fresh tokens are written at offsets
@@ -21,20 +30,24 @@ Cache discipline:
     a pre-round snapshot (γ+1 cheap draft tokens) since their propose loop
     advances state destructively.
 
-The engine never mixes tokens across sequences — per-sequence lengths make
-the batch ragged, exactly like continuous batching in vLLM.
+Compile caching: each SDEngine instance is a long-lived *decoding
+session*.  Per gamma it builds the fused round once (``_round_cache``)
+and jax.jit then caches per batch/sequence shape; ``trace_log`` records
+every (gamma, batch) retrace so serving code (and tests) can assert
+reuse.  The engine never mixes tokens across sequences — per-sequence
+lengths make the batch ragged, exactly like continuous batching in vLLM.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.proposer import Proposer, make_proposer
 from repro.core.rejection import probs_from_logits, rejection_sample, sample_from
 from repro.models.model import Model
 
@@ -46,7 +59,8 @@ class SDStats:
     max_possible: int = 0                   # rounds * (gamma+1) * B
     accept_events: int = 0                  # accepted draft tokens
     draft_events: int = 0                   # proposed draft tokens
-    propose_time: float = 0.0
+    round_time: float = 0.0                 # wall time across all rounds
+    propose_time: float = 0.0               # per-phase (timed=True only)
     verify_time: float = 0.0
     reject_time: float = 0.0
 
@@ -59,134 +73,141 @@ class SDStats:
         return self.accept_events / max(self.draft_events, 1)
 
 
-def _gather_snapshot(snaps, n_commit):
-    """snaps: pytree stacked (gamma+1, P, B, ...); pick index n_commit-1 per seq."""
-    idx = n_commit - 1
+class SDEngine:
+    """One persistent decoding session: a target model + one Proposer.
 
-    def g(a):
-        moved = jnp.moveaxis(a, 2, 0)                   # (B, G+1, P, ...)
-        sel = jax.vmap(lambda ab, n: ab[n])(moved, idx)
-        return jnp.moveaxis(sel, 0, 1)                  # (G+1→, ...) -> (P,B,...)
+    The propose/verify/reject/commit round is generic over the proposer;
+    compiled rounds are cached per gamma (and, via jit, per shape), so a
+    serving engine can hold one SDEngine per proposer kind and change
+    gamma between waves without rebuilding anything.
+    """
 
-    return jax.tree.map(g, snaps)
-
-
-class SpecDecoder:
-    """Pairs a target and a draft model for batched speculative decoding."""
-
-    def __init__(self, target: Model, draft: Model, gamma: int = 4,
-                 temperature: float = 0.0):
+    def __init__(self, target: Model, proposer: Proposer, *,
+                 gamma: int = 4, temperature: float = 0.0):
         self.target = target
-        self.draft = draft
+        self.proposer = proposer
         self.gamma = gamma
         self.temperature = temperature
-        self._round_jit = jax.jit(self._round)
+        self._round_cache: Dict[int, Callable] = {}      # gamma -> jitted round
+        self._stage_cache: Dict[int, Tuple] = {}         # gamma -> stage jits
+        self.trace_log: List[Tuple[int, int]] = []       # (gamma, B) per trace
 
-    # ------------------------------------------------------------- one round
-    def _propose(self, params_d, draft_cache, last_token, key):
-        """gamma+1 single-token draft forwards; returns drafts, q-dists and
-        the draft cache with all gamma+1 tokens written (lengths NOT bumped
-        for attention slots; recurrent slots committed per step)."""
-        gamma = self.gamma
-        recurrent = self.draft.cfg.is_recurrent
-        c = draft_cache
-        token = last_token
-        qs, ds = [], []
-        snapshot = None
-        if recurrent:
-            snapshot = c                                    # pre-round state
-        for i in range(gamma):
-            if recurrent:
-                logits, pend = self.draft.extend(params_d, token[:, None], c,
-                                                 collect=True)
-                c = self.draft.commit(pend, jnp.ones_like(c["lengths"]),
-                                      collected=True)
+    def compiled_gammas(self) -> List[int]:
+        """Gammas with a built round (fused or staged) in this session."""
+        return sorted(set(self._round_cache) | set(self._stage_cache))
+
+    # ----------------------------------------------------------- round pieces
+    def _stages(self, gamma: int):
+        """(propose, verify, finalize) pure stage functions for one gamma."""
+        target, proposer, temp = self.target, self.proposer, self.temperature
+
+        def propose(params, p_state, last_token, k_prop):
+            return proposer.propose(params, p_state, last_token, gamma, k_prop)
+
+        def verify(params_t, t_cache, last_token, drafts):
+            verify_tokens = jnp.concatenate([last_token[:, None], drafts], 1)
+            if proposer.needs_hidden:
+                logits, hidden, pend = target.extend_with_hidden(
+                    params_t, verify_tokens, t_cache, collect=True)
             else:
-                logits, c = self.draft.extend(params_d, token[:, None], c)
-                c = dict(c, lengths=c["lengths"] + 1)
-            key, k_s = jax.random.split(key)
-            q = probs_from_logits(logits[:, 0], self.temperature)
-            token = sample_from(q, k_s, self.temperature)
-            qs.append(q)
-            ds.append(token)
-        # write d_gamma's KV so the cache is complete on full acceptance
-        if recurrent:
-            logits, pend = self.draft.extend(params_d, token[:, None], c, collect=True)
-            c = self.draft.commit(pend, jnp.ones_like(c["lengths"]), collected=True)
-        else:
-            _, c = self.draft.extend(params_d, token[:, None], c)
-        drafts = jnp.stack(ds, axis=1)                      # (B, gamma)
-        q_dist = jnp.stack(qs, axis=1)                      # (B, gamma, V)
-        return drafts, q_dist, c, snapshot
+                logits, pend = target.extend(params_t, verify_tokens, t_cache,
+                                             collect=True)
+                hidden = None
+            return probs_from_logits(logits, temp), hidden, pend
 
-    def _round(self, params_t, params_d, target_cache, draft_cache,
-               last_token, key):
-        gamma = self.gamma
-        B = last_token.shape[0]
-        key, k_prop, k_rej = jax.random.split(key, 3)
-        base_len = target_cache["lengths"]
+        def finalize(params, pend, p_state, base_len, p_dist, q_dist, drafts,
+                     hidden, last_token, k_rej):
+            B, g = drafts.shape
+            n_accept, next_token, _ = rejection_sample(
+                p_dist, q_dist, drafts, k_rej, temp)
+            n_commit = n_accept + 1
+            t_cache = target.commit(pend, n_commit, collected=True)
+            verify_tokens = jnp.concatenate([last_token[:, None], drafts], 1)
+            p_state = proposer.commit(
+                params, p_state, base_len=base_len, n_accept=n_accept,
+                n_commit=n_commit, verify_tokens=verify_tokens, hidden=hidden)
+            # committed new tokens this round: [d_1..d_n, next] (n_commit each)
+            slot = jnp.arange(g + 1)[None, :]
+            drafts_pad = jnp.concatenate(
+                [drafts, jnp.zeros((B, 1), drafts.dtype)], 1)
+            committed = jnp.where(slot < n_accept[:, None], drafts_pad,
+                                  next_token[:, None])          # (B, g+1)
+            return (t_cache, p_state, next_token, committed, n_commit,
+                    jnp.sum(n_accept))
 
-        drafts, q_dist, d_cache, d_snapshot = self._propose(
-            params_d, draft_cache, last_token, k_prop)
+        return propose, verify, finalize
 
-        # VERIFY: one target forward over [last, d_1..d_gamma]
-        verify_tokens = jnp.concatenate([last_token[:, None], drafts], axis=1)
-        logits_v, pend_t = self.target.extend(
-            params_t, verify_tokens, target_cache, collect=True)
-        p_dist = probs_from_logits(logits_v, self.temperature)  # (B, γ+1, V)
+    def _round_fn(self, gamma: int) -> Callable:
+        """Fused jitted round for one gamma (built once per session)."""
+        fn = self._round_cache.get(gamma)
+        if fn is None:
+            propose, verify, finalize = self._stages(gamma)
 
-        # REJECT
-        n_accept, next_token, accept_mask = rejection_sample(
-            p_dist, q_dist, drafts, k_rej, self.temperature)
-        n_commit = n_accept + 1
+            def round_fn(params, t_cache, p_state, last_token, k_prop, k_rej):
+                # trace-time side effect: lets callers assert compile reuse
+                self.trace_log.append((gamma, int(last_token.shape[0])))
+                base_len = t_cache["lengths"]
+                drafts, q_dist, p_work = propose(params, p_state, last_token,
+                                                 k_prop)
+                p_dist, hidden, pend = verify(params["target"], t_cache,
+                                              last_token, drafts)
+                return finalize(params, pend, p_work, base_len, p_dist,
+                                q_dist, drafts, hidden, last_token, k_rej)
 
-        # COMMIT target
-        t_cache = self.target.commit(pend_t, n_commit, collected=True)
+            fn = jax.jit(round_fn)
+            self._round_cache[gamma] = fn
+        return fn
 
-        # COMMIT draft
-        if self.draft.cfg.is_recurrent:
-            # re-run from the pre-round snapshot and gather accepted state
-            _, pend_d = self.draft.extend(
-                params_d, verify_tokens,
-                dict(d_snapshot), collect=True)
-            d_cache = self.draft.commit(pend_d, n_commit, collected=True)
-        else:
-            d_cache = dict(d_cache, lengths=base_len + n_commit)
+    def _staged_jits(self, gamma: int):
+        """Separately-jitted stages for timed=True: syncing between them
+        gives real per-phase wall times (at the cost of fusion)."""
+        fns = self._stage_cache.get(gamma)
+        if fns is None:
+            propose, verify, finalize = self._stages(gamma)
 
-        # committed new tokens this round: [d_1..d_n, next]  (n_commit each)
-        slot = jnp.arange(gamma + 1)[None, :]
-        drafts_pad = jnp.concatenate([drafts, jnp.zeros((B, 1), drafts.dtype)], 1)
-        committed = jnp.where(slot < n_accept[:, None], drafts_pad,
-                              next_token[:, None])          # (B, γ+1)
-        return (t_cache, d_cache, next_token, committed, n_commit,
-                jnp.sum(n_accept), key)
+            def propose_logged(params, p_state, last_token, k_prop):
+                self.trace_log.append((gamma, int(last_token.shape[0])))
+                return propose(params, p_state, last_token, k_prop)
+
+            fns = (jax.jit(propose_logged), jax.jit(verify),
+                   jax.jit(finalize))
+            self._stage_cache[gamma] = fns
+        return fns
 
     # --------------------------------------------------------------- prefill
-    def prefill(self, params_t, params_d, prompts: jnp.ndarray,
-                max_seq: int, *, lengths=None, key=None,
+    def prefill(self, params_t, params_p, prompts: jnp.ndarray, max_seq: int,
+                *, lengths=None, key=None,
                 prefill_kwargs: Optional[dict] = None):
-        """Prefill both models; returns (target_cache, draft_cache, last_token)."""
+        """Prefill target + proposer; returns (t_cache, p_state, last_token)."""
         B = prompts.shape[0]
         kw = prefill_kwargs or {}
+        params = {"target": params_t, "draft": params_p}
         t_cache = self.target.init_cache(B, max_seq)
-        d_cache = self.draft.init_cache(B, max_seq)
-        last_t, t_cache = self.target.prefill(params_t, prompts, t_cache,
-                                              lengths=lengths, **kw)
-        _, d_cache = self.draft.prefill(params_d, prompts, d_cache,
-                                        lengths=lengths)
+        if self.proposer.needs_hidden:
+            last_t, last_hidden, t_cache = self.target.prefill_with_hidden(
+                params_t, prompts, t_cache, lengths=lengths, **kw)
+        else:
+            last_t, t_cache = self.target.prefill(params_t, prompts, t_cache,
+                                                  lengths=lengths, **kw)
+            last_hidden = None
+        p_state = self.proposer.init_state(params, prompts, max_seq,
+                                           lengths=lengths,
+                                           last_hidden=last_hidden)
         key = key if key is not None else jax.random.PRNGKey(0)
         p = probs_from_logits(last_t, self.temperature)
         last_token = sample_from(p, key, self.temperature)
-        return t_cache, d_cache, last_token
+        return t_cache, p_state, last_token
 
     # -------------------------------------------------------------- generate
     def generate(
         self,
         params_t,
-        params_d,
+        params_p,
         prompts: jnp.ndarray,               # (B, T_prompt)
         max_new_tokens: int,
         *,
+        gamma: Optional[int] = None,
+        max_seq: Optional[int] = None,
         lengths=None,
         key: Optional[jax.Array] = None,
         prefill_kwargs: Optional[dict] = None,
@@ -194,12 +215,15 @@ class SpecDecoder:
     ) -> Tuple[np.ndarray, SDStats]:
         """Run SD rounds until every sequence has >= max_new_tokens."""
         B, Tp = prompts.shape
-        gamma = self.gamma
+        gamma = self.gamma if gamma is None else gamma
         key = key if key is not None else jax.random.PRNGKey(0)
-        max_seq = Tp + max_new_tokens + gamma + 2
-        t_cache, d_cache, last_token = self.prefill(
-            params_t, params_d, prompts, max_seq, lengths=lengths, key=key,
+        if max_seq is None:
+            max_seq = Tp + max_new_tokens + gamma + 2
+        key, k_pre = jax.random.split(key)
+        t_cache, p_state, last_token = self.prefill(
+            params_t, params_p, prompts, max_seq, lengths=lengths, key=k_pre,
             prefill_kwargs=prefill_kwargs)
+        params = {"target": params_t, "draft": params_p}
 
         out = np.zeros((B, max_new_tokens + gamma + 1), np.int32)
         n_out = np.zeros((B,), np.int32)
@@ -208,52 +232,98 @@ class SpecDecoder:
         n_out += 1
 
         stats = SDStats()
+        round_fn = None if timed else self._round_fn(gamma)
+        stages = self._staged_jits(gamma) if timed else None
         while int(n_out.min()) < max_new_tokens:
-            t0 = time.perf_counter()
-            (t_cache, d_cache, last_token, committed, n_commit, n_acc, key) = \
-                self._round_jit(params_t, params_d, t_cache, d_cache,
-                                last_token, key)
-            committed = np.asarray(committed)
-            n_commit_np = np.asarray(n_commit)
+            key, k_prop, k_rej = jax.random.split(key, 3)
+            t_round = time.perf_counter()
             if timed:
-                jax.block_until_ready(last_token)
+                j_prop, j_verify, j_fin = stages
+                base_len = t_cache["lengths"]
+                t0 = time.perf_counter()
+                drafts, q_dist, p_work = j_prop(params, p_state, last_token,
+                                                k_prop)
+                jax.block_until_ready(drafts)
+                stats.propose_time += time.perf_counter() - t0
+                t0 = time.perf_counter()
+                p_dist, hidden, pend = j_verify(params["target"], t_cache,
+                                                last_token, drafts)
+                jax.block_until_ready(p_dist)
                 stats.verify_time += time.perf_counter() - t0
+                t0 = time.perf_counter()
+                (t_cache, p_state, last_token, committed, n_commit, n_acc) = \
+                    j_fin(params, pend, p_work, base_len, p_dist, q_dist,
+                          drafts, hidden, last_token, k_rej)
+                jax.block_until_ready(committed)
+                stats.reject_time += time.perf_counter() - t0
+            else:
+                (t_cache, p_state, last_token, committed, n_commit, n_acc) = \
+                    round_fn(params, t_cache, p_state, last_token, k_prop,
+                             k_rej)
+            committed = np.asarray(committed)        # device sync
+            n_commit_np = np.asarray(n_commit)
+            stats.round_time += time.perf_counter() - t_round
             for b in range(B):
                 n = int(n_commit_np[b])
                 w = min(n, out.shape[1] - n_out[b])
                 out[b, n_out[b]: n_out[b] + w] = committed[b, :w]
                 n_out[b] += w
+            width = committed.shape[1]               # actual g + 1
             stats.rounds += 1
             stats.generated += int(n_commit_np.sum())
+            # sigma is accounted against the REQUESTED gamma: a proposer
+            # that drafts fewer than gamma tokens (degenerate "none" path)
+            # honestly scores sigma = generated/(gamma+1), not 1.0
             stats.max_possible += (gamma + 1) * B
             stats.accept_events += int(np.asarray(n_acc))
-            stats.draft_events += gamma * B
+            stats.draft_events += (width - 1) * B
         return out[:, :max_new_tokens], stats
 
 
 # ---------------------------------------------------------------------------
-# plain autoregressive baseline (T_AR in the paper's speedup definition)
+# backwards-compatible entry points (pre-Proposer API)
 # ---------------------------------------------------------------------------
+
+class SpecDecoder(SDEngine):
+    """Legacy shim: target + draft *model* pair == SDEngine("model").
+
+    Prefer ``SDEngine(target, make_proposer("model", target, draft))``.
+    """
+
+    def __init__(self, target: Model, draft: Model, gamma: int = 4,
+                 temperature: float = 0.0):
+        super().__init__(
+            target,
+            make_proposer("model", target, draft, temperature=temperature),
+            gamma=gamma, temperature=temperature)
+        self.draft = draft
+
+
+def _ar_session(model: Model, temperature: float) -> SDEngine:
+    """AR generation reuses one persistent "none" session per
+    (model, temperature) so repeated generate_ar calls don't re-jit the
+    decode round.  Sessions hang off the model instance itself (not a
+    global registry): they share its lifetime, so dropping the model
+    releases the compiled rounds too."""
+    per_model = getattr(model, "_ar_sessions", None)
+    if per_model is None:
+        per_model = model._ar_sessions = {}
+    eng = per_model.get(temperature)
+    if eng is None:
+        eng = SDEngine(model,
+                       make_proposer("none", model, temperature=temperature),
+                       gamma=0, temperature=temperature)
+        per_model[temperature] = eng
+    return eng
+
 
 def generate_ar(model: Model, params, prompts: jnp.ndarray,
                 max_new_tokens: int, *, temperature: float = 0.0,
                 lengths=None, key=None,
                 prefill_kwargs: Optional[dict] = None) -> np.ndarray:
-    B, Tp = prompts.shape
-    key = key if key is not None else jax.random.PRNGKey(0)
-    cache = model.init_cache(B, Tp + max_new_tokens + 2)
-    kw = prefill_kwargs or {}
-    last_logits, cache = model.prefill(params, prompts, cache,
-                                       lengths=lengths, **kw)
-    step = jax.jit(model.decode_step)
-    out = np.zeros((B, max_new_tokens), np.int32)
-    p = probs_from_logits(last_logits, temperature)
-    key, k0 = jax.random.split(key)
-    token = sample_from(p, k0, temperature)
-    out[:, 0] = np.asarray(token)
-    for t in range(1, max_new_tokens):
-        logits, cache = step(params, token, cache)
-        key, kt = jax.random.split(key)
-        token = sample_from(probs_from_logits(logits, temperature), kt, temperature)
-        out[:, t] = np.asarray(token)
+    """Plain autoregressive baseline (T_AR in the paper's speedup
+    definition) — the gamma=0 / "none"-proposer path of SDEngine."""
+    out, _ = _ar_session(model, temperature).generate(
+        params, None, prompts, max_new_tokens, lengths=lengths, key=key,
+        prefill_kwargs=prefill_kwargs)
     return out

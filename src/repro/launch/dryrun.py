@@ -44,6 +44,15 @@ from repro.launch.specs import (SWA_VARIANT_WINDOW, arch_for_shape, input_specs,
 # lowering
 # ---------------------------------------------------------------------------
 
+def hlo_cost_analysis(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across jax versions: older
+    releases return a dict, newer ones a per-device list of dicts."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
 def _collective_bytes(hlo_text: str) -> dict:
     """Collective census over partitioned HLO.
 
@@ -203,7 +212,7 @@ def lower_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = hlo_cost_analysis(compiled)
     coll = _collective_bytes(compiled.as_text())
     n_dev = mesh.devices.size
     result = {
@@ -219,7 +228,13 @@ def lower_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
             "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
             "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
             "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
-            "peak_bytes": int(getattr(mem, "peak_memory_in_bytes", 0) or 0),
+            # some backends report 0 peak; fall back to the conservative
+            # bound arguments + outputs + temporaries all live at once
+            "peak_bytes": int(
+                getattr(mem, "peak_memory_in_bytes", 0) or 0) or (
+                int(getattr(mem, "argument_size_in_bytes", 0))
+                + int(getattr(mem, "output_size_in_bytes", 0))
+                + int(getattr(mem, "temp_size_in_bytes", 0))),
         },
         "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
         "knobs": {"moe_dispatch": moe_dispatch, "kv_mode": kv_mode,

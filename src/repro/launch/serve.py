@@ -1,7 +1,11 @@
 """Serving launcher: batched speculative decoding with auto-tuned gamma.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-57b-a14b --reduced \
-      --requests 16 --max-batch 8 --max-new 32
+      --requests 16 --max-batch 8 --max-new 32 --proposer model
+
+``--proposer`` selects the drafting strategy through the Proposer registry
+(core/proposer.py): "model" (small draft model), "eagle" (speculation head
+on the target's features), or "none" (plain AR baseline).
 """
 from __future__ import annotations
 
@@ -12,6 +16,7 @@ import numpy as np
 
 from repro.configs.registry import draft_for, get_config
 from repro.core.autotune import AutoTuner
+from repro.core.proposer import registered_proposers
 from repro.data.pipeline import prompt_batch
 from repro.data.tokenizer import ByteTokenizer
 from repro.models.model import Model
@@ -28,23 +33,50 @@ def main():
     ap.add_argument("--gamma", type=int, default=4)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--kind", default="chat", choices=["code", "chat"])
+    ap.add_argument("--proposer", default="model",
+                    choices=sorted(registered_proposers()),
+                    help="drafting strategy (Proposer registry kind)")
+    ap.add_argument("--timed", action="store_true",
+                    help="record per-phase propose/verify/reject timings")
     ap.add_argument("--no-autotune", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
-    dcfg = draft_for(cfg) if not args.reduced else draft_for(cfg).with_overrides(
-        num_layers=2, d_model=128, num_heads=4, num_kv_heads=2, d_ff=256,
-        dtype="float32")
-    target, draft = Model(cfg), Model(dcfg)
+    target = Model(cfg)
     params_t = target.init(jax.random.PRNGKey(args.seed))
-    params_d = draft.init(jax.random.PRNGKey(args.seed + 1))
 
-    tuner = None if args.no_autotune else AutoTuner(
-        get_config(args.arch), draft_for(get_config(args.arch)), alpha=0.7)
+    if args.proposer == "eagle":
+        from repro.core.eagle import EagleHead
+        draft = EagleHead(target)
+        params_d = draft.init(jax.random.PRNGKey(args.seed + 1))
+    elif args.proposer == "none":
+        draft, params_d = None, None
+    else:
+        dcfg = draft_for(cfg) if not args.reduced else \
+            draft_for(cfg).with_overrides(
+                num_layers=2, d_model=128, num_heads=4, num_kv_heads=2,
+                d_ff=256, dtype="float32")
+        draft = Model(dcfg)
+        params_d = draft.init(jax.random.PRNGKey(args.seed + 1))
+
+    if args.no_autotune or args.proposer == "none":
+        tuner = None
+    else:
+        full_cfg = get_config(args.arch)
+        if args.proposer == "eagle":
+            # price the drafter as the head actually serving (one block on
+            # the full target), not a standalone small model
+            from repro.core.eagle import EagleHead
+            tuner_draft = EagleHead(Model(full_cfg)).cfg
+        else:
+            tuner_draft = draft_for(full_cfg)
+        tuner = AutoTuner(full_cfg, tuner_draft, alpha=0.7)
     eng = ServingEngine(target, draft, params_t, params_d,
                         max_batch=args.max_batch, tuner=tuner,
-                        gamma=args.gamma, temperature=args.temperature)
+                        gamma=args.gamma, temperature=args.temperature,
+                        proposer=args.proposer, seed=args.seed,
+                        timed=args.timed)
 
     pb = prompt_batch(cfg.vocab_size, args.requests, kind=args.kind,
                       seed=args.seed)
@@ -54,10 +86,19 @@ def main():
     reports = eng.run()
     tok = ByteTokenizer(cfg.vocab_size)
     for r in reports:
-        sd = f"sigma={r.stats.sigma:.3f} alpha={r.stats.alpha:.3f} " \
-             f"rounds={r.stats.rounds}" if r.stats else "AR"
-        print(f"wave: B={r.batch} gamma={r.gamma} sd={r.used_sd} "
-              f"{r.tokens_per_second:.1f} tok/s  {sd}")
+        # AR waves carry SDStats too (same loop) but sigma/alpha are
+        # degenerate there — label them as the baseline
+        sd = (f"sigma={r.stats.sigma:.3f} alpha={r.stats.alpha:.3f} "
+              f"rounds={r.stats.rounds}" if r.used_sd and r.stats else "AR")
+        timing = (f" propose={r.propose_time:.3f}s verify={r.verify_time:.3f}s"
+                  f" reject={r.reject_time:.3f}s" if args.timed else "")
+        print(f"wave: B={r.batch}/{r.bucket} gamma={r.gamma} "
+              f"proposer={r.proposer} sd={r.used_sd} "
+              f"{r.tokens_per_second:.1f} tok/s  {sd}{timing}")
+    for kind, s in eng.session_stats().items():
+        print(f"session[{kind}]: constructed {s['constructions']}x, "
+              f"gammas compiled {s['gammas_compiled']}, "
+              f"{len(s['traces'])} round traces")
     sample = eng.done[1]
     print("sample completion:", repr(tok.decode(sample.output)[:80]))
 

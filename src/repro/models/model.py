@@ -202,6 +202,26 @@ class Model:
         mrope_positions: Optional[jnp.ndarray] = None,
     ) -> Tuple[jnp.ndarray, dict]:
         """Returns logits at each sequence's last prompt position (B, V)."""
+        last, _, new_cache = self.prefill_with_hidden(
+            params, tokens, cache, lengths=lengths,
+            inputs_embeds=inputs_embeds, encoder_embeds=encoder_embeds,
+            mrope_positions=mrope_positions)
+        return last, new_cache
+
+    def prefill_with_hidden(
+        self,
+        params,
+        tokens: jnp.ndarray,                       # (B, T) padded prompts
+        cache: dict,
+        *,
+        lengths: Optional[jnp.ndarray] = None,     # (B,) true prompt lengths
+        inputs_embeds: Optional[jnp.ndarray] = None,
+        encoder_embeds: Optional[jnp.ndarray] = None,
+        mrope_positions: Optional[jnp.ndarray] = None,
+    ) -> Tuple[jnp.ndarray, jnp.ndarray, dict]:
+        """prefill() variant also returning the pre-head hidden state at each
+        sequence's last prompt position (B, d) — the feature carry consumed
+        by hidden-feeding proposers (core/eagle.EagleProposer)."""
         cfg = self.cfg
         B, T = tokens.shape
         if lengths is None:
@@ -223,7 +243,7 @@ class Model:
         last = self._head(params, last_h)[:, 0]
         new_cache = dict(cache, layers=new_layers,
                          lengths=lengths.astype(jnp.int32))
-        return last, new_cache
+        return last, last_h[:, 0], new_cache
 
     # ---------------------------------------------------------------- extend
     def extend(

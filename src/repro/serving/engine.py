@@ -7,9 +7,19 @@ concurrent requests, batched together, decoded with SD.  The engine:
     per wave, continuous across waves — the moderate-batch regime),
   * consults the AutoTuner (core/autotune.py, beyond-paper) to pick
     {use_sd, gamma} for the admitted batch size from the fitted perf model,
-  * runs SpecDecoder rounds until every sequence in the wave is done,
-  * reports per-wave SDStats (sigma, alpha, rounds) and target-efficiency
-    measurements, feeding alpha back into the tuner.
+  * holds ONE persistent decoding session (core/spec_decode.SDEngine) per
+    proposer kind — "model" / "eagle" / "none" via the Proposer registry —
+    so compiled SD rounds are reused across waves instead of re-jitting a
+    fresh decoder every wave.  Batches are padded up to power-of-two
+    buckets and cache lengths are bucketed too, so the jit cache is keyed
+    on (proposer_kind, gamma, batch_bucket) and a tuner-driven gamma change
+    only adds one cache entry (returning to a seen gamma is compile-free),
+  * runs SD rounds until every sequence in the wave is done,
+  * reports per-wave SDStats (sigma, alpha, rounds, phase timings) and
+    target-efficiency measurements, feeding alpha back into the tuner.
+
+Every wave gets its own PRNG key split from the engine's root key, so
+sampling is never correlated across waves.
 """
 from __future__ import annotations
 
@@ -23,7 +33,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.autotune import AutoTuner
-from repro.core.spec_decode import SDStats, SpecDecoder, generate_ar
+from repro.core.proposer import make_proposer
+from repro.core.spec_decode import SDEngine, SDStats
 from repro.data.tokenizer import PAD
 from repro.models.model import Model
 
@@ -47,28 +58,59 @@ class WaveReport:
     stats: Optional[SDStats]
     wall_time: float
     tokens_out: int
+    proposer: str = "model"
+    bucket: int = 0                       # padded batch actually decoded
 
     @property
     def tokens_per_second(self) -> float:
         return self.tokens_out / max(self.wall_time, 1e-9)
+
+    # per-phase decode timings (propose/verify/reject populated when the
+    # engine runs with timed=True; round_time is always real wall time)
+    @property
+    def round_time(self) -> float:
+        return self.stats.round_time if self.stats else 0.0
+
+    @property
+    def propose_time(self) -> float:
+        return self.stats.propose_time if self.stats else 0.0
+
+    @property
+    def verify_time(self) -> float:
+        return self.stats.verify_time if self.stats else 0.0
+
+    @property
+    def reject_time(self) -> float:
+        return self.stats.reject_time if self.stats else 0.0
+
+
+def _pow2_at_least(n: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return b
 
 
 class ServingEngine:
     def __init__(
         self,
         target: Model,
-        draft: Model,
-        params_t,
-        params_d,
+        draft=None,                         # Model | EagleHead | None
+        params_t=None,
+        params_d=None,
         *,
         max_batch: int = 32,
         tuner: Optional[AutoTuner] = None,
         gamma: int = 4,
         temperature: float = 0.0,
         force_sd: Optional[bool] = None,
-        draft_kind: str = "model",          # "model" | "eagle"
+        proposer: str = "model",            # registered proposer kind
+        draft_kind: Optional[str] = None,   # deprecated alias for proposer
+        seed: int = 0,
+        timed: bool = False,
+        bucket_batches: bool = True,
     ):
-        self.draft_kind = draft_kind
+        self.proposer_kind = draft_kind if draft_kind is not None else proposer
         self.target, self.draft = target, draft
         self.params_t, self.params_d = params_t, params_d
         self.max_batch = max_batch
@@ -76,10 +118,17 @@ class ServingEngine:
         self.gamma = gamma
         self.temperature = temperature
         self.force_sd = force_sd
+        self.timed = timed
+        self.bucket_batches = bucket_batches
         self.queue: Deque[Request] = deque()
         self.done: Dict[int, Request] = {}
         self.reports: List[WaveReport] = []
         self._uid = 0
+        self._key = jax.random.PRNGKey(seed)
+        # persistent decoding sessions, one per proposer kind — constructed
+        # exactly once and reused for every wave (compile-cache lives inside)
+        self._sessions: Dict[str, SDEngine] = {}
+        self.session_constructions: Dict[str, int] = {}
 
     # ----------------------------------------------------------------- queue
     def submit(self, prompt: np.ndarray, max_new_tokens: int = 64) -> int:
@@ -94,15 +143,57 @@ class ServingEngine:
             wave.append(self.queue.popleft())
         return wave
 
+    # -------------------------------------------------------------- sessions
+    def _session(self, kind: str) -> SDEngine:
+        """The long-lived decoding session for one proposer kind."""
+        sess = self._sessions.get(kind)
+        if sess is None:
+            prop = make_proposer(kind, self.target,
+                                 None if kind == "none" else self.draft,
+                                 temperature=self.temperature)
+            sess = SDEngine(self.target, prop, gamma=self.gamma,
+                            temperature=self.temperature)
+            self._sessions[kind] = sess
+            self.session_constructions[kind] = \
+                self.session_constructions.get(kind, 0) + 1
+        return sess
+
+    def session_stats(self) -> Dict[str, dict]:
+        """Construction counts + compiled-round reuse per proposer kind."""
+        return {
+            kind: {
+                "constructions": self.session_constructions.get(kind, 0),
+                "gammas_compiled": sess.compiled_gammas(),
+                "traces": list(sess.trace_log),
+            }
+            for kind, sess in self._sessions.items()
+        }
+
     # ------------------------------------------------------------------ wave
-    def _pad_prompts(self, wave: List[Request]):
+    def _bucket(self, B: int) -> int:
+        if not self.bucket_batches:
+            return B
+        return min(_pow2_at_least(B), self.max_batch)
+
+    def _pad_prompts(self, wave: List[Request], rows: int):
+        """Pad the wave to ``rows`` sequences (bucket) x pow2 prompt length.
+        Pad rows replicate real requests round-robin (so wave stats weight
+        each request near-equally rather than over-counting one sequence)
+        and are discarded after decode."""
         T = max(len(r.prompt) for r in wave)
-        toks = np.full((len(wave), T), PAD, np.int32)
-        lengths = np.zeros((len(wave),), np.int32)
-        for i, r in enumerate(wave):
+        if self.bucket_batches:
+            T = _pow2_at_least(T)
+        toks = np.full((rows, T), PAD, np.int32)
+        lengths = np.zeros((rows,), np.int32)
+        for i in range(rows):
+            r = wave[i % len(wave)]
             toks[i, : len(r.prompt)] = r.prompt
             lengths[i] = len(r.prompt)
         return jnp.asarray(toks), jnp.asarray(lengths)
+
+    def _next_key(self) -> jax.Array:
+        self._key, k = jax.random.split(self._key)
+        return k
 
     def step(self, key: Optional[jax.Array] = None) -> Optional[WaveReport]:
         """Process one wave; returns its report (None if queue empty)."""
@@ -110,50 +201,59 @@ class ServingEngine:
         if not wave:
             return None
         B = len(wave)
+        bucket = self._bucket(B)
         gamma, use_sd = self.gamma, True
         if self.tuner is not None:
-            plan = self.tuner.plan(B)
+            # plan for the batch size that actually executes (the padded
+            # bucket), so policy and the alpha fed back describe one regime
+            plan = self.tuner.plan(bucket)
             gamma, use_sd = plan["gamma"], plan["use_sd"]
         if self.force_sd is not None:
             use_sd = self.force_sd
+        if self.proposer_kind == "none":
+            use_sd = False
+        kind = self.proposer_kind if use_sd else "none"
+        if not use_sd:
+            gamma = 0
+        sess = self._session(kind)
         max_new = max(r.max_new_tokens for r in wave)
-        toks, lengths = self._pad_prompts(wave)
-        key = key if key is not None else jax.random.PRNGKey(self._uid)
+        toks, lengths = self._pad_prompts(wave, bucket)
+        # bucket the cache length too so waves of similar shape share a
+        # compiled round instead of retracing on every new max_seq
+        max_seq = toks.shape[1] + max_new + gamma + 2
+        if self.bucket_batches:
+            max_seq = _pow2_at_least(max_seq)
+        key = key if key is not None else self._next_key()
 
         t0 = time.perf_counter()
-        if use_sd:
-            if self.draft_kind == "eagle":
-                from repro.core.eagle import EagleSpecDecoder
-                sd = EagleSpecDecoder(self.target, self.draft, gamma=gamma,
-                                      temperature=self.temperature)
-            else:
-                sd = SpecDecoder(self.target, self.draft, gamma=gamma,
-                                 temperature=self.temperature)
-            out, stats = sd.generate(self.params_t, self.params_d, toks,
-                                     max_new, lengths=lengths, key=key)
-            if self.tuner is not None and stats.draft_events:
-                self.tuner.update_alpha(stats.alpha)
-        else:
-            out = generate_ar(self.target, self.params_t, toks, max_new,
-                              temperature=self.temperature,
-                              lengths=lengths, key=key)
-            stats = None
+        out, stats = sess.generate(
+            self.params_t, None if kind == "none" else self.params_d,
+            toks, max_new, gamma=gamma, max_seq=max_seq, lengths=lengths,
+            key=key, timed=self.timed)
+        if use_sd and self.tuner is not None and stats.draft_events:
+            self.tuner.update_alpha(stats.alpha)
         wall = time.perf_counter() - t0
 
         n_tokens = 0
-        for i, r in enumerate(wave):
+        for i, r in enumerate(wave):                 # pad rows fall off here
             r.output = out[i, : r.max_new_tokens]
             r.finished_at = time.perf_counter()
             n_tokens += len(r.output)
             self.done[r.uid] = r
-        report = WaveReport(B, gamma, use_sd, stats, wall, n_tokens)
+        report = WaveReport(B, gamma, use_sd, stats, wall, n_tokens,
+                            proposer=kind, bucket=bucket)
         self.reports.append(report)
         return report
 
     def run(self, key: Optional[jax.Array] = None) -> List[WaveReport]:
+        """Drain the queue.  ``key`` (optional) reseeds the engine's root
+        key; each wave then decodes under its own split — never the same
+        key twice."""
+        if key is not None:
+            self._key = key
         reports = []
         while self.queue:
-            r = self.step(key)
+            r = self.step()
             if r:
                 reports.append(r)
         return reports

@@ -1,0 +1,70 @@
+"""Fallback for environments without ``hypothesis`` (offline CI image).
+
+Exports ``given``, ``settings``, and ``st`` that are the real hypothesis
+when available.  Otherwise a minimal deterministic stand-in runs each
+property test over a fixed number of seeded draws — weaker than real
+property testing (no shrinking, no fuzzing) but the deterministic cases
+still execute and the invariants stay guarded.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import functools
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 5
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                          max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: float(rng.uniform(min_value,
+                                                           max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(0, len(elements)))])
+
+    st = _Strategies()
+
+    def settings(**kwargs):                       # noqa: D401 - passthrough
+        """No-op decorator (max_examples/deadline are fixed in fallback)."""
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*strategies):
+        """Run the test over deterministic seeded draws of each strategy."""
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper():
+                for example in range(_FALLBACK_EXAMPLES):
+                    rng = np.random.default_rng(example)
+                    fn(*[s.draw(rng) for s in strategies])
+            # hide the original signature or pytest would treat the
+            # strategy-filled parameters as fixtures
+            del wrapper.__wrapped__
+            return wrapper
+        return deco

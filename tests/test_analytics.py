@@ -1,10 +1,14 @@
 """Paper theory (Eqs. 5-11): formulas vs Monte-Carlo + proven monotonicities."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
+
+import pytest
 
 from repro.core.analytics import (
     activation_threshold, expected_activated_experts, mean_tokens_per_expert,
     roofline_response, sigma_from_alpha)
+
+pytestmark = pytest.mark.tier1
 
 
 @settings(max_examples=25, deadline=None)

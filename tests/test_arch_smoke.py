@@ -11,6 +11,8 @@ from repro.configs.registry import ASSIGNED, get_config
 from repro.models.model import Model
 from repro.training.train_loop import init_train_state, make_train_step
 
+pytestmark = pytest.mark.tier1
+
 ALL_ARCHS = list(ASSIGNED) + ["qwen2-57b-a14b", "mixtral-8x7b", "qwen2-0.5b"]
 
 

@@ -70,7 +70,10 @@ def test_rank_disambiguates_dense_vs_expert_ffn():
 def test_fit_drops_nondivisible():
     from jax.sharding import AbstractMesh, PartitionSpec as P
     from repro.distributed.sharding import _fit
-    mesh = AbstractMesh((2,), ("model",))
+    try:
+        mesh = AbstractMesh((2,), ("model",))
+    except TypeError:   # jax<=0.4.x signature: tuple of (name, size) pairs
+        mesh = AbstractMesh((("model", 2),))
     assert _fit(mesh, P("model"), (7,)) == P(None)
     assert _fit(mesh, P("model"), (8,)) == P("model")
 

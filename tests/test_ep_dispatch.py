@@ -3,6 +3,9 @@ with a forced 4-device mesh)."""
 import subprocess
 import sys
 import textwrap
+import pytest
+
+pytestmark = pytest.mark.tier1
 
 _SCRIPT = textwrap.dedent("""
     import os

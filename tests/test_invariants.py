@@ -10,7 +10,7 @@ These are the contracts a serving system quietly depends on:
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs.base import ModelConfig
 from repro.core.spec_decode import SpecDecoder

@@ -9,6 +9,8 @@ from repro.core.analytics import expected_activated_experts
 from repro.models.moe import (expert_activation_counts, init_moe,
                               load_balance_loss, moe_forward, router_topk)
 
+pytestmark = pytest.mark.tier1
+
 CFG = ModelConfig("m", "moe", 2, 64, 4, 2, 128, 256, num_experts=8,
                   num_experts_per_tok=2, moe_d_ff=128, dtype="float32")
 

@@ -8,6 +8,8 @@ from repro.core.autotune import AutoTuner
 from repro.core.perf_model import Measurement, SpeedupModel, stride_sample
 from repro.core.simulator import Simulator, V5E
 
+pytestmark = pytest.mark.tier1
+
 TARGET = get_config("qwen2-57b-a14b")
 DRAFT = get_config("qwen2-0.5b")
 

@@ -1,0 +1,184 @@
+"""Unified Proposer API: cross-proposer parity, registry, session reuse.
+
+The contracts the serving redesign rests on:
+  * every registered proposer runs through the ONE SDEngine loop and is
+    greedy-lossless (token-identical to the AR baseline),
+  * the registry is extensible (register_proposer) and fails loudly on
+    unknown kinds,
+  * ServingEngine holds persistent sessions: each proposer kind is
+    constructed exactly once across waves, and a tuner-driven gamma change
+    reuses already-compiled rounds (no retrace when returning to a seen
+    (gamma, batch) shape),
+  * per-wave PRNG keys are split, not reused,
+  * timed mode records real per-phase timings.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.eagle import EagleHead
+from repro.core.proposer import (ModelProposer, make_proposer,
+                                 register_proposer, registered_proposers)
+from repro.core.spec_decode import SDEngine, SpecDecoder, generate_ar
+from repro.serving.engine import ServingEngine
+
+pytestmark = pytest.mark.tier1
+
+TCFG = ModelConfig("pp-moe", "moe", 2, 128, 4, 2, 256, 512, num_experts=4,
+                   num_experts_per_tok=2, dtype="float32")
+DCFG = ModelConfig("pp-draft", "dense", 2, 64, 2, 2, 128, 512,
+                   dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    from repro.models.model import Model
+    t, d = Model(TCFG), Model(DCFG)
+    pt, pd = t.init(jax.random.PRNGKey(0)), d.init(jax.random.PRNGKey(7))
+    head = EagleHead(t)
+    pe = head.init(jax.random.PRNGKey(3))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 512)
+    return t, d, pt, pd, head, pe, prompts
+
+
+@pytest.mark.parametrize("kind", ["model", "eagle", "none"])
+def test_every_proposer_greedy_matches_ar(setup, kind):
+    """Cross-proposer parity: greedy SDEngine output == AR baseline for
+    every registered proposer, through the single generic loop."""
+    t, d, pt, pd, head, pe, prompts = setup
+    draft = {"model": d, "eagle": head, "none": None}[kind]
+    params_p = {"model": pd, "eagle": pe, "none": None}[kind]
+    gamma = 0 if kind == "none" else 3
+    eng = SDEngine(t, make_proposer(kind, t, draft), gamma=gamma)
+    out, stats = eng.generate(pt, params_p, prompts, 16)
+    out_ar = generate_ar(t, pt, prompts, 16)
+    np.testing.assert_array_equal(out, out_ar)
+    assert stats.rounds >= 1
+    if kind == "none":
+        # degenerate path: exactly one committed token per round, no drafts
+        assert stats.draft_events == 0
+        assert stats.generated == stats.rounds * prompts.shape[0]
+
+
+def test_registry_unknown_kind_raises(setup):
+    t = setup[0]
+    with pytest.raises(KeyError, match="unknown proposer"):
+        make_proposer("nope", t)
+    assert {"model", "eagle", "none"} <= set(registered_proposers())
+
+
+def test_registry_is_extensible(setup):
+    """A user-registered drafter drops into the same engine loop."""
+    t, d, pt, pd, *_ , prompts = setup
+
+    register_proposer(
+        "selfdraft",
+        lambda target, draft, temperature=0.0: ModelProposer(
+            target, target, temperature=temperature))
+    try:
+        eng = SDEngine(t, make_proposer("selfdraft", t), gamma=3)
+        out, stats = eng.generate(pt, pt, prompts, 12)
+        np.testing.assert_array_equal(out, generate_ar(t, pt, prompts, 12))
+        assert stats.alpha == 1.0              # self-draft accepts everything
+    finally:
+        from repro.core import proposer as proposer_mod
+        proposer_mod._REGISTRY.pop("selfdraft", None)
+
+
+def test_shims_still_work(setup):
+    """Legacy SpecDecoder entry point rides the new engine unchanged."""
+    t, d, pt, pd, *_ , prompts = setup
+    sd = SpecDecoder(t, d, gamma=2)
+    out, _ = sd.generate(pt, pd, prompts, 10)
+    np.testing.assert_array_equal(out, generate_ar(t, pt, prompts, 10))
+
+
+def test_gamma_change_reuses_session_and_compiles(setup):
+    """A single SDEngine session serves multiple gammas; re-running a seen
+    (gamma, batch) shape hits the compiled round (no retrace)."""
+    t, d, pt, pd, *_ , prompts = setup
+    eng = SDEngine(t, make_proposer("model", t, d))
+    max_seq = 64
+    for gamma in (2, 3, 2, 3, 2):
+        eng.generate(pt, pd, prompts, 8, gamma=gamma, max_seq=max_seq)
+    # only the first visit to each gamma traced; the revisits were cache hits
+    assert eng.trace_log == [(2, 2), (3, 2)]
+    assert sorted(eng._round_cache) == [2, 3]
+
+
+class _FixedPlanTuner:
+    """Stub tuner driving a per-wave gamma schedule."""
+
+    def __init__(self, gammas):
+        self.gammas = list(gammas)
+        self.alphas = []
+
+    def plan(self, batch):
+        return {"use_sd": True, "gamma": self.gammas.pop(0),
+                "predicted_speedup": 2.0}
+
+    def update_alpha(self, alpha):
+        self.alphas.append(alpha)
+
+
+def test_serving_sessions_constructed_once_across_waves(setup):
+    """≥3 waves with a tuner-driven gamma change: one session per proposer
+    kind, no per-wave decoder instantiation, compiled rounds reused."""
+    t, d, pt, pd, *_ = setup
+    tuner = _FixedPlanTuner([2, 3, 2, 2])
+    eng = ServingEngine(t, d, pt, pd, max_batch=2, tuner=tuner,
+                        force_sd=True)
+    for _ in range(8):                          # 4 waves of 2
+        eng.submit(np.arange(3, 9), max_new_tokens=6)
+    reports = eng.run()
+    assert len(reports) == 4
+    assert [r.gamma for r in reports] == [2, 3, 2, 2]
+    stats = eng.session_stats()
+    assert eng.session_constructions == {"model": 1}
+    # identical wave shapes: gamma 2 and 3 each traced exactly once — the
+    # waves that revisit gamma=2 hit the session's compiled round
+    assert stats["model"]["traces"] == [(2, 2), (3, 2)]
+    assert stats["model"]["gammas_compiled"] == [2, 3]
+    assert len(tuner.alphas) == 4               # alpha fed back every wave
+
+
+def test_serving_wave_keys_are_split():
+    """Waves must not share a PRNG key: identical sampled requests served
+    in different waves should (a.s.) produce different outputs."""
+    from repro.models.model import Model
+    t, d = Model(TCFG), Model(DCFG)
+    pt, pd = t.init(jax.random.PRNGKey(0)), d.init(jax.random.PRNGKey(7))
+    eng = ServingEngine(t, d, pt, pd, max_batch=1, gamma=2,
+                        temperature=1.0, force_sd=True)
+    u1 = eng.submit(np.arange(3, 9), max_new_tokens=12)
+    u2 = eng.submit(np.arange(3, 9), max_new_tokens=12)
+    eng.run()
+    assert not np.array_equal(eng.done[u1].output, eng.done[u2].output)
+
+
+def test_timed_mode_records_phase_timings(setup):
+    t, d, pt, pd, *_ , prompts = setup
+    eng = SDEngine(t, make_proposer("model", t, d), gamma=2)
+    out_timed, stats = eng.generate(pt, pd, prompts, 10, timed=True)
+    assert stats.propose_time > 0
+    assert stats.verify_time > 0
+    assert stats.reject_time > 0
+    assert stats.round_time >= (stats.propose_time + stats.verify_time
+                                + stats.reject_time) * 0.5
+    # timed staging must not change tokens
+    out_fused, _ = eng.generate(pt, pd, prompts, 10)
+    np.testing.assert_array_equal(out_timed, out_fused)
+
+
+def test_wave_report_surfaces_timings(setup):
+    t, d, pt, pd, *_ = setup
+    eng = ServingEngine(t, d, pt, pd, max_batch=2, gamma=2, force_sd=True,
+                        timed=True)
+    eng.submit(np.arange(3, 9), max_new_tokens=6)
+    (report,) = eng.run()
+    assert report.propose_time > 0
+    assert report.verify_time > 0
+    assert report.reject_time > 0
+    assert report.round_time > 0

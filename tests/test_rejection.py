@@ -2,10 +2,13 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.analytics import sigma_from_alpha
 from repro.core.rejection import probs_from_logits, rejection_sample
+import pytest
+
+pytestmark = pytest.mark.tier1
 
 
 def _dist(rng, V, sharp=1.0):

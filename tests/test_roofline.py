@@ -17,6 +17,10 @@ import numpy as np
 
 from repro.configs.registry import get_config
 from repro.core.simulator import Simulator
+from repro.launch.dryrun import hlo_cost_analysis
+import pytest
+
+pytestmark = pytest.mark.tier1
 
 
 def test_scan_body_counted_once():
@@ -28,7 +32,7 @@ def test_scan_body_counted_once():
 
     xs = jax.ShapeDtypeStruct((128, 128), jnp.float32)
     ws = jax.ShapeDtypeStruct((128, 128), jnp.float32)
-    flops = jax.jit(f).lower(xs, ws).compile().cost_analysis()["flops"]
+    flops = hlo_cost_analysis(jax.jit(f).lower(xs, ws).compile())["flops"]
     one_body = 2 * 128 ** 3
     assert flops < 2 * one_body          # NOT 10x — the documented behavior
 
@@ -50,7 +54,7 @@ def test_analytic_census_matches_hlo_scanfree():
         return h
 
     compiled = jax.jit(fwd).lower(params, toks).compile()
-    hlo_flops = compiled.cost_analysis()["flops"]
+    hlo_flops = hlo_cost_analysis(compiled)["flops"]
     sim = Simulator()
     analytic = sim.forward_costs(cfg, B, T, context_len=T)["flops"]
     # remove head flops (fwd() stops at hidden)

@@ -9,6 +9,9 @@ from repro.core.target_efficiency import measure_target_efficiency
 from repro.models.model import Model
 from repro.serving.engine import ServingEngine
 from repro.serving.sampling import SamplingParams, sample_logits
+import pytest
+
+pytestmark = pytest.mark.tier1
 
 TCFG = ModelConfig("s-moe", "moe", 2, 128, 4, 2, 256, 512, num_experts=4,
                    num_experts_per_tok=2, dtype="float32")
