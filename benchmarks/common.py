@@ -28,6 +28,10 @@ TRAIN_STEPS = int(os.environ.get("BENCH_TRAIN_STEPS", "220"))
 # drafting strategy for sigma/alpha measurement — any Proposer registry kind
 # ("model" | "eagle" | "none"); benchmarks/run.py --proposer sets this
 DEFAULT_PROPOSER = os.environ.get("BENCH_PROPOSER", "model")
+# MoE dispatch for the DECODE/serve path ("onehot" | "gmm"); benchmarks/run.py
+# --moe-dispatch sets this.  Serving defaults to the ragged gmm kernels;
+# training always stays onehot (GSPMD/expert-parallel friendly).
+DEFAULT_DISPATCH = os.environ.get("BENCH_MOE_DISPATCH", "gmm")
 
 
 def _train(model: Model, steps: int, kind: str, seed: int):
@@ -44,9 +48,15 @@ def _train(model: Model, steps: int, kind: str, seed: int):
 
 def trained_params(arch: str, kind: str, seed: int,
                    overrides: dict | None = None):
-    """Train-or-load a reduced arch on a workload kind."""
+    """Train-or-load a reduced arch on a workload kind.
+
+    Training runs the onehot dispatch (shardable dense combine); the
+    returned model decodes with ``DEFAULT_DISPATCH`` so every downstream
+    sigma/speedup measurement exercises the serving-default MoE path."""
     cfg = get_config(arch, reduced=True, **(overrides or {}))
-    model = Model(cfg)
+    train_model = Model(cfg)
+    serve_dispatch = DEFAULT_DISPATCH if cfg.num_experts else "onehot"
+    model = Model(cfg, moe_dispatch=serve_dispatch)
     tag = f"{cfg.name}_{kind}_{seed}"
     ckdir = os.path.join(CACHE_DIR, tag)
     params = model.init(jax.random.PRNGKey(seed))  # template
@@ -54,7 +64,7 @@ def trained_params(arch: str, kind: str, seed: int,
     if path:
         restored, _ = restore_checkpoint(path, {"params": params})
         return model, restored["params"]
-    params = _train(model, TRAIN_STEPS, kind, seed)
+    params = _train(train_model, TRAIN_STEPS, kind, seed)
     save_checkpoint(ckdir, TRAIN_STEPS, {"params": params}, {"arch": cfg.name})
     return model, params
 

@@ -1,7 +1,12 @@
 """Kernel micro-bench: interpret-mode wall time (CPU, correctness-grade) +
-v5e roofline projection per kernel call (the real perf number)."""
+v5e roofline projection per kernel call (the real perf number).
+
+Also sweeps the three MoE FFN dispatch modes (onehot / capacity-gmm /
+ragged) over SD-verify token counts B*(gamma+1) and writes the analytic
+FLOP/byte/tile accounting to BENCH_moe_dispatch.json."""
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -12,7 +17,10 @@ from benchmarks.common import csv_row
 from repro.core.simulator import V5E
 from repro.kernels.decode_attention.ref import decode_attention_ref
 from repro.kernels.flash_attention.ref import flash_attention_ref
-from repro.kernels.gmm.ref import gmm_capacity_ref
+from repro.kernels.gmm.ragged import _round_up, make_group_metadata
+from repro.kernels.gmm.ref import (combine_ref, dispatch_ref,
+                                   gmm_capacity_ref, moe_ffn_ref,
+                                   ragged_moe_ffn_ref)
 
 
 def _time(fn, *args, iters=3):
@@ -27,6 +35,88 @@ def _time(fn, *args, iters=3):
 def _proj_us(flops, bytes_):
     return max(flops / (V5E.peak_flops * V5E.compute_eff),
                bytes_ / (V5E.hbm_bw * V5E.mem_eff)) * 1e6
+
+
+def moe_dispatch_sweep(out_path: str = "BENCH_moe_dispatch.json") -> list:
+    """onehot vs capacity-gmm vs ragged expert-FFN cost over the SD verify
+    token counts N = B*(gamma+1).  Wall time comes from the jitted jnp
+    oracles (CPU, correctness-grade); the derived columns are the analytic
+    FLOPs / HBM bytes / m-tile counts that decide the v5e roofline."""
+    E, K, D, F, bm = 8, 2, 256, 256, 128
+    gamma = 4
+    rows, records = [], []
+    for B in (4, 16, 64):
+        N = B * (gamma + 1)                      # verify tokens per round
+        NK = N * K
+        ks = jax.random.split(jax.random.PRNGKey(B), 5)
+        x = jax.random.normal(ks[0], (N, D), jnp.float32)
+        wg = jax.random.normal(ks[1], (E, D, F)) / np.sqrt(D)
+        wu = jax.random.normal(ks[2], (E, D, F)) / np.sqrt(D)
+        wd = jax.random.normal(ks[3], (E, F, D)) / np.sqrt(F)
+        logits = jax.random.normal(ks[4], (N, E))
+        w, idx = jax.lax.top_k(jax.nn.softmax(logits), K)
+        sizes = jnp.bincount(idx.reshape(-1), length=E)
+        xs = x[jnp.argsort(idx.reshape(-1)) // K]
+        C = _round_up(NK, 128)                   # legacy worst-case bins
+        n_pad = _round_up(NK, bm)
+        visits = int(make_group_metadata(sizes, n_pad, bm).num_visits[0])
+        w_bytes = 3 * E * D * F * 2              # all experts stream from HBM
+
+        def capacity_ffn(x, wg, wu, wd, w, idx):
+            # full capacity-path FFN (same scope as the other two modes)
+            bins, slot, kept = dispatch_ref(x, idx, E, C)
+            h = jax.nn.silu(gmm_capacity_ref(bins, wg)) \
+                * gmm_capacity_ref(bins, wu)
+            return combine_ref(gmm_capacity_ref(h, wd), idx, w, slot, kept)
+
+        def act_bytes(rows: int, fused: bool) -> int:
+            # activation traffic per FFN, reads + writes at 2 B/elem:
+            # x reads for gate/up (1 with the fused kernel), h writes for
+            # gate/up (1 fused), h read + y write for the down projection
+            x_reads = (1 if fused else 2) * rows * D
+            h_writes = (1 if fused else 2) * rows * F
+            return (x_reads + h_writes + rows * F + rows * D) * 2
+
+        modes = {
+            # every token through all E experts: E/K x FLOP overhead
+            "onehot": dict(
+                us=_time(jax.jit(moe_ffn_ref), x, wg, wu, wd, w, idx),
+                flops=3 * 2 * E * N * D * F,
+                bytes=w_bytes + act_bytes(E * N, fused=False),
+                m_tiles=3 * E * _round_up(N, bm) // bm, launches=3),
+            # densified (E, C) bins, C = round_up(N*K, 128)
+            "gmm_capacity": dict(
+                us=_time(jax.jit(capacity_ffn), x, wg, wu, wd, w, idx),
+                flops=3 * 2 * E * C * D * F,
+                bytes=w_bytes + act_bytes(E * C, fused=False),
+                m_tiles=3 * E * C // bm, launches=3),
+            # ragged: work scales with routed tokens; fused gate+up halves
+            # the x reads of the up-projection stage
+            "ragged": dict(
+                us=_time(jax.jit(ragged_moe_ffn_ref), xs, wg, wu, wd, sizes),
+                flops=3 * 2 * NK * D * F,
+                bytes=w_bytes + act_bytes(n_pad, fused=True),
+                m_tiles=3 * visits, launches=2),
+        }
+        for mode, m in modes.items():
+            proj = _proj_us(m["flops"], m["bytes"])
+            rows.append(csv_row(
+                f"moe_dispatch_{mode}_N{N}", m["us"],
+                f"v5e_roofline_us={proj:.1f};m_tiles={m['m_tiles']};"
+                f"launches={m['launches']}"))
+            records.append({"mode": mode, "batch": B, "gamma": gamma,
+                            "tokens": N, "E": E, "K": K, "D": D, "F": F,
+                            "us_jnp_oracle": round(m["us"], 2),
+                            "v5e_roofline_us": round(proj, 2),
+                            "flops": m["flops"], "hbm_bytes": m["bytes"],
+                            "m_tiles": m["m_tiles"],
+                            "launches": m["launches"]})
+    with open(out_path, "w") as f:
+        json.dump({"sweep": "onehot_vs_gmm_vs_ragged",
+                   "config": {"E": E, "K": K, "D": D, "F": F, "bm": bm,
+                              "gamma": gamma},
+                   "rows": records}, f, indent=1)
+    return rows
 
 
 def run() -> list:
@@ -74,4 +164,5 @@ def run() -> list:
     rows.append(csv_row("kernel_decode_ar_8k", 0.0,
                         f"v5e_roofline_us={_proj_us(flops1, bytes_):.1f};"
                         "note=same_bytes_as_verify"))
+    rows.extend(moe_dispatch_sweep())
     return rows

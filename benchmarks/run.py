@@ -31,12 +31,19 @@ def main() -> None:
                     choices=sorted(registered_proposers()),
                     help="drafting strategy for sigma measurement "
                          "(Proposer registry kind)")
+    ap.add_argument("--moe-dispatch", default=None,
+                    choices=["onehot", "gmm"],
+                    help="MoE dispatch for the decode path (default: gmm, "
+                         "the ragged grouped-matmul serving kernels)")
     args = ap.parse_args()
-    if args.proposer:
+    if args.proposer or args.moe_dispatch:
         # assign directly (not via env) so the flag wins regardless of
         # whether benchmarks.common was already imported
         import benchmarks.common as common
-        common.DEFAULT_PROPOSER = args.proposer
+        if args.proposer:
+            common.DEFAULT_PROPOSER = args.proposer
+        if args.moe_dispatch:
+            common.DEFAULT_DISPATCH = args.moe_dispatch
     filters = args.only.split(",") if args.only else None
 
     print("name,us_per_call,derived")

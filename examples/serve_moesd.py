@@ -33,10 +33,13 @@ def main():
     tcfg = get_config("mixtral-8x7b", reduced=True)
     dcfg = get_config("qwen2-0.5b", reduced=True).with_overrides(
         vocab_size=tcfg.vocab_size)
-    target, draft = Model(tcfg), Model(dcfg)
+    # train with the onehot dispatch (dense, shardable); serve with the
+    # ragged gmm kernels — the decode-path default (kernels/gmm/ragged.py)
+    draft = Model(dcfg)
     print("training reduced Mixtral target + draft on chat workload...")
-    params_t = quick_train(target, 150, "chat", 0)
+    params_t = quick_train(Model(tcfg), 150, "chat", 0)
     params_d = quick_train(draft, 150, "chat", 1)
+    target = Model(tcfg, moe_dispatch="gmm")
 
     # the tuner plans from the FULL Mixtral config on v5e
     tuner = AutoTuner(get_config("mixtral-8x7b"),

@@ -8,4 +8,6 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+# interpret-mode kernel-parity smoke: ragged + fused gmm vs ref.py oracles
+timeout 120 python -m repro.kernels.gmm.ragged
 exec timeout "${CI_TIMEOUT:-600}" python -m pytest -q -m tier1 "$@"

@@ -47,20 +47,36 @@ class Measurement:
 class SpeedupModel:
     """``engine_semantics=False`` is the paper-faithful Alg. 1 (verify = B*gamma
     tokens, gamma draft forwards); True matches our engine (B*(gamma+1) verify
-    tokens, gamma+1 draft forwards — the last draft forward only writes KV)."""
+    tokens, gamma+1 draft forwards — the last draft forward only writes KV).
+
+    ``dispatch`` selects the FFN cost regime priced by T_target:
+      * "gmm"    — sparse grouped matmul (serving default): k2 scales with
+                   N(t) activated experts, k3 with the per-ACTIVATED-expert
+                   token response T̄_exp(t).
+      * "onehot" — dense one-hot dispatch: every token runs through all E
+                   experts, so k2 scales with E regardless of t and each
+                   expert sees the full t tokens — the E/K× FLOP overhead
+                   the ragged serving kernels remove.
+    """
     hw: Hardware = V5E
     params: np.ndarray | None = None
     engine_semantics: bool = False
+    dispatch: str = "gmm"
 
     # ------------------------------------------------------------ components
-    def _terms(self, p: np.ndarray):
+    def _terms(self, p: np.ndarray, dispatch: str | None = None):
         (bias, k1, k2, k3, draft_bias, draft_k, reject_bias, reject_k,
          lam, s) = p
         knee = lam * self.hw.ridge_point
+        dispatch = self.dispatch if dispatch is None else dispatch
 
         def T_target(t, K, E):
-            n = expected_activated_experts(t, E, K)
-            t_exp = mean_tokens_per_expert(t, K / E)
+            if dispatch == "onehot":
+                n = E * np.ones_like(np.asarray(t, np.float64))
+                t_exp = np.asarray(t, np.float64)
+            else:
+                n = expected_activated_experts(t, E, K)
+                t_exp = mean_tokens_per_expert(t, K / E)
             return (bias + k1 * roofline_response(t, knee, s)
                     + k2 * n + k3 * roofline_response(t_exp, knee, s))
 
@@ -71,6 +87,18 @@ class SpeedupModel:
             return reject_bias + reject_k * t
 
         return T_target, T_draft, T_reject
+
+    def target_time(self, t, top_k, num_experts, *, dispatch: str | None = None,
+                    params: np.ndarray | None = None):
+        """Predicted T_target(t) under a dispatch mode — lets serving code
+        compare the onehot (E-dense) and gmm (K-sparse) FFN regimes with one
+        fitted parameter set."""
+        p = self.params if params is None else np.asarray(params, np.float64)
+        assert p is not None, "fit() first or pass params"
+        T_target, _, _ = self._terms(p, dispatch)
+        return T_target(np.asarray(t, np.float64),
+                        np.asarray(top_k, np.float64),
+                        np.asarray(num_experts, np.float64))
 
     def compute_speedup(self, p: np.ndarray, batch, gamma, top_k,
                         num_experts, sigma):

@@ -1,17 +1,30 @@
-"""Jitted public wrappers around the gmm kernel: capacity dispatch → grouped
-matmul → weighted combine, i.e. a full MoE FFN built on the kernel."""
+"""Jitted public wrappers around the gmm kernels: capacity dispatch → grouped
+matmul → weighted combine, i.e. a full MoE FFN built on the kernel.
+
+Grouped-matmul entry points, fastest first:
+
+  * ``gmm``        — ragged megablox-style kernel (kernels/gmm/ragged.py):
+                     no densification, work scales with routed tokens.  The
+                     serving default behind ``moe_forward(dispatch="gmm")``.
+  * ``gmm_legacy`` — the original bin-to-capacity path kept as a fallback
+                     (and as a second oracle): tokens are scattered into
+                     fixed ``(E, C)`` bins and run through ``gmm_capacity``.
+  * ``moe_ffn_gmm``— capacity-limited full FFN (dispatch → 3 GEMMs →
+                     combine); overflow drops are now *counted*, not silent.
+"""
 from __future__ import annotations
 
 import functools
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.gmm.gmm import gmm_capacity
+from repro.kernels.gmm.ragged import (INTERPRET, fused_gate_up,  # noqa: F401
+                                      make_group_metadata, ragged_gmm,
+                                      ragged_moe_ffn)
 from repro.kernels.gmm.ref import combine_ref, dispatch_ref
-
-# Pallas TPU kernels run in interpret mode everywhere but real TPU.
-INTERPRET = jax.default_backend() != "tpu"
 
 
 def _round_up(v: int, m: int) -> int:
@@ -26,7 +39,8 @@ def expert_capacity(n_tokens: int, k: int, num_experts: int,
     return max(align, _round_up(int(mean * capacity_factor), align))
 
 
-@functools.partial(jax.jit, static_argnames=("capacity", "activation", "interpret"))
+@functools.partial(jax.jit, static_argnames=("capacity", "activation",
+                                             "interpret", "return_dropped"))
 def moe_ffn_gmm(
     x: jnp.ndarray,            # (N, D)
     w_gate: jnp.ndarray,       # (E, D, F)
@@ -38,36 +52,60 @@ def moe_ffn_gmm(
     capacity: int,
     activation: str = "silu",
     interpret: bool = INTERPRET,
-) -> jnp.ndarray:
+    return_dropped: bool = False,
+) -> Union[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Capacity-binned MoE FFN.  With ``return_dropped=True`` also returns
+    the number of (token, k) assignments that overflowed their expert's bin
+    — the drops are deterministic (slot order) but no longer silent."""
     E, D, F = w_gate.shape
     N = x.shape[0]
     bins, slot, kept = dispatch_ref(x, indices, E, capacity)
-    # pad C and D/F to MXU-aligned tiles
-    C = bins.shape[1]
     h_gate = gmm_capacity(bins, w_gate, interpret=interpret)
     h_up = gmm_capacity(bins, w_up, interpret=interpret)
     act = jax.nn.gelu if activation == "gelu" else jax.nn.silu
     h = (act(h_gate.astype(jnp.float32)) * h_up.astype(jnp.float32)).astype(x.dtype)
     y_bins = gmm_capacity(h, w_down, interpret=interpret)
-    return combine_ref(y_bins, indices, weights, slot, kept)
+    y = combine_ref(y_bins, indices, weights, slot, kept)
+    if return_dropped:
+        return y, jnp.sum(~kept).astype(jnp.int32)
+    return y
 
 
 def gmm(xs: jnp.ndarray, w: jnp.ndarray, group_sizes: jnp.ndarray,
         *, interpret: bool = INTERPRET) -> jnp.ndarray:
     """Sorted-token grouped matmul (N_sorted, D) with per-expert group sizes.
 
-    Ragged groups are re-binned to fixed capacity = max group size rounded to
-    128, run through the capacity kernel, and scattered back.  Tokens beyond
-    a bin never exist here (capacity == max group size), so this path is
-    exact — used by moe.moe_forward(dispatch="gmm") for small/medium N.
+    Ragged kernel: per-expert offsets are scalar-prefetched and each m-tile
+    looks up its expert from the group boundaries — no ``(E, C)``
+    densification, empty experts cost zero tiles, work scales with the
+    routed token count (kernels/gmm/ragged.py).
+    """
+    return ragged_gmm(xs, w, group_sizes, interpret=interpret)
+
+
+def gmm_legacy(xs: jnp.ndarray, w: jnp.ndarray, group_sizes: jnp.ndarray,
+               *, capacity: Optional[int] = None,
+               interpret: bool = INTERPRET) -> jnp.ndarray:
+    """Bin-to-capacity fallback for the ragged kernel.
+
+    Tokens are scattered into fixed-size per-expert bins and run through the
+    dense ``gmm_capacity`` kernel.  ``capacity`` must be a static bound on
+    the largest group; it defaults to ``round_up(N, 128)`` (exact for any
+    routing, at worst-case cost).  Callers with a tighter static bound —
+    e.g. a capacity-factor guarantee — pass it to shrink the bins.  The
+    bound is NOT checked: a group larger than ``capacity`` has its overflow
+    rows' inputs dropped by the scatter and the gather-back clamps their
+    slot to ``capacity - 1``, so those output rows silently receive another
+    token's result — only pass a capacity you can guarantee.
     """
     E, D, F = w.shape
     N = xs.shape[0]
-    C = _round_up(max(int(N), 1), 128)  # worst case: all tokens on one expert
-    offsets = jnp.cumsum(group_sizes) - group_sizes            # (E,)
-    # expert id per sorted row, from offsets
+    C = _round_up(max(int(N), 1), 128) if capacity is None \
+        else _round_up(max(int(capacity), 1), 128)
+    ends = jnp.cumsum(group_sizes)                              # (E,) once
+    offsets = ends - group_sizes
     row = jnp.arange(N)
-    expert_of_row = jnp.searchsorted(jnp.cumsum(group_sizes), row, side="right")
+    expert_of_row = jnp.searchsorted(ends, row, side="right")
     slot_of_row = row - offsets[expert_of_row]
     bins = jnp.zeros((E, C, D), xs.dtype).at[expert_of_row, slot_of_row].set(xs)
     y = gmm_capacity(bins, w, interpret=interpret)

@@ -55,6 +55,41 @@ def combine_ref(
     return jnp.sum((gathered * w).reshape(N, K, -1), axis=1)
 
 
+def _expert_of_row(group_sizes: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Expert id per row of an expert-sorted (N, ...) token slab."""
+    return jnp.searchsorted(jnp.cumsum(group_sizes), jnp.arange(n),
+                            side="right")
+
+
+def ragged_gmm_ref(xs: jnp.ndarray, w: jnp.ndarray,
+                   group_sizes: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the ragged grouped matmul: per-row expert lookup + einsum
+    in f32 accumulation.  xs rows are sorted by expert; group_sizes must sum
+    to xs.shape[0]."""
+    e = _expert_of_row(group_sizes, xs.shape[0])
+    out = jnp.einsum("nd,ndf->nf", xs.astype(jnp.float32),
+                     w.astype(jnp.float32)[e])
+    return out.astype(xs.dtype)
+
+
+def fused_gate_up_ref(xs, w_gate, w_up, group_sizes, activation="silu"):
+    """Oracle for the fused gate+up kernel: act(x@wg) * (x@wu) per group."""
+    e = _expert_of_row(group_sizes, xs.shape[0])
+    xf = xs.astype(jnp.float32)
+    hg = jnp.einsum("nd,ndf->nf", xf, w_gate.astype(jnp.float32)[e])
+    hu = jnp.einsum("nd,ndf->nf", xf, w_up.astype(jnp.float32)[e])
+    act = jax.nn.gelu(hg, approximate=True) if activation == "gelu" \
+        else jax.nn.silu(hg)
+    return (act * hu).astype(xs.dtype)
+
+
+def ragged_moe_ffn_ref(xs, w_gate, w_up, w_down, group_sizes,
+                       activation="silu"):
+    """Oracle for the 2-launch ragged expert FFN on expert-sorted tokens."""
+    h = fused_gate_up_ref(xs, w_gate, w_up, group_sizes, activation)
+    return ragged_gmm_ref(h, w_down, group_sizes)
+
+
 def moe_ffn_ref(x, w_gate, w_up, w_down, weights, indices, activation="silu"):
     """Reference for the whole capacity-free MoE FFN: exact one-hot combine
     (no drops) — the ground truth the capacity path approaches as the

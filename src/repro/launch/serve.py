@@ -36,6 +36,11 @@ def main():
     ap.add_argument("--proposer", default="model",
                     choices=sorted(registered_proposers()),
                     help="drafting strategy (Proposer registry kind)")
+    ap.add_argument("--moe-dispatch", default="gmm",
+                    choices=["onehot", "gmm", "ep"],
+                    help="MoE dispatch for the decode path; the serving "
+                         "default is the ragged grouped-matmul kernel "
+                         "(training keeps onehot)")
     ap.add_argument("--timed", action="store_true",
                     help="record per-phase propose/verify/reject timings")
     ap.add_argument("--no-autotune", action="store_true")
@@ -43,7 +48,7 @@ def main():
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
-    target = Model(cfg)
+    target = Model(cfg, moe_dispatch=args.moe_dispatch)
     params_t = target.init(jax.random.PRNGKey(args.seed))
 
     if args.proposer == "eagle":
@@ -93,8 +98,8 @@ def main():
         timing = (f" propose={r.propose_time:.3f}s verify={r.verify_time:.3f}s"
                   f" reject={r.reject_time:.3f}s" if args.timed else "")
         print(f"wave: B={r.batch}/{r.bucket} gamma={r.gamma} "
-              f"proposer={r.proposer} sd={r.used_sd} "
-              f"{r.tokens_per_second:.1f} tok/s  {sd}{timing}")
+              f"proposer={r.proposer} dispatch={r.moe_dispatch} "
+              f"sd={r.used_sd} {r.tokens_per_second:.1f} tok/s  {sd}{timing}")
     for kind, s in eng.session_stats().items():
         print(f"session[{kind}]: constructed {s['constructions']}x, "
               f"gammas compiled {s['gammas_compiled']}, "

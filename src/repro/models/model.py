@@ -235,8 +235,9 @@ class Model:
             cache = dict(cache, cross=cross_kvs)
         x, new_layers, _ = tfm.stack_forward(
             params["layers"], cfg, x, positions, cache["layers"],
-            mode="prefill", dispatch=self.moe_dispatch, use_flash=self.use_flash,
-            remat=self.remat, cross_kvs=cross_kvs, mrope_positions=mrope_positions)
+            mode="prefill", dispatch=self.moe_dispatch, want_metrics=False,
+            use_flash=self.use_flash, remat=self.remat, cross_kvs=cross_kvs,
+            mrope_positions=mrope_positions)
         # head only at each sequence's last prompt position — never (B,T,V)
         last_h = jnp.take_along_axis(
             x, (lengths - 1)[:, None, None].astype(jnp.int32), axis=1)
@@ -264,10 +265,14 @@ class Model:
         B, T = tokens.shape
         positions = cache["lengths"][:, None] + jnp.arange(T)[None, :]
         x = self._embed(params, tokens, positions)
+        # decode/verify never consumes router metrics — want_metrics=False
+        # skips the (N, K, E) one-hot aux-loss/expert-count tensors that the
+        # SD verify hot path would otherwise materialize every round
         x, new_layers, _ = tfm.stack_forward(
             params["layers"], cfg, x, positions, cache["layers"],
             mode="extend", collect=collect, dispatch=self.moe_dispatch,
-            use_flash=self.use_flash, cross_kvs=cache.get("cross"))
+            want_metrics=False, use_flash=self.use_flash,
+            cross_kvs=cache.get("cross"))
         logits = self._head(params, x)                           # (B, T, V)
         pend = dict(cache, layers=new_layers)
         return logits, pend
@@ -284,7 +289,8 @@ class Model:
         x, new_layers, _ = tfm.stack_forward(
             params["layers"], cfg, x, positions, cache["layers"],
             mode="extend", collect=collect, dispatch=self.moe_dispatch,
-            use_flash=self.use_flash, cross_kvs=cache.get("cross"))
+            want_metrics=False, use_flash=self.use_flash,
+            cross_kvs=cache.get("cross"))
         logits = self._head(params, x)
         return logits, x, dict(cache, layers=new_layers)
 

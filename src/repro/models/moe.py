@@ -91,7 +91,9 @@ def _dispatch_onehot(params, cfg, x, weights, indices):
 
 
 def _dispatch_gmm(params, cfg, x, weights, indices):
-    """Sort tokens by expert, grouped matmul (Pallas gmm kernel)."""
+    """Sort tokens by expert, ragged grouped matmul (kernels/gmm/ragged.py):
+    fused gate+up launch then down launch — 2 Pallas calls per MoE FFN, and
+    expert GEMM work scales with the routed token count N*K, not E*C."""
     from repro.kernels.gmm import ops as gmm_ops
 
     N, d = x.shape
@@ -102,10 +104,9 @@ def _dispatch_gmm(params, cfg, x, weights, indices):
     xs = x[token_of]                                        # (N*K, d) sorted by expert
     group_sizes = jnp.bincount(flat_expert, length=E)
 
-    h_gate = gmm_ops.gmm(xs, params["w_gate"], group_sizes)
-    h_up = gmm_ops.gmm(xs, params["w_up"], group_sizes)
-    h = _act(h_gate, cfg.mlp_activation) * h_up
-    ys = gmm_ops.gmm(h, params["w_down"], group_sizes)      # (N*K, d)
+    ys = gmm_ops.ragged_moe_ffn(
+        xs, params["w_gate"], params["w_up"], params["w_down"], group_sizes,
+        activation=cfg.mlp_activation)                      # (N*K, d)
 
     w_flat = weights.reshape(-1)[order].astype(ys.dtype)    # (N*K,)
     out = jnp.zeros((N, d), ys.dtype)

@@ -74,6 +74,7 @@ def block_forward(
     collect: bool = False,
     causal: bool = True,
     dispatch: str = "onehot",
+    want_metrics: bool = True,
     use_flash: bool = False,
     cross_kv: Optional[dict] = None,
     mrope_positions=None,
@@ -100,15 +101,21 @@ def block_forward(
         h = apply_norm(params["cross_norm"], x, cfg.norm_eps)
         x = x + attn.cross_attn_forward(params["cross"], cfg, h, cross_kv)
 
+    # zero placeholders keep the metrics pytree uniform across layers for the
+    # scan aggregation even when metric computation is skipped
     metrics = {"aux_loss": jnp.zeros((), jnp.float32),
                "expert_counts": jnp.zeros((max(cfg.num_experts, 1),), jnp.int32)}
     if "ffn" in params:
         h = apply_norm(params["norm2"], x, cfg.norm_eps)
         if is_moe:
+            # want_metrics=False (decode/verify) skips the (N, K, E) one-hot
+            # aux-loss/expert-count tensors entirely — the router still runs
+            # (routing needs it) but no metric materialization happens
             y, m = moe_mod.moe_forward(params["ffn"], cfg, h, dispatch=dispatch,
-                                       return_metrics=True)
-            metrics["aux_loss"] = m["aux_loss"]
-            metrics["expert_counts"] = m["expert_counts"]
+                                       return_metrics=want_metrics)
+            if want_metrics:
+                metrics["aux_loss"] = m["aux_loss"]
+                metrics["expert_counts"] = m["expert_counts"]
         else:
             y = apply_mlp(params["ffn"], h, cfg.mlp_activation)
         x = x + y
@@ -151,19 +158,24 @@ def stack_forward(
     collect: bool = False,
     causal: bool = True,
     dispatch: str = "onehot",
+    want_metrics: bool = True,
     use_flash: bool = False,
     remat: bool = False,
     cross_kvs: Optional[List[dict]] = None,
     mrope_positions=None,
 ) -> Tuple[jnp.ndarray, Optional[List[dict]], dict]:
-    """Run the full stack.  caches/cross_kvs leaves carry leading (P, ...)."""
+    """Run the full stack.  caches/cross_kvs leaves carry leading (P, ...).
+
+    ``want_metrics=False`` (the serving decode/verify path) skips router
+    aux-loss/expert-count materialization; the returned metrics are zeros.
+    """
 
     def make_block(i, kind, is_moe):
         def blk(lp_i, h, lc_i, lx_i):
             return block_forward(
                 lp_i, cfg, kind, is_moe, h, positions, lc_i,
                 mode=mode, collect=collect, causal=causal, dispatch=dispatch,
-                use_flash=use_flash, cross_kv=lx_i,
+                want_metrics=want_metrics, use_flash=use_flash, cross_kv=lx_i,
                 mrope_positions=mrope_positions)
         # per-LAYER rematerialization: checkpointing the whole period keeps
         # every layer's FFN/attention intermediates live during the period's

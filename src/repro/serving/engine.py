@@ -60,6 +60,7 @@ class WaveReport:
     tokens_out: int
     proposer: str = "model"
     bucket: int = 0                       # padded batch actually decoded
+    moe_dispatch: str = "onehot"          # target's decode dispatch mode
 
     @property
     def tokens_per_second(self) -> float:
@@ -142,6 +143,12 @@ class ServingEngine:
         while self.queue and len(wave) < self.max_batch:
             wave.append(self.queue.popleft())
         return wave
+
+    @property
+    def moe_dispatch(self) -> str:
+        """The target model's MoE dispatch mode for this engine's decodes
+        (launch/serve defaults it to "gmm" — the ragged serving kernels)."""
+        return getattr(self.target, "moe_dispatch", "onehot")
 
     # -------------------------------------------------------------- sessions
     def _session(self, kind: str) -> SDEngine:
@@ -241,7 +248,8 @@ class ServingEngine:
             n_tokens += len(r.output)
             self.done[r.uid] = r
         report = WaveReport(B, gamma, use_sd, stats, wall, n_tokens,
-                            proposer=kind, bucket=bucket)
+                            proposer=kind, bucket=bucket,
+                            moe_dispatch=self.moe_dispatch)
         self.reports.append(report)
         return report
 

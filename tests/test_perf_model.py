@@ -92,6 +92,33 @@ def test_fit_bounds_respected():
     assert 0.2 <= p["lam"] <= 1.0 and 1.0 <= p["s"] <= 2.0
 
 
+def test_dispatch_cost_gmm_cheaper_than_onehot():
+    """T_target under the gmm (K-sparse) dispatch is monotonically cheaper
+    than onehot (E-dense) for E > K, and the gap widens with E: the dense
+    one-hot combine pays k2*E + full-t expert GEMMs regardless of routing."""
+    p = np.array([1.0, 0.5, 2.0, 1.5, 0.1, 0.05, 0.01, 0.001, 0.5, 1.2])
+    model = SpeedupModel()
+    K, t = 2.0, 40.0
+    gaps = []
+    for E in (2, 4, 8, 16, 64):
+        t_gmm = float(model.target_time(t, K, E, dispatch="gmm", params=p))
+        t_onehot = float(model.target_time(t, K, E, dispatch="onehot",
+                                           params=p))
+        if E == K:
+            assert abs(t_gmm - t_onehot) < 1e-9       # dense MoE: same cost
+        else:
+            assert t_gmm < t_onehot
+        gaps.append(t_onehot - t_gmm)
+    assert all(b > a for a, b in zip(gaps, gaps[1:]))  # monotone in E
+    # the dispatch mode threads through the full speedup prediction too
+    sd_gmm = SpeedupModel(dispatch="gmm")
+    sd_onehot = SpeedupModel(dispatch="onehot")
+    args = (np.array([8.0]), np.array([4.0]), np.array([2.0]),
+            np.array([64.0]), np.array([0.8]))
+    assert not np.allclose(sd_gmm.compute_speedup(p, *args),
+                           sd_onehot.compute_speedup(p, *args))
+
+
 def test_stride_sample_counts():
     rows = list(range(228))
     for m in (10, 21, 57):
