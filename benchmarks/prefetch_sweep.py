@@ -1,0 +1,86 @@
+"""Prefetch-aware proposer sweep (SP-MoE, arXiv:2510.10302): measured
+expert-warmup hit rates per wave + the perf-model's priced T_target
+reduction, written to BENCH_prefetch.json.
+
+Real runs: the trained reduced MoE target serves waves through
+``ServingEngine(proposer="prefetch")``; every wave's WaveReport carries the
+hit/miss counts the verify passes scored against the router-probe plan.
+The analytic rows price what the measured hit rate h is worth: the verify
+call's expert-load term shrinks to k2·N(t)·(1-h) (core/perf_model).
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from benchmarks.common import csv_row, trained_pair
+from repro.core.perf_model import SpeedupModel
+from repro.data.pipeline import prompt_batch
+
+# synthetic-unit parameter vector (same convention as the perf-model tests):
+# [bias, k1, k2, k3, draft_bias, draft_k, reject_bias, reject_k, lam, s]
+UNIT_PARAMS = np.array([1.0, 0.5, 2.0, 1.5, 0.1, 0.05, 0.01, 0.001, 0.5, 1.2])
+
+
+def run(out_path: str = "BENCH_prefetch.json") -> list:
+    from repro.serving.engine import ServingEngine
+
+    (target, pt), (draft, pd) = trained_pair("qwen2-57b-a14b", kind="chat")
+    cfg = target.cfg
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    gamma = 4
+    # tight warm budget (half the experts): the reduced configs are small
+    # enough that the default min(E, 2K) would warm EVERYTHING and measure
+    # a trivial hit rate of 1.0 — halving it makes the probe's prediction
+    # quality visible against the random-warm baseline top_m/E
+    top_m = max(1, E // 2)
+    rows, records = [], []
+    for B in (1, 2, 4):
+        eng = ServingEngine(target, draft, pt, pd, max_batch=B, gamma=gamma,
+                            force_sd=True, proposer="prefetch", seed=B,
+                            proposer_opts={"top_m": top_m})
+        pb = prompt_batch(cfg.vocab_size, B, kind="chat", seed=B)
+        for i in range(B):
+            eng.submit(pb["tokens"][i][: pb["lengths"][i]],
+                       max_new_tokens=16)
+        report = eng.step()
+        s = report.stats
+        h = s.prefetch_hit_rate
+        # what h is worth at the verify token count N = B*(gamma+1): the
+        # warmed experts' load term is hidden under the propose phase
+        model = SpeedupModel(dispatch="gmm")
+        t_cold = float(model.target_time(B * (gamma + 1), K, E,
+                                         params=UNIT_PARAMS,
+                                         prefetch_hit_rate=0.0))
+        t_warm = float(model.target_time(B * (gamma + 1), K, E,
+                                         params=UNIT_PARAMS,
+                                         prefetch_hit_rate=h))
+        saved_pct = 100.0 * (t_cold - t_warm) / t_cold
+        rows.append(csv_row(
+            f"prefetch_sweep_B{B}", report.wall_time * 1e6,
+            f"hit_rate={h:.3f};hits={s.prefetch_hits};"
+            f"misses={s.prefetch_misses};t_target_saved_pct={saved_pct:.1f}"))
+        records.append({
+            "batch": B, "gamma": gamma, "E": E, "K": K, "top_m": top_m,
+            "random_warm_baseline": top_m / max(E, 1),
+            "rounds": s.rounds, "sigma": round(s.sigma, 4),
+            "alpha": round(s.alpha, 4),
+            "prefetch_hits": s.prefetch_hits,
+            "prefetch_misses": s.prefetch_misses,
+            "prefetch_predicted": s.prefetch_predicted,
+            "hit_rate": round(h, 4),
+            "tokens_per_second": round(report.tokens_per_second, 2),
+            "t_target_cold": round(t_cold, 4),
+            "t_target_warm": round(t_warm, 4),
+            "t_target_saved_pct": round(saved_pct, 2),
+        })
+    with open(out_path, "w") as f:
+        json.dump({"sweep": "prefetch_proposer_hit_rate",
+                   "arch": cfg.name, "gamma": gamma,
+                   "note": "hit_rate MEASURED from real SD waves; "
+                           "t_target_saved_pct is MODELED (perf-model k2 "
+                           "discount, synthetic UNIT_PARAMS) — realizing "
+                           "it needs warmed-buffer donation (ROADMAP)",
+                   "rows": records}, f, indent=1)
+    return rows

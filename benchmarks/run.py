@@ -18,6 +18,7 @@ MODULES = [
     ("table3_fitting", "benchmarks.fitting"),
     ("sec34_offloading", "benchmarks.offloading"),
     ("sec2_prefetch_utility", "benchmarks.prefetch_utility"),
+    ("spmoe_prefetch_sweep", "benchmarks.prefetch_sweep"),
     ("kernels", "benchmarks.kernels"),
 ]
 

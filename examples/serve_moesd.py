@@ -1,6 +1,9 @@
 """Batched SD serving of an MoE (the paper's private-serving scenario):
 continuous waves of requests, auto-tuned gamma, per-wave sigma/alpha and
-the target-efficiency measurement of Sec. 3.1.
+the target-efficiency measurement of Sec. 3.1 — drafted by the
+prefetch-aware proposer (core/prefetch.py), which probes the target's
+routers over each draft stream and warms the predicted experts' weights
+during the propose phase; every wave reports the prediction's hit rate.
 
     PYTHONPATH=src python examples/serve_moesd.py
 """
@@ -45,17 +48,26 @@ def main():
     tuner = AutoTuner(get_config("mixtral-8x7b"),
                       get_config("qwen2-0.5b"), alpha=0.6)
     # one persistent decoding session per proposer kind — waves reuse the
-    # compiled SD rounds even as the tuner changes gamma between them
+    # compiled SD rounds even as the tuner changes gamma between them.
+    # "prefetch" wraps the small-model drafter with draft-phase expert
+    # warming: greedy outputs are identical, and each wave scores how many
+    # of the experts the verify pass hit were already warm.  top_m=2 warms
+    # half the reduced config's experts — a tight budget, so the hit rate
+    # reflects probe quality rather than "warmed everything"
     eng = ServingEngine(target, draft, params_t, params_d, max_batch=8,
-                        tuner=tuner, proposer="model", seed=0)
+                        tuner=tuner, proposer="prefetch",
+                        proposer_opts={"top_m": 2}, seed=0)
     pb = prompt_batch(tcfg.vocab_size, 24, kind="chat", seed=5)
     for i in range(24):
         eng.submit(pb["tokens"][i][: pb["lengths"][i]], max_new_tokens=24)
-    print("serving 24 requests in waves of ≤8...")
+    print("serving 24 requests in waves of ≤8 (prefetch-aware drafting)...")
     for r in eng.run():
         s = r.stats
         extra = (f"sigma={s.sigma:.2f} alpha={s.alpha:.2f} rounds={s.rounds}"
                  if r.used_sd and s else "AR mode")
+        if r.used_sd and s and s.prefetch_actual:
+            extra += (f" prefetch_hit={r.prefetch_hit_rate:.2f} "
+                      f"({r.prefetch_hits}/{s.prefetch_actual})")
         print(f"  wave B={r.batch} gamma={r.gamma} sd={r.used_sd} "
               f"{r.tokens_per_second:6.1f} tok/s  {extra}")
 

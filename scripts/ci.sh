@@ -8,6 +8,9 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+# docs gate: broken relative links in README/docs + docstring presence on
+# the public API surface the docs point at
+timeout 120 python scripts/check_docs.py
 # interpret-mode kernel-parity smoke: ragged + fused gmm vs ref.py oracles
 timeout 120 python -m repro.kernels.gmm.ragged
 exec timeout "${CI_TIMEOUT:-600}" python -m pytest -q -m tier1 "$@"

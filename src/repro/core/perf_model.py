@@ -57,11 +57,21 @@ class SpeedupModel:
                    experts, so k2 scales with E regardless of t and each
                    expert sees the full t tokens — the E/K× FLOP overhead
                    the ragged serving kernels remove.
+
+    ``prefetch_hit_rate`` prices draft-phase expert warming (the prefetch
+    proposer, core/prefetch.py): the k2 term is the expert-weight LOAD cost
+    per activated expert, and a warmed expert's load was already streamed
+    during the propose phase, so the VERIFY pass pays k2 · N(t) · (1 - h)
+    where h is the measured hit rate.  Only the verify call benefits — the
+    AR baseline has no propose phase to hide loads in — and only under the
+    gmm regime (onehot reads every expert as part of the dense GEMM, there
+    is no separable load to hide).
     """
     hw: Hardware = V5E
     params: np.ndarray | None = None
     engine_semantics: bool = False
     dispatch: str = "gmm"
+    prefetch_hit_rate: float = 0.0
 
     # ------------------------------------------------------------ components
     def _terms(self, p: np.ndarray, dispatch: str | None = None):
@@ -70,15 +80,17 @@ class SpeedupModel:
         knee = lam * self.hw.ridge_point
         dispatch = self.dispatch if dispatch is None else dispatch
 
-        def T_target(t, K, E):
+        def T_target(t, K, E, hit_rate=0.0):
             if dispatch == "onehot":
                 n = E * np.ones_like(np.asarray(t, np.float64))
                 t_exp = np.asarray(t, np.float64)
+                k2_eff = k2                     # dense GEMM: no hidden loads
             else:
                 n = expected_activated_experts(t, E, K)
                 t_exp = mean_tokens_per_expert(t, K / E)
+                k2_eff = k2 * (1.0 - np.clip(hit_rate, 0.0, 1.0))
             return (bias + k1 * roofline_response(t, knee, s)
-                    + k2 * n + k3 * roofline_response(t_exp, knee, s))
+                    + k2_eff * n + k3 * roofline_response(t_exp, knee, s))
 
         def T_draft(t):
             return draft_bias + draft_k * roofline_response(t, knee, s)
@@ -89,16 +101,23 @@ class SpeedupModel:
         return T_target, T_draft, T_reject
 
     def target_time(self, t, top_k, num_experts, *, dispatch: str | None = None,
-                    params: np.ndarray | None = None):
-        """Predicted T_target(t) under a dispatch mode — lets serving code
-        compare the onehot (E-dense) and gmm (K-sparse) FFN regimes with one
-        fitted parameter set."""
+                    params: np.ndarray | None = None,
+                    prefetch_hit_rate: float | None = None):
+        """Predicted T_target(t) under a dispatch mode.
+
+        Lets serving code compare the onehot (E-dense) and gmm (K-sparse)
+        FFN regimes — and, via ``prefetch_hit_rate`` (default: the model's
+        own), how much of the expert-load term draft-phase warming hides —
+        with one fitted parameter set.
+        """
         p = self.params if params is None else np.asarray(params, np.float64)
         assert p is not None, "fit() first or pass params"
+        h = self.prefetch_hit_rate if prefetch_hit_rate is None \
+            else prefetch_hit_rate
         T_target, _, _ = self._terms(p, dispatch)
         return T_target(np.asarray(t, np.float64),
                         np.asarray(top_k, np.float64),
-                        np.asarray(num_experts, np.float64))
+                        np.asarray(num_experts, np.float64), hit_rate=h)
 
     def compute_speedup(self, p: np.ndarray, batch, gamma, top_k,
                         num_experts, sigma):
@@ -109,8 +128,11 @@ class SpeedupModel:
         gv = gamma + 1.0 if self.engine_semantics else gamma
         t_ar = T_target(batch, np.asarray(top_k, np.float64),
                         np.asarray(num_experts, np.float64))
+        # only the VERIFY call sees warmed experts (hit_rate): the AR
+        # baseline above has no draft phase to overlap the loads with
         t_ver = T_target(batch * gv, np.asarray(top_k, np.float64),
-                         np.asarray(num_experts, np.float64))
+                         np.asarray(num_experts, np.float64),
+                         hit_rate=self.prefetch_hit_rate)
         t_sd = gv * T_draft(batch) + t_ver + T_reject(batch * gv)
         return np.asarray(sigma, np.float64) * (gamma + 1.0) * t_ar / t_sd
 

@@ -55,7 +55,15 @@ def stack_drafts(ds, qs, batch: int, vocab: int):
 
 @runtime_checkable
 class Proposer(Protocol):
-    """Structural protocol every drafter implements (see module docstring)."""
+    """Structural protocol every drafter implements (see module docstring).
+
+    Class attributes: ``kind`` (the registry string) and ``needs_hidden``
+    (True iff the engine should hand this proposer the target's pre-head
+    hidden states).  An optional ``provides_prefetch = True`` marks a
+    proposer whose ``propose`` work-state carries a ``"plan"`` entry (a
+    ``models/moe.PrefetchPlan``) for draft-phase expert warming
+    (core/prefetch.py).
+    """
 
     kind: str
     needs_hidden: bool
@@ -63,17 +71,89 @@ class Proposer(Protocol):
     def init_state(self, params: dict, prompts: jnp.ndarray, max_seq: int, *,
                    lengths: Optional[jnp.ndarray] = None,
                    last_hidden: Optional[jnp.ndarray] = None) -> Any:
+        """Build the proposer's opaque state once per generation.
+
+        Parameters
+        ----------
+        params : dict
+            ``{"target": params_t, "draft": params_p}``.
+        prompts : jnp.ndarray
+            (B, T) padded prompt tokens, already prefilled into the target.
+        max_seq : int
+            Static cache capacity for this generation.
+        lengths : jnp.ndarray, optional
+            (B,) true prompt lengths (``None`` means all rows are full).
+        last_hidden : jnp.ndarray, optional
+            (B, d) target pre-head hidden state at each sequence's last
+            prompt position — provided iff ``needs_hidden``.
+
+        Returns
+        -------
+        Any
+            Opaque pytree threaded through ``propose``/``commit`` (draft KV
+            cache, feature carry, ...).
+        """
         ...
 
     def propose(self, params: dict, state: Any, last_token: jnp.ndarray,
                 gamma: int, key: jax.Array
                 ) -> Tuple[jnp.ndarray, jnp.ndarray, Any]:
+        """Draft up to ``gamma`` tokens per sequence (pure / trace-safe).
+
+        Parameters
+        ----------
+        params : dict
+            ``{"target": params_t, "draft": params_p}``.
+        state : Any
+            Pytree returned by ``init_state`` or the previous ``commit``.
+        last_token : jnp.ndarray
+            (B,) the most recently committed token per sequence.
+        gamma : int
+            Requested speculation width (static per compiled round).
+        key : jax.Array
+            PRNG key for draft sampling.
+
+        Returns
+        -------
+        drafts : jnp.ndarray
+            (B, g) drafted tokens with g <= gamma (g = 0 is the AR
+            baseline).
+        q_dist : jnp.ndarray
+            (B, g, V) draft distributions for rejection sampling.
+        work_state : Any
+            Round work-state handed to ``commit`` (may carry extras a
+            pre-commit snapshot or a prefetch plan).
+        """
         ...
 
     def commit(self, params: dict, state: Any, *, base_len: jnp.ndarray,
                n_accept: jnp.ndarray, n_commit: jnp.ndarray,
                verify_tokens: jnp.ndarray,
                hidden: Optional[jnp.ndarray]) -> Any:
+        """Reconcile draft state to the accepted prefix after rejection.
+
+        Parameters
+        ----------
+        params : dict
+            ``{"target": params_t, "draft": params_p}``.
+        state : Any
+            The work-state ``propose`` returned this round.
+        base_len : jnp.ndarray
+            (B,) sequence lengths before this round's commit.
+        n_accept : jnp.ndarray
+            (B,) accepted draft tokens per sequence.
+        n_commit : jnp.ndarray
+            (B,) committed tokens (``n_accept + 1``, incl. bonus/residual).
+        verify_tokens : jnp.ndarray
+            (B, g+1) the tokens the target verified this round.
+        hidden : jnp.ndarray, optional
+            (B, g+1, d) target verify hidden states iff ``needs_hidden``.
+
+        Returns
+        -------
+        Any
+            The reconciled state for the next round's ``propose``.
+        """
         ...
 
 
@@ -84,7 +164,8 @@ class Proposer(Protocol):
 _REGISTRY: Dict[str, Callable[..., "Proposer"]] = {}
 # kinds whose factory lives in a module we only import on first use, so the
 # serving engine never needs conditional imports in its hot path
-_LAZY_KINDS = {"eagle": "repro.core.eagle"}
+_LAZY_KINDS = {"eagle": "repro.core.eagle",
+               "prefetch": "repro.core.prefetch"}
 
 
 def register_proposer(name: str, factory: Optional[Callable] = None):
@@ -108,18 +189,35 @@ def registered_proposers() -> Tuple[str, ...]:
 
 
 def make_proposer(kind: str, target, draft=None, *,
-                  temperature: float = 0.0) -> "Proposer":
+                  temperature: float = 0.0, **opts) -> "Proposer":
     """Build a registered proposer by name.
 
-    ``draft`` is kind-specific: a draft ``Model`` for "model", an
-    ``EagleHead`` (or None to build one) for "eagle", ignored for "none".
+    Parameters
+    ----------
+    kind : str
+        A registered (or lazily importable) proposer kind.
+    target : Model
+        The target model the proposer drafts for.
+    draft : object, optional
+        Kind-specific drafter: a draft ``Model`` for "model", an
+        ``EagleHead`` (or None to build one) for "eagle", ignored for
+        "none".
+    temperature : float
+        Draft sampling temperature.
+    **opts
+        Extra kind-specific factory kwargs (e.g. ``top_m`` / ``inner`` for
+        "prefetch").
+
+    Returns
+    -------
+    Proposer
     """
     if kind not in _REGISTRY and kind in _LAZY_KINDS:
         importlib.import_module(_LAZY_KINDS[kind])   # module self-registers
     if kind not in _REGISTRY:
         raise KeyError(
             f"unknown proposer {kind!r}; registered: {registered_proposers()}")
-    return _REGISTRY[kind](target, draft, temperature=temperature)
+    return _REGISTRY[kind](target, draft, temperature=temperature, **opts)
 
 
 # ---------------------------------------------------------------------------

@@ -50,6 +50,7 @@ import numpy as np
 from repro.core.proposer import Proposer, make_proposer
 from repro.core.rejection import probs_from_logits, rejection_sample, sample_from
 from repro.models.model import Model
+from repro.models.moe import warm_experts as moe_warm_experts
 
 
 @dataclass
@@ -63,6 +64,12 @@ class SDStats:
     propose_time: float = 0.0               # per-phase (timed=True only)
     verify_time: float = 0.0
     reject_time: float = 0.0
+    # expert-prefetch accounting (prefetch-aware proposers only): summed
+    # over rounds, layers and periods — hits = activated AND warmed
+    prefetch_hits: int = 0
+    prefetch_actual: int = 0                # experts the verify passes hit
+    prefetch_predicted: int = 0             # experts the plans warmed
+    warm_time: float = 0.0                  # warm DISPATCH time (timed only)
 
     @property
     def sigma(self) -> float:               # paper's σ (Eq. 5 empirical)
@@ -71,6 +78,14 @@ class SDStats:
     @property
     def alpha(self) -> float:               # empirical acceptance rate
         return self.accept_events / max(self.draft_events, 1)
+
+    @property
+    def prefetch_misses(self) -> int:       # activated but NOT warmed
+        return self.prefetch_actual - self.prefetch_hits
+
+    @property
+    def prefetch_hit_rate(self) -> float:   # P(activated expert was warm)
+        return self.prefetch_hits / max(self.prefetch_actual, 1)
 
 
 class SDEngine:
@@ -91,6 +106,10 @@ class SDEngine:
         self._round_cache: Dict[int, Callable] = {}      # gamma -> jitted round
         self._stage_cache: Dict[int, Tuple] = {}         # gamma -> stage jits
         self.trace_log: List[Tuple[int, int]] = []       # (gamma, B) per trace
+        # session-lifetime expert-prefetch aggregates (prefetch proposers):
+        # summed across every generate() call this session served
+        self.prefetch_totals: Dict[str, int] = {
+            "hits": 0, "actual": 0, "predicted": 0, "rounds": 0}
 
     def compiled_gammas(self) -> List[int]:
         """Gammas with a built round (fused or staged) in this session."""
@@ -98,22 +117,40 @@ class SDEngine:
 
     # ----------------------------------------------------------- round pieces
     def _stages(self, gamma: int):
-        """(propose, verify, finalize) pure stage functions for one gamma."""
+        """(propose, verify, finalize) pure stage functions for one gamma.
+
+        Prefetch-aware proposers (``provides_prefetch``) get a verify stage
+        that additionally takes the round's ``PrefetchPlan`` and returns the
+        hit/miss counts scored by ``Model.extend_with_prefetch``; all other
+        proposers' verify returns ``pf = None``.
+        """
         target, proposer, temp = self.target, self.proposer, self.temperature
+        pf_aware = getattr(proposer, "provides_prefetch", False)
 
         def propose(params, p_state, last_token, k_prop):
             return proposer.propose(params, p_state, last_token, gamma, k_prop)
 
-        def verify(params_t, t_cache, last_token, drafts):
-            verify_tokens = jnp.concatenate([last_token[:, None], drafts], 1)
-            if proposer.needs_hidden:
-                logits, hidden, pend = target.extend_with_hidden(
-                    params_t, verify_tokens, t_cache, collect=True)
-            else:
-                logits, pend = target.extend(params_t, verify_tokens, t_cache,
-                                             collect=True)
-                hidden = None
-            return probs_from_logits(logits, temp), hidden, pend
+        if pf_aware:
+            def verify(params_t, t_cache, last_token, drafts, plan):
+                verify_tokens = jnp.concatenate([last_token[:, None], drafts],
+                                                1)
+                logits, hidden, pend, pf = target.extend_with_prefetch(
+                    params_t, verify_tokens, t_cache, plan, collect=True)
+                if not proposer.needs_hidden:
+                    hidden = None
+                return probs_from_logits(logits, temp), hidden, pend, pf
+        else:
+            def verify(params_t, t_cache, last_token, drafts):
+                verify_tokens = jnp.concatenate([last_token[:, None], drafts],
+                                                1)
+                if proposer.needs_hidden:
+                    logits, hidden, pend = target.extend_with_hidden(
+                        params_t, verify_tokens, t_cache, collect=True)
+                else:
+                    logits, pend = target.extend(params_t, verify_tokens,
+                                                 t_cache, collect=True)
+                    hidden = None
+                return probs_from_logits(logits, temp), hidden, pend, None
 
         def finalize(params, pend, p_state, base_len, p_dist, q_dist, drafts,
                      hidden, last_token, k_rej):
@@ -138,7 +175,16 @@ class SDEngine:
         return propose, verify, finalize
 
     def _round_fn(self, gamma: int) -> Callable:
-        """Fused jitted round for one gamma (built once per session)."""
+        """Fused jitted round for one gamma (built once per session).
+
+        Prefetch-aware proposers never take this path — inside one
+        monolithic XLA computation the warm gather would be dead code, so
+        ``generate`` always runs them staged (see ``_staged_jits``).
+        """
+        if getattr(self.proposer, "provides_prefetch", False):
+            raise RuntimeError(
+                "prefetch-aware proposers decode through staged rounds; "
+                "the fused round cannot express the warm dispatch")
         fn = self._round_cache.get(gamma)
         if fn is None:
             propose, verify, finalize = self._stages(gamma)
@@ -149,18 +195,27 @@ class SDEngine:
                 base_len = t_cache["lengths"]
                 drafts, q_dist, p_work = propose(params, p_state, last_token,
                                                  k_prop)
-                p_dist, hidden, pend = verify(params["target"], t_cache,
-                                              last_token, drafts)
-                return finalize(params, pend, p_work, base_len, p_dist,
-                                q_dist, drafts, hidden, last_token, k_rej)
+                p_dist, hidden, pend, pf = verify(params["target"], t_cache,
+                                                  last_token, drafts)
+                out = finalize(params, pend, p_work, base_len, p_dist,
+                               q_dist, drafts, hidden, last_token, k_rej)
+                return out + (pf,)
 
             fn = jax.jit(round_fn)
             self._round_cache[gamma] = fn
         return fn
 
     def _staged_jits(self, gamma: int):
-        """Separately-jitted stages for timed=True: syncing between them
-        gives real per-phase wall times (at the cost of fusion)."""
+        """Separately-jitted (propose, verify, finalize, warm) stages.
+
+        Used for ``timed=True`` (syncing between stages gives real per-phase
+        wall times) and for prefetch-aware proposers even untimed: the round
+        must be split so the host can dispatch the expert-warm gather
+        *between* the propose and verify launches — that interleaving is the
+        overlap (a fused round gives XLA one monolithic computation and the
+        warm gather would be dead code).  ``warm`` is ``None`` for ordinary
+        proposers.
+        """
         fns = self._stage_cache.get(gamma)
         if fns is None:
             propose, verify, finalize = self._stages(gamma)
@@ -169,8 +224,17 @@ class SDEngine:
                 self.trace_log.append((gamma, int(last_token.shape[0])))
                 return propose(params, p_state, last_token, k_prop)
 
+            warm = None
+            if getattr(self.proposer, "provides_prefetch", False):
+                target_cfg = self.target.cfg
+
+                def warm(params_t, plan):
+                    return moe_warm_experts(params_t["layers"], target_cfg,
+                                            plan)
+                warm = jax.jit(warm)
+
             fns = (jax.jit(propose_logged), jax.jit(verify),
-                   jax.jit(finalize))
+                   jax.jit(finalize), warm)
             self._stage_cache[gamma] = fns
         return fns
 
@@ -232,37 +296,64 @@ class SDEngine:
         n_out += 1
 
         stats = SDStats()
-        round_fn = None if timed else self._round_fn(gamma)
-        stages = self._staged_jits(gamma) if timed else None
+        pf_aware = getattr(self.proposer, "provides_prefetch", False)
+        # prefetch-aware rounds always run staged: the warm gather must be
+        # dispatched between the propose and verify launches (see
+        # _staged_jits); timed mode additionally syncs per phase
+        staged = timed or pf_aware
+        round_fn = None if staged else self._round_fn(gamma)
+        stages = self._staged_jits(gamma) if staged else None
         while int(n_out.min()) < max_new_tokens:
             key, k_prop, k_rej = jax.random.split(key, 3)
             t_round = time.perf_counter()
-            if timed:
-                j_prop, j_verify, j_fin = stages
+            if staged:
+                j_prop, j_verify, j_fin, j_warm = stages
                 base_len = t_cache["lengths"]
                 t0 = time.perf_counter()
                 drafts, q_dist, p_work = j_prop(params, p_state, last_token,
                                                 k_prop)
-                jax.block_until_ready(drafts)
-                stats.propose_time += time.perf_counter() - t0
+                if timed:
+                    jax.block_until_ready(drafts)
+                    stats.propose_time += time.perf_counter() - t0
+                if j_warm is not None:
+                    # async dispatch, never blocked on: the gather of the
+                    # predicted experts' weights runs ahead of verify on the
+                    # device queue while the host assembles the verify call
+                    t0 = time.perf_counter()
+                    j_warm(params["target"], p_work["plan"])
+                    if timed:
+                        # timed-only, like the other phase stats (and like
+                        # them the first round includes trace+compile)
+                        stats.warm_time += time.perf_counter() - t0
                 t0 = time.perf_counter()
-                p_dist, hidden, pend = j_verify(params["target"], t_cache,
-                                                last_token, drafts)
-                jax.block_until_ready(p_dist)
-                stats.verify_time += time.perf_counter() - t0
+                if pf_aware:
+                    p_dist, hidden, pend, pf = j_verify(
+                        params["target"], t_cache, last_token, drafts,
+                        p_work["plan"])
+                else:
+                    p_dist, hidden, pend, pf = j_verify(
+                        params["target"], t_cache, last_token, drafts)
+                if timed:
+                    jax.block_until_ready(p_dist)
+                    stats.verify_time += time.perf_counter() - t0
                 t0 = time.perf_counter()
                 (t_cache, p_state, last_token, committed, n_commit, n_acc) = \
                     j_fin(params, pend, p_work, base_len, p_dist, q_dist,
                           drafts, hidden, last_token, k_rej)
-                jax.block_until_ready(committed)
-                stats.reject_time += time.perf_counter() - t0
+                if timed:
+                    jax.block_until_ready(committed)
+                    stats.reject_time += time.perf_counter() - t0
             else:
-                (t_cache, p_state, last_token, committed, n_commit, n_acc) = \
-                    round_fn(params, t_cache, p_state, last_token, k_prop,
-                             k_rej)
+                (t_cache, p_state, last_token, committed, n_commit, n_acc,
+                 pf) = round_fn(params, t_cache, p_state, last_token, k_prop,
+                                k_rej)
             committed = np.asarray(committed)        # device sync
             n_commit_np = np.asarray(n_commit)
             stats.round_time += time.perf_counter() - t_round
+            if pf is not None:
+                stats.prefetch_hits += int(np.asarray(pf["hits"]))
+                stats.prefetch_actual += int(np.asarray(pf["actual"]))
+                stats.prefetch_predicted += int(np.asarray(pf["predicted"]))
             for b in range(B):
                 n = int(n_commit_np[b])
                 w = min(n, out.shape[1] - n_out[b])
@@ -277,6 +368,11 @@ class SDEngine:
             stats.max_possible += (gamma + 1) * B
             stats.accept_events += int(np.asarray(n_acc))
             stats.draft_events += (width - 1) * B
+        if pf_aware:
+            self.prefetch_totals["hits"] += stats.prefetch_hits
+            self.prefetch_totals["actual"] += stats.prefetch_actual
+            self.prefetch_totals["predicted"] += stats.prefetch_predicted
+            self.prefetch_totals["rounds"] += stats.rounds
         return out[:, :max_new_tokens], stats
 
 

@@ -33,8 +33,28 @@ def _round_up(v: int, m: int) -> int:
 
 def expert_capacity(n_tokens: int, k: int, num_experts: int,
                     capacity_factor: float = 2.0, align: int = 128) -> int:
-    """Fixed per-expert bin size; paper §3.2 assumes balanced routing, so a
-    2x factor keeps drops negligible (validated in tests)."""
+    """Fixed per-expert bin size for the capacity-binned paths.
+
+    Parameters
+    ----------
+    n_tokens : int
+        Tokens entering the router (N).
+    k : int
+        Experts per token (top-K).
+    num_experts : int
+        Total experts (E).
+    capacity_factor : float
+        Headroom over the balanced-routing mean N*K/E; the paper (§3.2)
+        assumes balanced routing, so 2x keeps drops negligible (validated
+        in tests).
+    align : int
+        Round the bin size up to this multiple (MXU tile alignment).
+
+    Returns
+    -------
+    int
+        Static per-expert bin capacity C.
+    """
     mean = n_tokens * k / num_experts
     return max(align, _round_up(int(mean * capacity_factor), align))
 
@@ -54,9 +74,35 @@ def moe_ffn_gmm(
     interpret: bool = INTERPRET,
     return_dropped: bool = False,
 ) -> Union[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
-    """Capacity-binned MoE FFN.  With ``return_dropped=True`` also returns
-    the number of (token, k) assignments that overflowed their expert's bin
-    — the drops are deterministic (slot order) but no longer silent."""
+    """Capacity-binned MoE FFN: dispatch → 3 grouped GEMMs → combine.
+
+    Parameters
+    ----------
+    x : jnp.ndarray
+        (N, D) token activations.
+    w_gate, w_up : jnp.ndarray
+        (E, D, F) per-expert up-projections.
+    w_down : jnp.ndarray
+        (E, F, D) per-expert down-projection.
+    weights, indices : jnp.ndarray
+        (N, K) router combine weights and expert ids.
+    capacity : int
+        Static per-expert bin size (see :func:`expert_capacity`).
+    activation : str
+        "silu" (default) or "gelu".
+    interpret : bool
+        Run the Pallas kernels in interpret mode (CPU-correctness path).
+    return_dropped : bool
+        Also return the number of (token, k) assignments that overflowed
+        their expert's bin — deterministic (slot order) but no longer
+        silent.
+
+    Returns
+    -------
+    jnp.ndarray or (jnp.ndarray, jnp.ndarray)
+        (N, D) combined output; with ``return_dropped=True`` also the int32
+        overflow count.
+    """
     E, D, F = w_gate.shape
     N = x.shape[0]
     bins, slot, kept = dispatch_ref(x, indices, E, capacity)
@@ -73,12 +119,30 @@ def moe_ffn_gmm(
 
 def gmm(xs: jnp.ndarray, w: jnp.ndarray, group_sizes: jnp.ndarray,
         *, interpret: bool = INTERPRET) -> jnp.ndarray:
-    """Sorted-token grouped matmul (N_sorted, D) with per-expert group sizes.
+    """Sorted-token grouped matmul via the ragged Pallas kernel.
 
-    Ragged kernel: per-expert offsets are scalar-prefetched and each m-tile
-    looks up its expert from the group boundaries — no ``(E, C)``
-    densification, empty experts cost zero tiles, work scales with the
-    routed token count (kernels/gmm/ragged.py).
+    Parameters
+    ----------
+    xs : jnp.ndarray
+        (N_sorted, D) token rows sorted by expert id.
+    w : jnp.ndarray
+        (E, D, F) per-expert weight matrices.
+    group_sizes : jnp.ndarray
+        (E,) tokens routed to each expert (sums to N_sorted).
+    interpret : bool
+        Run the kernel in interpret mode (CPU-correctness path).
+
+    Returns
+    -------
+    jnp.ndarray
+        (N_sorted, F) per-row ``xs[i] @ w[expert_of(i)]``.
+
+    Notes
+    -----
+    Per-expert offsets are scalar-prefetched and each m-tile looks up its
+    expert from the group boundaries — no ``(E, C)`` densification, empty
+    experts cost zero tiles, work scales with the routed token count
+    (kernels/gmm/ragged.py; tradeoffs in docs/dispatch.md).
     """
     return ragged_gmm(xs, w, group_sizes, interpret=interpret)
 
@@ -88,15 +152,35 @@ def gmm_legacy(xs: jnp.ndarray, w: jnp.ndarray, group_sizes: jnp.ndarray,
                interpret: bool = INTERPRET) -> jnp.ndarray:
     """Bin-to-capacity fallback for the ragged kernel.
 
-    Tokens are scattered into fixed-size per-expert bins and run through the
-    dense ``gmm_capacity`` kernel.  ``capacity`` must be a static bound on
-    the largest group; it defaults to ``round_up(N, 128)`` (exact for any
-    routing, at worst-case cost).  Callers with a tighter static bound —
-    e.g. a capacity-factor guarantee — pass it to shrink the bins.  The
-    bound is NOT checked: a group larger than ``capacity`` has its overflow
-    rows' inputs dropped by the scatter and the gather-back clamps their
-    slot to ``capacity - 1``, so those output rows silently receive another
-    token's result — only pass a capacity you can guarantee.
+    Parameters
+    ----------
+    xs : jnp.ndarray
+        (N_sorted, D) token rows sorted by expert id.
+    w : jnp.ndarray
+        (E, D, F) per-expert weight matrices.
+    group_sizes : jnp.ndarray
+        (E,) tokens routed to each expert.
+    capacity : int, optional
+        Static bound on the largest group.  Defaults to
+        ``round_up(N, 128)`` — exact for any routing, at worst-case cost;
+        callers with a tighter guarantee (e.g. a capacity factor) pass it
+        to shrink the bins.
+    interpret : bool
+        Run the kernel in interpret mode.
+
+    Returns
+    -------
+    jnp.ndarray
+        (N_sorted, F) per-row grouped matmul output.
+
+    Notes
+    -----
+    Tokens are scattered into fixed-size per-expert bins and run through
+    the dense ``gmm_capacity`` kernel.  The ``capacity`` bound is NOT
+    checked: a group larger than ``capacity`` has its overflow rows' inputs
+    dropped by the scatter and the gather-back clamps their slot to
+    ``capacity - 1``, so those output rows silently receive another token's
+    result — only pass a capacity you can guarantee.
     """
     E, D, F = w.shape
     N = xs.shape[0]

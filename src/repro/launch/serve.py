@@ -5,7 +5,9 @@
 
 ``--proposer`` selects the drafting strategy through the Proposer registry
 (core/proposer.py): "model" (small draft model), "eagle" (speculation head
-on the target's features), or "none" (plain AR baseline).
+on the target's features), "prefetch" (small draft model + draft-phase
+expert warming, printing per-wave hit rates — core/prefetch.py), or "none"
+(plain AR baseline).
 """
 from __future__ import annotations
 
@@ -36,6 +38,9 @@ def main():
     ap.add_argument("--proposer", default="model",
                     choices=sorted(registered_proposers()),
                     help="drafting strategy (Proposer registry kind)")
+    ap.add_argument("--prefetch-top-m", type=int, default=None,
+                    help="experts to warm per period-slot with --proposer "
+                         "prefetch (default: min(E, 2K))")
     ap.add_argument("--moe-dispatch", default="gmm",
                     choices=["onehot", "gmm", "ep"],
                     help="MoE dispatch for the decode path; the serving "
@@ -77,11 +82,14 @@ def main():
         else:
             tuner_draft = draft_for(full_cfg)
         tuner = AutoTuner(full_cfg, tuner_draft, alpha=0.7)
+    proposer_opts = {}
+    if args.proposer == "prefetch" and args.prefetch_top_m is not None:
+        proposer_opts["top_m"] = args.prefetch_top_m
     eng = ServingEngine(target, draft, params_t, params_d,
                         max_batch=args.max_batch, tuner=tuner,
                         gamma=args.gamma, temperature=args.temperature,
-                        proposer=args.proposer, seed=args.seed,
-                        timed=args.timed)
+                        proposer=args.proposer, proposer_opts=proposer_opts,
+                        seed=args.seed, timed=args.timed)
 
     pb = prompt_batch(cfg.vocab_size, args.requests, kind=args.kind,
                       seed=args.seed)
@@ -97,9 +105,17 @@ def main():
               f"rounds={r.stats.rounds}" if r.used_sd and r.stats else "AR")
         timing = (f" propose={r.propose_time:.3f}s verify={r.verify_time:.3f}s"
                   f" reject={r.reject_time:.3f}s" if args.timed else "")
+        if args.timed and r.warm_time:
+            timing += f" warm={r.warm_time:.3f}s"
+        # gate on the stats, not the kind string: any provides_prefetch
+        # proposer populates the accounting
+        pf = (f" prefetch_hit={r.prefetch_hit_rate:.2f} "
+              f"({r.prefetch_hits}/{r.stats.prefetch_actual})"
+              if r.stats and r.stats.prefetch_actual else "")
         print(f"wave: B={r.batch}/{r.bucket} gamma={r.gamma} "
               f"proposer={r.proposer} dispatch={r.moe_dispatch} "
-              f"sd={r.used_sd} {r.tokens_per_second:.1f} tok/s  {sd}{timing}")
+              f"sd={r.used_sd} {r.tokens_per_second:.1f} tok/s  "
+              f"{sd}{pf}{timing}")
     for kind, s in eng.session_stats().items():
         print(f"session[{kind}]: constructed {s['constructions']}x, "
               f"gammas compiled {s['gammas_compiled']}, "

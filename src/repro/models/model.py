@@ -247,6 +247,26 @@ class Model:
         return last, last_h[:, 0], new_cache
 
     # ---------------------------------------------------------------- extend
+    def _extend_impl(self, params, tokens, cache, *, collect=False,
+                     prefetch_masks=None):
+        """Shared decode/verify forward behind the three extend variants.
+
+        decode/verify never consumes router metrics — want_metrics=False
+        skips the (N, K, E) one-hot aux-loss/expert-count tensors that the
+        SD verify hot path would otherwise materialize every round.
+        """
+        cfg = self.cfg
+        B, T = tokens.shape
+        positions = cache["lengths"][:, None] + jnp.arange(T)[None, :]
+        x = self._embed(params, tokens, positions)
+        x, new_layers, metrics = tfm.stack_forward(
+            params["layers"], cfg, x, positions, cache["layers"],
+            mode="extend", collect=collect, dispatch=self.moe_dispatch,
+            want_metrics=False, use_flash=self.use_flash,
+            cross_kvs=cache.get("cross"), prefetch_masks=prefetch_masks)
+        logits = self._head(params, x)                           # (B, T, V)
+        return logits, x, dict(cache, layers=new_layers), metrics
+
     def extend(
         self,
         params,
@@ -261,38 +281,57 @@ class Model:
         unpadded (equal-length) prompts for recurrent archs, since states
         advance strictly sequentially.
         """
-        cfg = self.cfg
-        B, T = tokens.shape
-        positions = cache["lengths"][:, None] + jnp.arange(T)[None, :]
-        x = self._embed(params, tokens, positions)
-        # decode/verify never consumes router metrics — want_metrics=False
-        # skips the (N, K, E) one-hot aux-loss/expert-count tensors that the
-        # SD verify hot path would otherwise materialize every round
-        x, new_layers, _ = tfm.stack_forward(
-            params["layers"], cfg, x, positions, cache["layers"],
-            mode="extend", collect=collect, dispatch=self.moe_dispatch,
-            want_metrics=False, use_flash=self.use_flash,
-            cross_kvs=cache.get("cross"))
-        logits = self._head(params, x)                           # (B, T, V)
-        pend = dict(cache, layers=new_layers)
+        logits, _, pend, _ = self._extend_impl(params, tokens, cache,
+                                               collect=collect)
         return logits, pend
+
+    def extend_with_prefetch(self, params, tokens, cache, plan, *,
+                             collect: bool = False):
+        """Verify forward that scores an expert-prefetch plan as it runs.
+
+        Identical compute to :meth:`extend` (same logits, same cache
+        discipline), but each MoE layer additionally compares the experts it
+        actually routed to against ``plan.masks`` — the prediction whose
+        weights were warmed during the propose phase.
+
+        Parameters
+        ----------
+        params, tokens, cache
+            As :meth:`extend`; ``tokens`` is the (B, gamma+1) verify stream.
+        plan : models.moe.PrefetchPlan
+            The warm plan built from the draft token stream.
+        collect : bool
+            As :meth:`extend` (recurrent per-step state collection).
+
+        Returns
+        -------
+        logits : jnp.ndarray
+            (B, T, V) next-token logits.
+        hidden : jnp.ndarray
+            (B, T, d) final pre-head hidden states (for hidden-feeding
+            proposers; ignored otherwise).
+        pend : dict
+            Pending cache for :meth:`commit`.
+        pf : dict
+            int32 scalars ``{"hits", "actual", "predicted"}`` summed over
+            all MoE layers and periods — the verify pass's prefetch
+            hit/miss accounting.
+        """
+        logits, x, pend, metrics = self._extend_impl(
+            params, tokens, cache, collect=collect,
+            prefetch_masks=list(plan.masks))
+        pf = {k: metrics[f"prefetch_{k}"]
+              for k in ("hits", "actual", "predicted")}
+        return logits, x, pend, pf
 
     def extend_with_hidden(self, params, tokens, cache, *, collect=False):
         """extend() variant that also returns the final hidden states
         (B, T, d) — consumed by EAGLE-style speculation heads
         (core/eagle.py), which predict the NEXT token's features from the
         target's current features."""
-        cfg = self.cfg
-        B, T = tokens.shape
-        positions = cache["lengths"][:, None] + jnp.arange(T)[None, :]
-        x = self._embed(params, tokens, positions)
-        x, new_layers, _ = tfm.stack_forward(
-            params["layers"], cfg, x, positions, cache["layers"],
-            mode="extend", collect=collect, dispatch=self.moe_dispatch,
-            want_metrics=False, use_flash=self.use_flash,
-            cross_kvs=cache.get("cross"))
-        logits = self._head(params, x)
-        return logits, x, dict(cache, layers=new_layers)
+        logits, x, pend, _ = self._extend_impl(params, tokens, cache,
+                                               collect=collect)
+        return logits, x, pend
 
     # ---------------------------------------------------------------- commit
     def commit(self, pend: dict, n_commit: jnp.ndarray, collected: bool = False) -> dict:

@@ -12,15 +12,111 @@ Two dispatch strategies, one interface:
 
 The router also reports which experts were activated — the measurement
 behind the paper's N(t) validation (Fig. 1a/b).
+
+Expert prefetch (SP-MoE, arXiv:2510.10302): a ``PrefetchPlan`` names, per
+period-slot, the experts a router probe over the draft token stream predicts
+the next verify pass will hit.  ``warm_experts`` gathers exactly those
+experts' FFN weights into fresh device buffers — dispatched during the SD
+propose phase, so on an accelerator the HBM reads of the predicted experts
+overlap drafting instead of serializing with verify.  ``moe_forward``
+accepts the per-slot mask and scores the prediction against the experts the
+verify pass actually activated (hit/miss counts, surfaced per wave by the
+serving engine).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.layers import dense_init
+
+
+class PrefetchPlan(NamedTuple):
+    """Per-period-slot expert-warmup prediction (a jit-safe pytree).
+
+    Attributes
+    ----------
+    masks : tuple of jnp.ndarray
+        One ``(P, E)`` bool array per period-slot (``P`` = num_periods,
+        ``E`` = num_experts): True where the probe predicts the verify pass
+        will activate that expert.  Non-MoE slots carry all-False masks.
+    expert_ids : tuple of jnp.ndarray
+        One ``(P, M)`` int32 array per period-slot — the top-M predicted
+        expert ids backing each mask (``M`` static, so the warm gather has a
+        fixed shape).  Non-MoE slots carry ``(P, 0)``.
+    """
+
+    masks: Tuple[jnp.ndarray, ...]
+    expert_ids: Tuple[jnp.ndarray, ...]
+
+
+def warm_experts(layer_params, cfg, plan: PrefetchPlan):
+    """Gather the predicted experts' FFN weights into fresh buffers.
+
+    Parameters
+    ----------
+    layer_params : list of dict
+        ``params["layers"]`` — per period-slot params with leading ``P``
+        axis (``w_gate``/``w_up``/``w_down`` are ``(P, E, d, f)``-shaped).
+    cfg : ModelConfig
+        Supplies ``moe_pattern`` (which slots have routed FFNs).
+    plan : PrefetchPlan
+        ``expert_ids[i]`` selects the ``(P, M)`` experts to warm in slot i.
+
+    Returns
+    -------
+    list of dict
+        Per MoE slot, ``{"w_gate": (P, M, d, f), "w_up": ..., "w_down":
+        (P, M, f, d)}`` gathered copies.  The VALUES are not consumed — the
+        point is the dispatch: issued right after propose, the gather
+        streams the predicted experts' weights while the host is still
+        assembling the verify launch.  NOTE this makes the warming a
+        dispatch-level SIMULATION in this reproduction: verify still reads
+        the original buffers, so the priced k2 saving (docs/metrics.md) is
+        a model of what the measured hit rate is worth once warmed buffers
+        are donated to the gmm dispatch (ROADMAP headroom).
+    """
+    gather = jax.vmap(lambda w, ids: jnp.take(w, ids, axis=0))
+    warmed = []
+    for i, is_moe in enumerate(cfg.moe_pattern):
+        if not is_moe or plan.expert_ids[i].shape[-1] == 0:
+            continue
+        ffn = layer_params[i]["ffn"]
+        ids = plan.expert_ids[i]
+        warmed.append({k: gather(ffn[k], ids)
+                       for k in ("w_gate", "w_up", "w_down")})
+    return warmed
+
+
+def prefetch_hit_stats(prefetch_mask: jnp.ndarray, indices: jnp.ndarray,
+                       num_experts: int) -> dict:
+    """Score one layer's prediction against the experts actually routed to.
+
+    Parameters
+    ----------
+    prefetch_mask : jnp.ndarray
+        ``(E,)`` bool — experts the plan predicted (and warmed).
+    indices : jnp.ndarray
+        ``(N, K)`` routed expert ids from this forward.
+    num_experts : int
+        E.
+
+    Returns
+    -------
+    dict
+        int32 scalars: ``hits`` (activated AND warmed), ``actual``
+        (activated), ``predicted`` (warmed) — the per-wave hit/miss
+        accounting aggregated by the engine.
+    """
+    actual = jnp.zeros((num_experts,), bool).at[indices.reshape(-1)].set(True)
+    predicted = prefetch_mask.astype(bool)
+    return {
+        "prefetch_hits": jnp.sum(actual & predicted).astype(jnp.int32),
+        "prefetch_actual": jnp.sum(actual).astype(jnp.int32),
+        "prefetch_predicted": jnp.sum(predicted).astype(jnp.int32),
+    }
 
 
 def init_moe(key, cfg, dtype) -> dict:
@@ -121,22 +217,61 @@ def moe_forward(
     dispatch: str = "onehot",        # "onehot" | "gmm"
     rng: Optional[jax.Array] = None,
     return_metrics: bool = False,
+    prefetch_mask: Optional[jnp.ndarray] = None,   # (E,) predicted-hot experts
 ):
+    """Routed MoE FFN: top-k route, dispatch to experts, weighted combine.
+
+    Parameters
+    ----------
+    params : dict
+        ``init_moe`` params (router + per-expert FFN weights).
+    cfg : ModelConfig
+        Supplies E, K, activation, jitter.
+    x : jnp.ndarray
+        (B, T, d) input activations.
+    dispatch : str
+        "onehot" (dense, shardable — training), "gmm" (ragged grouped
+        matmul — serving) or "ep" (expert-parallel shard_map).  Tradeoffs
+        in docs/dispatch.md.
+    rng : jax.Array, optional
+        Router jitter key (train only).
+    return_metrics : bool
+        Compute aux-loss / expert-count metrics (train only — materializes
+        (N, K, E) one-hots).
+    prefetch_mask : jnp.ndarray, optional
+        (E,) predicted-hot expert mask from a PrefetchPlan; when given, the
+        returned metrics include prefetch hit/miss counts scored against
+        this forward's actual routing.
+
+    Returns
+    -------
+    (jnp.ndarray, dict or None)
+        (B, T, d) output and the requested metrics (None if neither
+        ``return_metrics`` nor ``prefetch_mask``).
+    """
     B, T, d = x.shape
     if dispatch == "ep":
         # expert-parallel shard_map path (distributed/collectives.py);
-        # router runs inside the shard, so metrics come from a cheap
-        # replicated re-route below.
+        # router runs inside the shard, so metrics (and prefetch scoring)
+        # come from a cheap replicated re-route below.
         from repro.distributed.collectives import moe_ep_forward
         y = moe_ep_forward(params, cfg, x)
-        if return_metrics:
+        metrics = None
+        if return_metrics or prefetch_mask is not None:
             xf = x.reshape(B * T, d)
             _, indices, probs = router_topk(params, cfg, xf, rng)
-            return y, {
-                "aux_loss": load_balance_loss(probs, indices, cfg.num_experts),
-                "expert_counts": expert_activation_counts(indices, cfg.num_experts),
-            }
-        return y, None
+            if return_metrics:
+                metrics = {
+                    "aux_loss": load_balance_loss(probs, indices,
+                                                  cfg.num_experts),
+                    "expert_counts": expert_activation_counts(
+                        indices, cfg.num_experts),
+                }
+            if prefetch_mask is not None:
+                metrics = dict(metrics or {},
+                               **prefetch_hit_stats(prefetch_mask, indices,
+                                                    cfg.num_experts))
+        return y, metrics
     xf = x.reshape(B * T, d)
     weights, indices, probs = router_topk(params, cfg, xf, rng)
     if dispatch == "gmm":
@@ -148,10 +283,16 @@ def moe_forward(
         h = _act(xf @ s["w_gate"], cfg.mlp_activation) * (xf @ s["w_up"])
         y = y + h @ s["w_down"]
     y = y.reshape(B, T, d)
+    metrics = None
     if return_metrics:
         metrics = {
             "aux_loss": load_balance_loss(probs, indices, cfg.num_experts),
             "expert_counts": expert_activation_counts(indices, cfg.num_experts),
         }
-        return y, metrics
-    return y, None
+    if prefetch_mask is not None:
+        # score the warm plan against the experts this forward actually hit;
+        # cheap (one (E,) scatter) and decode-only — train never passes a mask
+        metrics = dict(metrics or {},
+                       **prefetch_hit_stats(prefetch_mask, indices,
+                                            cfg.num_experts))
+    return y, metrics

@@ -78,6 +78,7 @@ def block_forward(
     use_flash: bool = False,
     cross_kv: Optional[dict] = None,
     mrope_positions=None,
+    prefetch_mask: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, Optional[dict], dict]:
     h = apply_norm(params["norm1"], x, cfg.norm_eps)
     if kind in ("attn", "swa"):
@@ -104,7 +105,10 @@ def block_forward(
     # zero placeholders keep the metrics pytree uniform across layers for the
     # scan aggregation even when metric computation is skipped
     metrics = {"aux_loss": jnp.zeros((), jnp.float32),
-               "expert_counts": jnp.zeros((max(cfg.num_experts, 1),), jnp.int32)}
+               "expert_counts": jnp.zeros((max(cfg.num_experts, 1),), jnp.int32),
+               "prefetch_hits": jnp.zeros((), jnp.int32),
+               "prefetch_actual": jnp.zeros((), jnp.int32),
+               "prefetch_predicted": jnp.zeros((), jnp.int32)}
     if "ffn" in params:
         h = apply_norm(params["norm2"], x, cfg.norm_eps)
         if is_moe:
@@ -112,10 +116,15 @@ def block_forward(
             # aux-loss/expert-count tensors entirely — the router still runs
             # (routing needs it) but no metric materialization happens
             y, m = moe_mod.moe_forward(params["ffn"], cfg, h, dispatch=dispatch,
-                                       return_metrics=want_metrics)
+                                       return_metrics=want_metrics,
+                                       prefetch_mask=prefetch_mask)
             if want_metrics:
                 metrics["aux_loss"] = m["aux_loss"]
                 metrics["expert_counts"] = m["expert_counts"]
+            if prefetch_mask is not None:
+                for k in ("prefetch_hits", "prefetch_actual",
+                          "prefetch_predicted"):
+                    metrics[k] = m[k]
         else:
             y = apply_mlp(params["ffn"], h, cfg.mlp_activation)
         x = x + y
@@ -163,20 +172,26 @@ def stack_forward(
     remat: bool = False,
     cross_kvs: Optional[List[dict]] = None,
     mrope_positions=None,
+    prefetch_masks: Optional[List[jnp.ndarray]] = None,
 ) -> Tuple[jnp.ndarray, Optional[List[dict]], dict]:
     """Run the full stack.  caches/cross_kvs leaves carry leading (P, ...).
 
     ``want_metrics=False`` (the serving decode/verify path) skips router
     aux-loss/expert-count materialization; the returned metrics are zeros.
+
+    ``prefetch_masks`` (optional) is a per-period-slot list of ``(P, E)``
+    predicted-hot expert masks (models/moe.PrefetchPlan.masks); when given,
+    the returned metrics include ``prefetch_hits/actual/predicted`` counts
+    summed over all MoE layers.
     """
 
     def make_block(i, kind, is_moe):
-        def blk(lp_i, h, lc_i, lx_i):
+        def blk(lp_i, h, lc_i, lx_i, lm_i):
             return block_forward(
                 lp_i, cfg, kind, is_moe, h, positions, lc_i,
                 mode=mode, collect=collect, causal=causal, dispatch=dispatch,
                 want_metrics=want_metrics, use_flash=use_flash, cross_kv=lx_i,
-                mrope_positions=mrope_positions)
+                mrope_positions=mrope_positions, prefetch_mask=lm_i)
         # per-LAYER rematerialization: checkpointing the whole period keeps
         # every layer's FFN/attention intermediates live during the period's
         # backward (107 GB/device on jamba train_4k — §Perf C4); per-layer
@@ -188,19 +203,20 @@ def stack_forward(
               in enumerate(zip(cfg.layer_pattern, cfg.moe_pattern))]
 
     def period_fn(h, scanned):
-        lp, lc, lx = scanned
+        lp, lc, lx, lm = scanned
         new_caches = []
         agg = None
         for i in range(cfg.period):
             h, nc, m = blocks[i](
                 lp[i], h,
                 None if lc is None else lc[i],
-                None if lx is None else lx[i])
+                None if lx is None else lx[i],
+                None if lm is None else lm[i])
             new_caches.append(nc if nc is not None else {})
             agg = m if agg is None else jax.tree.map(jnp.add, agg, m)
         return constrain(h, "hidden"), (new_caches, agg)
 
-    xs = (layer_params, caches, cross_kvs)
+    xs = (layer_params, caches, cross_kvs, prefetch_masks)
 
     def scan_body(h, scanned):
         return period_fn(h, scanned)

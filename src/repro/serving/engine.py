@@ -84,6 +84,23 @@ class WaveReport:
     def reject_time(self) -> float:
         return self.stats.reject_time if self.stats else 0.0
 
+    @property
+    def warm_time(self) -> float:
+        return self.stats.warm_time if self.stats else 0.0
+
+    # expert-prefetch accounting (prefetch-aware waves; zero otherwise)
+    @property
+    def prefetch_hits(self) -> int:
+        return self.stats.prefetch_hits if self.stats else 0
+
+    @property
+    def prefetch_misses(self) -> int:
+        return self.stats.prefetch_misses if self.stats else 0
+
+    @property
+    def prefetch_hit_rate(self) -> float:
+        return self.stats.prefetch_hit_rate if self.stats else 0.0
+
 
 def _pow2_at_least(n: int) -> int:
     b = 1
@@ -106,12 +123,14 @@ class ServingEngine:
         temperature: float = 0.0,
         force_sd: Optional[bool] = None,
         proposer: str = "model",            # registered proposer kind
+        proposer_opts: Optional[dict] = None,  # extra factory kwargs for it
         draft_kind: Optional[str] = None,   # deprecated alias for proposer
         seed: int = 0,
         timed: bool = False,
         bucket_batches: bool = True,
     ):
         self.proposer_kind = draft_kind if draft_kind is not None else proposer
+        self.proposer_opts = dict(proposer_opts or {})
         self.target, self.draft = target, draft
         self.params_t, self.params_d = params_t, params_d
         self.max_batch = max_batch
@@ -155,9 +174,12 @@ class ServingEngine:
         """The long-lived decoding session for one proposer kind."""
         sess = self._sessions.get(kind)
         if sess is None:
+            # kind-specific factory opts only apply to the configured kind
+            # (never to the "none" AR-fallback session)
+            opts = self.proposer_opts if kind == self.proposer_kind else {}
             prop = make_proposer(kind, self.target,
                                  None if kind == "none" else self.draft,
-                                 temperature=self.temperature)
+                                 temperature=self.temperature, **opts)
             sess = SDEngine(self.target, prop, gamma=self.gamma,
                             temperature=self.temperature)
             self._sessions[kind] = sess
@@ -166,15 +188,37 @@ class ServingEngine:
         return sess
 
     def session_stats(self) -> Dict[str, dict]:
-        """Construction counts + compiled-round reuse per proposer kind."""
-        return {
-            kind: {
+        """Per-proposer-kind session health: reuse, traces, prefetch totals.
+
+        Returns
+        -------
+        dict
+            One entry per proposer kind this engine has served, each with:
+
+            ``constructions`` : int
+                Times the session was built (always 1 per kind — waves
+                reuse sessions; tests assert on it).
+            ``gammas_compiled`` : list of int
+                Gammas with a built (fused or staged) decode round.
+            ``traces`` : list of (gamma, batch)
+                Every jit retrace the session performed; a wave that reuses
+                a compiled round adds nothing here.
+            ``prefetch`` : dict
+                Session-lifetime expert-warmup aggregates ``{"hits",
+                "actual", "predicted", "rounds", "hit_rate"}`` summed over
+                all waves (all zero unless the kind is prefetch-aware).
+        """
+        out = {}
+        for kind, sess in self._sessions.items():
+            totals = dict(sess.prefetch_totals)
+            totals["hit_rate"] = totals["hits"] / max(totals["actual"], 1)
+            out[kind] = {
                 "constructions": self.session_constructions.get(kind, 0),
                 "gammas_compiled": sess.compiled_gammas(),
                 "traces": list(sess.trace_log),
+                "prefetch": totals,
             }
-            for kind, sess in self._sessions.items()
-        }
+        return out
 
     # ------------------------------------------------------------------ wave
     def _bucket(self, B: int) -> int:
@@ -203,7 +247,27 @@ class ServingEngine:
         return k
 
     def step(self, key: Optional[jax.Array] = None) -> Optional[WaveReport]:
-        """Process one wave; returns its report (None if queue empty)."""
+        """Admit and decode one generation wave.
+
+        Pops up to ``max_batch`` queued requests, consults the tuner for
+        {use_sd, gamma} at the padded bucket size, decodes the wave through
+        the persistent session for the active proposer kind, and records
+        finished requests in ``self.done``.
+
+        Parameters
+        ----------
+        key : jax.Array, optional
+            PRNG key for this wave's sampling.  Default: a fresh split from
+            the engine's root key (so waves are never key-correlated).
+
+        Returns
+        -------
+        WaveReport or None
+            The wave's report — batch/gamma/proposer, SDStats (sigma,
+            alpha, per-phase timings, prefetch hit/miss counts for
+            prefetch-aware waves), wall time and tokens/sec — or ``None``
+            if the queue was empty.
+        """
         wave = self._admit()
         if not wave:
             return None

@@ -119,6 +119,38 @@ def test_dispatch_cost_gmm_cheaper_than_onehot():
                            sd_onehot.compute_speedup(p, *args))
 
 
+def test_prefetch_overlap_pricing():
+    """Draft-phase expert warming discounts only the verify call's k2
+    (expert-load) term: T_target falls monotonically with the hit rate
+    under gmm dispatch, onehot is untouched (no separable load to hide),
+    and the full speedup prediction rises with the hit rate because the AR
+    numerator is priced cold."""
+    p = np.array([1.0, 0.5, 2.0, 1.5, 0.1, 0.05, 0.01, 0.001, 0.5, 1.2])
+    model = SpeedupModel(dispatch="gmm")
+    K, E, t = 2.0, 64.0, 40.0
+    times = [float(model.target_time(t, K, E, params=p,
+                                     prefetch_hit_rate=h))
+             for h in (0.0, 0.3, 0.7, 1.0)]
+    assert all(b < a for a, b in zip(times, times[1:]))
+    # h=1 removes exactly the k2*N(t) load term
+    from repro.core.analytics import expected_activated_experts
+    expect_gap = p[2] * float(expected_activated_experts(t, E, K))
+    assert times[0] - times[-1] == pytest.approx(expect_gap)
+    # onehot: dense GEMM reads every expert regardless — no discount
+    cold = float(model.target_time(t, K, E, params=p, dispatch="onehot",
+                                   prefetch_hit_rate=0.0))
+    warm = float(model.target_time(t, K, E, params=p, dispatch="onehot",
+                                   prefetch_hit_rate=0.9))
+    assert cold == warm
+    # end-to-end: speedup is monotone in the measured hit rate
+    args = (np.array([8.0]), np.array([4.0]), np.array([K]),
+            np.array([E]), np.array([0.8]))
+    spd = [float(SpeedupModel(dispatch="gmm", prefetch_hit_rate=h)
+                 .compute_speedup(p, *args)[0])
+           for h in (0.0, 0.5, 1.0)]
+    assert spd[0] < spd[1] < spd[2]
+
+
 def test_stride_sample_counts():
     rows = list(range(228))
     for m in (10, 21, 57):
