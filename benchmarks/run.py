@@ -19,6 +19,7 @@ MODULES = [
     ("sec34_offloading", "benchmarks.offloading"),
     ("sec2_prefetch_utility", "benchmarks.prefetch_utility"),
     ("spmoe_prefetch_sweep", "benchmarks.prefetch_sweep"),
+    ("continuous_sweep", "benchmarks.continuous_sweep"),
     ("kernels", "benchmarks.kernels"),
 ]
 

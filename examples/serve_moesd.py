@@ -71,6 +71,28 @@ def main():
         print(f"  wave B={r.batch} gamma={r.gamma} sd={r.used_sd} "
               f"{r.tokens_per_second:6.1f} tok/s  {extra}")
 
+    # continuous batching on the SAME persistent sessions: a fixed pool of
+    # KV slots, retire/refill between rounds via masked admission prefills,
+    # and the tuner re-planning {use_sd, gamma} on the LIVE slot count
+    # every round (the paper's N(t)-dependence operated) — with a Poisson
+    # arrival trace and mixed completion lengths, the traffic where wave
+    # padding costs the most
+    from repro.core.analytics import occupancy_timeline
+    from repro.serving.scheduler import submit_poisson
+    pb2 = prompt_batch(tcfg.vocab_size, 16, kind="chat", seed=11)
+    submit_poisson(eng, pb2["tokens"], pb2["lengths"], rate=1.0,
+                   max_new_choices=(8, 16, 24), seed=11)
+    print("serving 16 Poisson arrivals through the continuous slot "
+          "scheduler (pool of 8)...")
+    r = eng.step_continuous()
+    occ = occupancy_timeline([s.live for s in r.steps],
+                             [s.committed for s in r.steps])
+    print(f"  stream: {r.batch} requests, {r.tokens_out} tokens, "
+          f"{r.tokens_per_second:6.1f} tok/s over {r.stats.rounds} rounds")
+    print(f"  N(t): peak={occ['peak_live']:.0f} mean={occ['mean_live']:.2f} "
+          f"token_weighted={occ['token_weighted_live']:.2f} "
+          f"occupancy={occ['mean_occupancy']:.2f}")
+
     # target efficiency, measured on this backend (Sec. 3.1 metric)
     cache = target.init_cache(8, 128)
     toks = jnp.asarray(pb["tokens"][:8, :32])

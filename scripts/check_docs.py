@@ -60,13 +60,27 @@ DOCUMENTED_API = [
                              "Proposer.commit", "register_proposer",
                              "make_proposer", "registered_proposers"]),
     ("repro.core.prefetch", ["PrefetchProposer", "router_probe"]),
-    ("repro.core.spec_decode", ["SDEngine", "generate_ar"]),
+    ("repro.core.spec_decode", ["SDEngine", "SDEngine.start",
+                                "SDEngine.round", "SDEngine.admit",
+                                "SessionState", "RoundResult",
+                                "generate_ar"]),
     ("repro.serving.engine", ["ServingEngine.step",
-                              "ServingEngine.session_stats"]),
+                              "ServingEngine.step_continuous",
+                              "ServingEngine.submit",
+                              "ServingEngine.session_stats",
+                              "finish_output"]),
+    ("repro.serving.scheduler", ["ContinuousScheduler",
+                                 "ContinuousScheduler.run_stream",
+                                 "SlotState", "StepReport",
+                                 "submit_poisson"]),
+    ("repro.models.model", ["merge_cache_rows"]),
+    ("repro.core.analytics", ["occupancy_timeline",
+                              "predicted_decay_speedup"]),
     ("repro.kernels.gmm.ops", ["gmm", "gmm_legacy", "moe_ffn_gmm",
                                "expert_capacity"]),
     ("repro.models.moe", ["moe_forward", "warm_experts", "PrefetchPlan"]),
-    ("repro.core.perf_model", ["SpeedupModel", "SpeedupModel.target_time"]),
+    ("repro.core.perf_model", ["SpeedupModel", "SpeedupModel.target_time",
+                               "SpeedupModel.predict_decay"]),
 ]
 
 

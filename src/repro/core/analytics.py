@@ -62,3 +62,71 @@ def sigma_from_alpha(alpha, gamma: int):
 def expected_accepted_len(alpha, gamma: int):
     """S/R = sigma * (gamma + 1): mean tokens committed per SD round."""
     return sigma_from_alpha(alpha, gamma) * (gamma + 1)
+
+
+def occupancy_timeline(live, committed=None):
+    """Summarize a continuous stream's live-batch trajectory N(t).
+
+    ``live`` is the per-round active-slot count a continuous scheduler
+    decoded (serving/scheduler.StepReport.live), ``committed`` the tokens
+    credited per round (default: uniform).  Returns the occupancy numbers
+    the decay-aware speedup comparison needs:
+
+    ``mean_live``
+        time-averaged N(t) (each round weighted equally),
+    ``token_weighted_live``
+        the batch size an average TOKEN was decoded at — this, not
+        ``mean_live``, is what throughput-weighted speedup sees,
+    ``peak_live`` / ``final_live`` / ``mean_occupancy``
+        the decay shape: a wave scheduler pins ``mean_occupancy`` near the
+        drained tail's value; continuous admission keeps it near 1.
+    """
+    live = np.asarray(live, dtype=np.float64)
+    if live.size == 0:
+        return {"rounds": 0, "peak_live": 0.0, "final_live": 0.0,
+                "mean_live": 0.0, "token_weighted_live": 0.0,
+                "mean_occupancy": 0.0}
+    committed = (np.ones_like(live) if committed is None
+                 else np.asarray(committed, dtype=np.float64))
+    w = committed / max(committed.sum(), 1e-12)
+    peak = float(live.max())
+    return {
+        "rounds": int(live.size),
+        "peak_live": peak,
+        "final_live": float(live[-1]),
+        "mean_live": float(live.mean()),
+        "token_weighted_live": float((w * live).sum()),
+        "mean_occupancy": float(live.mean() / max(peak, 1.0)),
+    }
+
+
+def predicted_decay_speedup(live, gammas, speedup_fn, committed=None):
+    """Occupancy-decay-aware predicted speedup for a continuous stream.
+
+    Evaluates ``speedup_fn(batch, gamma)`` (e.g. ``AutoTuner.speedup`` or
+    a fitted ``SpeedupModel`` closure) at every round's LIVE batch size —
+    the paper's speedup-vs-batch curve walked along the measured N(t)
+    trajectory instead of sampled at one static B.  Returns per-round
+    predictions plus their committed-token-weighted mean, the model-side
+    number a measured continuous-vs-AR throughput ratio should be compared
+    against (rounds that committed more tokens matter more).
+
+    gamma=0 rounds (the scheduler's in-session SD→AR handoff) are priced
+    at exactly 1.0 — they ARE the AR baseline — so ``speedup_fn`` is never
+    called with a gamma its SD formula can't express.
+    """
+    live = np.asarray(live, dtype=np.float64)
+    gammas = np.broadcast_to(np.asarray(gammas, dtype=np.float64),
+                             live.shape)
+    per_round = np.array(
+        [1.0 if int(g) == 0 else float(speedup_fn(int(b), int(g)))
+         for b, g in zip(live, gammas)],
+        dtype=np.float64)
+    if per_round.size == 0:
+        return {"per_round": per_round, "mean": 0.0, "token_weighted": 0.0}
+    committed = (np.ones_like(per_round) if committed is None
+                 else np.asarray(committed, dtype=np.float64))
+    w = committed / max(committed.sum(), 1e-12)
+    return {"per_round": per_round,
+            "mean": float(per_round.mean()),
+            "token_weighted": float((per_round * w).sum())}

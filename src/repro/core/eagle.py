@@ -145,6 +145,12 @@ class EagleProposer:
             hidden, n_accept[:, None, None].astype(jnp.int32), axis=1)[:, 0]
         return {"cache": cache, "feat": feat}
 
+    def merge_state(self, old, new, mask):
+        """Admission merge: head KV cache rows + per-row feature carry."""
+        from repro.models.model import merge_cache_rows
+        return {"cache": merge_cache_rows(old["cache"], new["cache"], mask),
+                "feat": jnp.where(mask[:, None], new["feat"], old["feat"])}
+
 
 class EagleSpecDecoder(SDEngine):
     """Legacy shim: target + EagleHead == SDEngine("eagle").

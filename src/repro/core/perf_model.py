@@ -141,6 +141,26 @@ class SpeedupModel:
         return self.compute_speedup(self.params, batch, gamma, top_k,
                                     num_experts, sigma)
 
+    def predict_decay(self, live, gammas, top_k, num_experts, sigma,
+                      committed=None):
+        """Occupancy-decay-aware speedup for a continuous stream.
+
+        ``live``/``gammas`` are per-round arrays (the N(t) trajectory and
+        the gammas a continuous scheduler actually planned —
+        serving/scheduler.StepReport), ``committed`` the per-round token
+        credits used as weights.  Returns ``{"per_round", "mean",
+        "token_weighted"}``: the fitted speedup-vs-batch curve walked
+        along the measured occupancy decay, with ``token_weighted`` the
+        model-side number to hold against a measured continuous-vs-AR
+        throughput ratio (see core/analytics.predicted_decay_speedup).
+        """
+        from repro.core.analytics import predicted_decay_speedup
+        return predicted_decay_speedup(
+            live, gammas,
+            lambda b, g: float(self.predict(b, g, top_k, num_experts,
+                                            sigma)),
+            committed=committed)
+
     # ---------------------------------------------------------------- bounds
     def bounds(self, target_cfg: ModelConfig, draft_cfg: ModelConfig,
                t_rej_max: float, dtype_bytes: int = 2):

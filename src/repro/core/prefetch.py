@@ -156,5 +156,11 @@ class PrefetchProposer:
             params, state["inner"], base_len=base_len, n_accept=n_accept,
             n_commit=n_commit, verify_tokens=verify_tokens, hidden=hidden)}
 
+    def merge_state(self, old, new, mask):
+        """Admission merge: fully delegated (the plan is round work-state,
+        never part of the persistent between-rounds state)."""
+        return {"inner": self.inner.merge_state(old["inner"], new["inner"],
+                                                mask)}
+
 
 register_proposer("prefetch", PrefetchProposer)

@@ -156,6 +156,16 @@ class Proposer(Protocol):
         """
         ...
 
+    def merge_state(self, old: Any, new: Any, mask: jnp.ndarray) -> Any:
+        """Row-wise select between two same-shape proposer states.
+
+        The continuous-batching admission hook (SDEngine.admit): ``new``
+        is a freshly ``init_state``-built state for the full bucket; rows
+        where ``mask`` (B,) is True take it, all other rows keep ``old``
+        untouched.  Must be pure/trace-safe like the other methods.
+        """
+        ...
+
 
 # ---------------------------------------------------------------------------
 # registry
@@ -296,6 +306,12 @@ class ModelProposer:
             cache = dict(state["cache"], lengths=base_len + n_commit)
         return {"cache": cache}
 
+    def merge_state(self, old, new, mask):
+        """Admission merge: the draft cache follows the model-cache layout,
+        so row selection is the same primitive the target uses."""
+        from repro.models.model import merge_cache_rows
+        return {"cache": merge_cache_rows(old["cache"], new["cache"], mask)}
+
 
 # ---------------------------------------------------------------------------
 # "none": the degenerate drafter — SD round with zero drafts IS plain AR
@@ -325,6 +341,10 @@ class NoneProposer:
     def commit(self, params, state, *, base_len, n_accept, n_commit,
                verify_tokens, hidden):
         return state
+
+    def merge_state(self, old, new, mask):
+        """Stateless drafter: nothing to merge on admission."""
+        return old
 
 
 register_proposer("model", ModelProposer)

@@ -20,27 +20,54 @@ The AR baseline is the degenerate g=0 instance of the SAME loop (the
 machinery, which is what the paper's speedup definition x = T_AR/T_SD
 requires.
 
+Session/round API (the continuous-batching seam):
+  * ``start(params_t, params_p, prompts, max_seq=...)`` → ``SessionState``
+    (target prefill + cache alloc + proposer state; the prefill-sampled
+    token is the first generated token and lives in ``state.last_token``).
+  * ``round(state, gamma=..., key=..., active=...)`` →
+    ``(SessionState, RoundResult)`` — ONE propose/verify/reject/commit
+    round.  ``active`` is a (B,) bool mask: inactive rows commit zero
+    tokens (``lengths`` frozen, ``last_token`` unchanged), so a caller can
+    retire finished sequences without changing the compiled shape.
+  * ``admit(state, prompts, lengths, admit_mask)`` → ``SessionState`` —
+    masked prefill of NEW requests into retired rows of a live session:
+    the full bucket is prefilled into fresh caches and merged row-wise
+    (models/model.merge_cache_rows + Proposer.merge_state), so occupancy
+    changes within a batch bucket cause zero round retraces.
+  * ``generate(...)`` is kept as the thin start+round loop for parity.
+
+The caller owning the loop is what enables continuous batching
+(serving/scheduler.py): slots retire on completion, new requests prefill
+into freed rows between rounds, and {use_sd, gamma} can be re-planned on
+the LIVE batch size every round — the paper's N(t)-dependence operated,
+not just measured.
+
 Cache discipline:
   * target/draft attention KV: fresh tokens are written at offsets
     ``lengths``; a rejected suffix is simply left stale (masked by
-    position) and ``lengths += n_commit``.
+    position) and ``lengths += n_commit``.  Retired rows' stale entries
+    are likewise harmless: every extend writes its positions before
+    attending, so a re-admitted row overwrites exactly the entries that
+    become visible.
   * recurrent states (SSM/xLSTM targets or drafts): verify collects
     per-step states and ``commit`` gathers the state of the last accepted
     token (models/model.py).  Recurrent drafts re-run the verify pass from
     a pre-round snapshot (γ+1 cheap draft tokens) since their propose loop
-    advances state destructively.
+    advances state destructively.  A retired (inactive) row's recurrent
+    state is garbage until re-admission rebuilds it.
 
 Compile caching: each SDEngine instance is a long-lived *decoding
 session*.  Per gamma it builds the fused round once (``_round_cache``)
 and jax.jit then caches per batch/sequence shape; ``trace_log`` records
-every (gamma, batch) retrace so serving code (and tests) can assert
-reuse.  The engine never mixes tokens across sequences — per-sequence
-lengths make the batch ragged, exactly like continuous batching in vLLM.
+every (gamma, batch) retrace and ``admit_trace_log`` every admission
+retrace, so serving code (and tests) can assert reuse.  The engine never
+mixes tokens across sequences — per-sequence lengths make the batch
+ragged, exactly like continuous batching in vLLM.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -57,7 +84,7 @@ from repro.models.moe import warm_experts as moe_warm_experts
 class SDStats:
     rounds: int = 0
     generated: int = 0                      # total committed tokens (all seqs)
-    max_possible: int = 0                   # rounds * (gamma+1) * B
+    max_possible: int = 0                   # rounds * (gamma+1) * B_live
     accept_events: int = 0                  # accepted draft tokens
     draft_events: int = 0                   # proposed draft tokens
     round_time: float = 0.0                 # wall time across all rounds
@@ -87,6 +114,76 @@ class SDStats:
     def prefetch_hit_rate(self) -> float:   # P(activated expert was warm)
         return self.prefetch_hits / max(self.prefetch_actual, 1)
 
+    def absorb_round(self, res: "RoundResult", live: int) -> None:
+        """Fold one RoundResult into the aggregate.
+
+        ``live`` is the number of rows the round was REQUESTED to advance
+        (the active count; masked-out lanes commit nothing) — sigma/alpha
+        are accounted against it, and against the requested gamma, so a
+        proposer drafting fewer than gamma tokens honestly scores
+        sigma < 1.  Shared by wave ``generate`` and the continuous
+        scheduler so the two schedulers can never diverge in bookkeeping.
+        """
+        self.rounds += 1
+        self.round_time += res.round_time
+        if res.phase_times:
+            self.propose_time += res.phase_times.get("propose", 0.0)
+            self.verify_time += res.phase_times.get("verify", 0.0)
+            self.reject_time += res.phase_times.get("reject", 0.0)
+            self.warm_time += res.phase_times.get("warm", 0.0)
+        self.generated += int(res.n_commit.sum())
+        self.max_possible += (res.gamma + 1) * live
+        self.accept_events += int(res.n_accept.sum())
+        self.draft_events += res.width * live
+        if res.pf is not None:
+            self.prefetch_hits += res.pf["hits"]
+            self.prefetch_actual += res.pf["actual"]
+            self.prefetch_predicted += res.pf["predicted"]
+
+
+@dataclass
+class SessionState:
+    """One live decoding batch: everything a round reads and writes.
+
+    ``params`` is the ``{"target": ..., "draft": ...}`` dict,
+    ``t_cache``/``p_state`` the target cache and proposer state,
+    ``last_token`` (B,) the most recently committed token per row (after
+    ``start``/``admit`` it holds the prefill-sampled FIRST generated token
+    of each fresh row — the caller records it as output).  ``max_seq`` is
+    the static cache capacity the state was allocated with.
+    """
+    params: dict
+    t_cache: dict
+    p_state: Any
+    last_token: jnp.ndarray
+    max_seq: int
+
+    @property
+    def batch(self) -> int:
+        return int(self.last_token.shape[0])
+
+
+@dataclass
+class RoundResult:
+    """Host-side outcome of one SD round.
+
+    ``committed`` is (B, width+1); per row only the first ``n_commit[b]``
+    entries are real (0 for rows that were inactive this round).
+    ``n_accept`` is per-row accepted draft tokens; ``width`` the drafted
+    tokens per sequence (g <= gamma); ``pf`` the prefetch hit/actual/
+    predicted counts (prefetch-aware proposers, else None);
+    ``phase_times`` the propose/verify/reject/warm wall times (timed
+    rounds only, else None).
+    """
+    committed: np.ndarray
+    n_commit: np.ndarray
+    n_accept: np.ndarray
+    width: int
+    gamma: int
+    pf: Optional[Dict[str, int]]
+    round_time: float
+    phase_times: Optional[Dict[str, float]] = None
+
 
 class SDEngine:
     """One persistent decoding session: a target model + one Proposer.
@@ -94,7 +191,8 @@ class SDEngine:
     The propose/verify/reject/commit round is generic over the proposer;
     compiled rounds are cached per gamma (and, via jit, per shape), so a
     serving engine can hold one SDEngine per proposer kind and change
-    gamma between waves without rebuilding anything.
+    gamma between waves — or per ROUND, via the ``start``/``round``/
+    ``admit`` session API — without rebuilding anything.
     """
 
     def __init__(self, target: Model, proposer: Proposer, *,
@@ -105,7 +203,9 @@ class SDEngine:
         self.temperature = temperature
         self._round_cache: Dict[int, Callable] = {}      # gamma -> jitted round
         self._stage_cache: Dict[int, Tuple] = {}         # gamma -> stage jits
+        self._admit_cache: Dict[Tuple[int, int, int], Callable] = {}
         self.trace_log: List[Tuple[int, int]] = []       # (gamma, B) per trace
+        self.admit_trace_log: List[Tuple[int, int]] = []  # (T_prompt, B)
         # session-lifetime expert-prefetch aggregates (prefetch proposers):
         # summed across every generate() call this session served
         self.prefetch_totals: Dict[str, int] = {
@@ -114,6 +214,15 @@ class SDEngine:
     def compiled_gammas(self) -> List[int]:
         """Gammas with a built round (fused or staged) in this session."""
         return sorted(set(self._round_cache) | set(self._stage_cache))
+
+    def accumulate_prefetch_totals(self, stats: SDStats) -> None:
+        """Fold one generation/stream's prefetch counts into the
+        session-lifetime totals (no-op for non-prefetch proposers)."""
+        if getattr(self.proposer, "provides_prefetch", False):
+            self.prefetch_totals["hits"] += stats.prefetch_hits
+            self.prefetch_totals["actual"] += stats.prefetch_actual
+            self.prefetch_totals["predicted"] += stats.prefetch_predicted
+            self.prefetch_totals["rounds"] += stats.rounds
 
     # ----------------------------------------------------------- round pieces
     def _stages(self, gamma: int):
@@ -153,11 +262,15 @@ class SDEngine:
                 return probs_from_logits(logits, temp), hidden, pend, None
 
         def finalize(params, pend, p_state, base_len, p_dist, q_dist, drafts,
-                     hidden, last_token, k_rej):
+                     hidden, last_token, active, k_rej):
             B, g = drafts.shape
             n_accept, next_token, _ = rejection_sample(
                 p_dist, q_dist, drafts, k_rej, temp)
-            n_commit = n_accept + 1
+            # inactive (retired) rows commit nothing: lengths stay frozen
+            # and last_token is carried over, so the row is shape-stable
+            # padding until admit() refills it
+            n_accept = jnp.where(active, n_accept, 0)
+            n_commit = jnp.where(active, n_accept + 1, 0)
             t_cache = target.commit(pend, n_commit, collected=True)
             verify_tokens = jnp.concatenate([last_token[:, None], drafts], 1)
             p_state = proposer.commit(
@@ -169,8 +282,8 @@ class SDEngine:
                 [drafts, jnp.zeros((B, 1), drafts.dtype)], 1)
             committed = jnp.where(slot < n_accept[:, None], drafts_pad,
                                   next_token[:, None])          # (B, g+1)
-            return (t_cache, p_state, next_token, committed, n_commit,
-                    jnp.sum(n_accept))
+            new_last = jnp.where(active, next_token, last_token)
+            return (t_cache, p_state, new_last, committed, n_commit, n_accept)
 
         return propose, verify, finalize
 
@@ -179,7 +292,7 @@ class SDEngine:
 
         Prefetch-aware proposers never take this path — inside one
         monolithic XLA computation the warm gather would be dead code, so
-        ``generate`` always runs them staged (see ``_staged_jits``).
+        rounds always run them staged (see ``_staged_jits``).
         """
         if getattr(self.proposer, "provides_prefetch", False):
             raise RuntimeError(
@@ -189,7 +302,8 @@ class SDEngine:
         if fn is None:
             propose, verify, finalize = self._stages(gamma)
 
-            def round_fn(params, t_cache, p_state, last_token, k_prop, k_rej):
+            def round_fn(params, t_cache, p_state, last_token, active,
+                         k_prop, k_rej):
                 # trace-time side effect: lets callers assert compile reuse
                 self.trace_log.append((gamma, int(last_token.shape[0])))
                 base_len = t_cache["lengths"]
@@ -198,7 +312,8 @@ class SDEngine:
                 p_dist, hidden, pend, pf = verify(params["target"], t_cache,
                                                   last_token, drafts)
                 out = finalize(params, pend, p_work, base_len, p_dist,
-                               q_dist, drafts, hidden, last_token, k_rej)
+                               q_dist, drafts, hidden, last_token, active,
+                               k_rej)
                 return out + (pf,)
 
             fn = jax.jit(round_fn)
@@ -262,6 +377,210 @@ class SDEngine:
         last_token = sample_from(p, key, self.temperature)
         return t_cache, p_state, last_token
 
+    # --------------------------------------------------------------- session
+    def start(self, params_t, params_p, prompts: jnp.ndarray, *,
+              max_seq: int, lengths=None, key=None,
+              prefill_kwargs: Optional[dict] = None) -> SessionState:
+        """Open a decoding batch: prefill + cache alloc → ``SessionState``.
+
+        The prefill-sampled token is each row's FIRST generated token; the
+        caller reads it from ``state.last_token``.  ``max_seq`` is the
+        static cache capacity for the whole batch lifetime (continuous
+        callers must size it for the longest admitted request).
+        """
+        t_cache, p_state, last_token = self.prefill(
+            params_t, params_p, prompts, max_seq, lengths=lengths, key=key,
+            prefill_kwargs=prefill_kwargs)
+        return SessionState(params={"target": params_t, "draft": params_p},
+                            t_cache=t_cache, p_state=p_state,
+                            last_token=last_token, max_seq=max_seq)
+
+    def round(self, state: SessionState, *, gamma: Optional[int] = None,
+              key: Optional[jax.Array] = None, active=None,
+              timed: bool = False) -> Tuple[SessionState, RoundResult]:
+        """Run ONE propose/verify/reject/commit round on a live session.
+
+        Parameters
+        ----------
+        state : SessionState
+            From ``start``/``admit``/the previous ``round``.
+        gamma : int, optional
+            Speculation width for THIS round (default: the session's).
+            gamma=0 is the in-session AR fallback: zero drafts, one target
+            forward — the SD→AR handoff needs no session switch.
+        key : jax.Array, optional
+            Round PRNG key (split internally into propose/reject keys).
+        active : array-like, optional
+            (B,) bool — rows to advance.  Inactive rows commit 0 tokens and
+            keep ``lengths``/``last_token`` frozen; the mask is data, so
+            occupancy changes never retrace.  Default: all rows active.
+        timed : bool
+            Run staged with per-phase syncs (fills ``phase_times``).
+
+        Returns
+        -------
+        (SessionState, RoundResult)
+            The advanced state and the round's host-side outcome.
+        """
+        gamma = self.gamma if gamma is None else gamma
+        if key is None:
+            # greedy rounds are key-independent; at temperature>0 a fixed
+            # default would silently reuse IDENTICAL propose/reject noise
+            # every round of the caller's loop — fail loudly instead
+            if self.temperature > 0.0:
+                raise ValueError(
+                    "round() needs a fresh per-round key at temperature>0 "
+                    "(split one from a root key each round)")
+            key = jax.random.PRNGKey(0)
+        k_prop, k_rej = jax.random.split(key)
+        B = state.batch
+        active = (jnp.ones((B,), bool) if active is None
+                  else jnp.asarray(active, bool))
+        params = state.params
+        pf_aware = getattr(self.proposer, "provides_prefetch", False)
+        staged = timed or pf_aware
+        phases: Dict[str, float] = {}
+        t_round = time.perf_counter()
+        if staged:
+            j_prop, j_verify, j_fin, j_warm = self._staged_jits(gamma)
+            t_cache, p_state, last_token = (state.t_cache, state.p_state,
+                                            state.last_token)
+            base_len = t_cache["lengths"]
+            t0 = time.perf_counter()
+            drafts, q_dist, p_work = j_prop(params, p_state, last_token,
+                                            k_prop)
+            if timed:
+                jax.block_until_ready(drafts)
+                phases["propose"] = time.perf_counter() - t0
+            if j_warm is not None:
+                # async dispatch, never blocked on: the gather of the
+                # predicted experts' weights runs ahead of verify on the
+                # device queue while the host assembles the verify call
+                t0 = time.perf_counter()
+                j_warm(params["target"], p_work["plan"])
+                if timed:
+                    # timed-only, like the other phase stats (and like
+                    # them the first round includes trace+compile)
+                    phases["warm"] = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            if pf_aware:
+                p_dist, hidden, pend, pf = j_verify(
+                    params["target"], t_cache, last_token, drafts,
+                    p_work["plan"])
+            else:
+                p_dist, hidden, pend, pf = j_verify(
+                    params["target"], t_cache, last_token, drafts)
+            if timed:
+                jax.block_until_ready(p_dist)
+                phases["verify"] = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            (t_cache, p_state, last_token, committed, n_commit, n_acc) = \
+                j_fin(params, pend, p_work, base_len, p_dist, q_dist,
+                      drafts, hidden, last_token, active, k_rej)
+            if timed:
+                jax.block_until_ready(committed)
+                phases["reject"] = time.perf_counter() - t0
+        else:
+            fn = self._round_fn(gamma)
+            (t_cache, p_state, last_token, committed, n_commit, n_acc,
+             pf) = fn(params, state.t_cache, state.p_state, state.last_token,
+                      active, k_prop, k_rej)
+        committed = np.asarray(committed)            # device sync
+        n_commit_np = np.asarray(n_commit)
+        round_time = time.perf_counter() - t_round
+        pf_counts = None
+        if pf is not None:
+            pf_counts = {k: int(np.asarray(pf[k]))
+                         for k in ("hits", "actual", "predicted")}
+        new_state = replace(state, t_cache=t_cache, p_state=p_state,
+                            last_token=last_token)
+        result = RoundResult(
+            committed=committed, n_commit=n_commit_np,
+            n_accept=np.asarray(n_acc), width=committed.shape[1] - 1,
+            gamma=gamma, pf=pf_counts, round_time=round_time,
+            phase_times=phases if timed else None)
+        return new_state, result
+
+    # -------------------------------------------------------------- admission
+    def _admit_fn(self, B: int, Tp: int, max_seq: int) -> Callable:
+        fn = self._admit_cache.get((B, Tp, max_seq))
+        if fn is None:
+            target, proposer, temp = self.target, self.proposer, \
+                self.temperature
+
+            def admit_fn(params, t_cache, p_state, last_token, prompts,
+                         lengths, mask, key):
+                self.admit_trace_log.append((Tp, B))
+                fresh_t = target.init_cache(B, max_seq)
+                if proposer.needs_hidden:
+                    last_l, last_h, fresh_t = target.prefill_with_hidden(
+                        params["target"], prompts, fresh_t, lengths=lengths)
+                else:
+                    last_l, fresh_t = target.prefill(
+                        params["target"], prompts, fresh_t, lengths=lengths)
+                    last_h = None
+                fresh_p = proposer.init_state(params, prompts, max_seq,
+                                              lengths=lengths,
+                                              last_hidden=last_h)
+                first = sample_from(probs_from_logits(last_l, temp), key,
+                                    temp)
+                from repro.models.model import merge_cache_rows
+                merged_t = merge_cache_rows(t_cache, fresh_t, mask)
+                merged_p = proposer.merge_state(p_state, fresh_p, mask)
+                merged_last = jnp.where(mask, first, last_token)
+                return merged_t, merged_p, merged_last
+
+            fn = jax.jit(admit_fn)
+            self._admit_cache[(B, Tp, max_seq)] = fn
+        return fn
+
+    def admit(self, state: SessionState, prompts: jnp.ndarray, lengths,
+              admit_mask, *, key: Optional[jax.Array] = None
+              ) -> SessionState:
+        """Masked prefill of new requests into retired rows of a session.
+
+        The full (B, T_prompt) bucket is prefilled into FRESH target/
+        proposer caches and the result is merged row-wise with the live
+        state: rows where ``admit_mask`` is True take the fresh prefill,
+        all other rows keep their in-flight cache untouched.  The mask is
+        data, so WHICH rows get admitted never retraces — only a new
+        (batch, prompt-bucket) shape does (logged in ``admit_trace_log``).
+
+        Parameters
+        ----------
+        state : SessionState
+            The live session (from ``start``/``round``).
+        prompts : jnp.ndarray
+            (B, T_prompt) tokens.  Admitted rows carry the new prompts;
+            non-admitted rows are don't-care fillers (their prefill is
+            computed and discarded — the price of a static shape).
+        lengths : array-like
+            (B,) true prompt lengths (>= 1 everywhere, fillers included).
+        admit_mask : array-like
+            (B,) bool — True rows are (re)initialised.
+        key : jax.Array, optional
+            PRNG key for the admitted rows' first sampled token (read it
+            from ``state.last_token`` after this call).
+
+        Returns
+        -------
+        SessionState
+            The merged state; admitted rows are prefilled to their prompt
+            and ready for the next ``round``.
+        """
+        B, Tp = prompts.shape
+        if B != state.batch:
+            raise ValueError(f"admit batch {B} != session batch "
+                             f"{state.batch}")
+        key = key if key is not None else jax.random.PRNGKey(0)
+        mask = jnp.asarray(admit_mask, bool)
+        fn = self._admit_fn(B, Tp, state.max_seq)
+        t_cache, p_state, last_token = fn(
+            state.params, state.t_cache, state.p_state, state.last_token,
+            jnp.asarray(prompts), jnp.asarray(lengths, jnp.int32), mask, key)
+        return replace(state, t_cache=t_cache, p_state=p_state,
+                       last_token=last_token)
+
     # -------------------------------------------------------------- generate
     def generate(
         self,
@@ -277,102 +596,40 @@ class SDEngine:
         prefill_kwargs: Optional[dict] = None,
         timed: bool = False,
     ) -> Tuple[np.ndarray, SDStats]:
-        """Run SD rounds until every sequence has >= max_new_tokens."""
+        """Run SD rounds until every sequence has >= max_new_tokens.
+
+        A thin wave-mode wrapper over the session API: one ``start`` then
+        ``round`` in a loop with every row active — continuous callers
+        drive the same two methods with masks and mid-stream ``admit``.
+        """
         B, Tp = prompts.shape
         gamma = self.gamma if gamma is None else gamma
         key = key if key is not None else jax.random.PRNGKey(0)
         if max_seq is None:
             max_seq = Tp + max_new_tokens + gamma + 2
         key, k_pre = jax.random.split(key)
-        t_cache, p_state, last_token = self.prefill(
-            params_t, params_p, prompts, max_seq, lengths=lengths, key=k_pre,
-            prefill_kwargs=prefill_kwargs)
-        params = {"target": params_t, "draft": params_p}
+        state = self.start(params_t, params_p, prompts, max_seq=max_seq,
+                           lengths=lengths, key=k_pre,
+                           prefill_kwargs=prefill_kwargs)
 
         out = np.zeros((B, max_new_tokens + gamma + 1), np.int32)
         n_out = np.zeros((B,), np.int32)
         # the first sampled token (from prefill) counts as generated
-        out[:, 0] = np.asarray(last_token)
+        out[:, 0] = np.asarray(state.last_token)
         n_out += 1
 
         stats = SDStats()
-        pf_aware = getattr(self.proposer, "provides_prefetch", False)
-        # prefetch-aware rounds always run staged: the warm gather must be
-        # dispatched between the propose and verify launches (see
-        # _staged_jits); timed mode additionally syncs per phase
-        staged = timed or pf_aware
-        round_fn = None if staged else self._round_fn(gamma)
-        stages = self._staged_jits(gamma) if staged else None
         while int(n_out.min()) < max_new_tokens:
-            key, k_prop, k_rej = jax.random.split(key, 3)
-            t_round = time.perf_counter()
-            if staged:
-                j_prop, j_verify, j_fin, j_warm = stages
-                base_len = t_cache["lengths"]
-                t0 = time.perf_counter()
-                drafts, q_dist, p_work = j_prop(params, p_state, last_token,
-                                                k_prop)
-                if timed:
-                    jax.block_until_ready(drafts)
-                    stats.propose_time += time.perf_counter() - t0
-                if j_warm is not None:
-                    # async dispatch, never blocked on: the gather of the
-                    # predicted experts' weights runs ahead of verify on the
-                    # device queue while the host assembles the verify call
-                    t0 = time.perf_counter()
-                    j_warm(params["target"], p_work["plan"])
-                    if timed:
-                        # timed-only, like the other phase stats (and like
-                        # them the first round includes trace+compile)
-                        stats.warm_time += time.perf_counter() - t0
-                t0 = time.perf_counter()
-                if pf_aware:
-                    p_dist, hidden, pend, pf = j_verify(
-                        params["target"], t_cache, last_token, drafts,
-                        p_work["plan"])
-                else:
-                    p_dist, hidden, pend, pf = j_verify(
-                        params["target"], t_cache, last_token, drafts)
-                if timed:
-                    jax.block_until_ready(p_dist)
-                    stats.verify_time += time.perf_counter() - t0
-                t0 = time.perf_counter()
-                (t_cache, p_state, last_token, committed, n_commit, n_acc) = \
-                    j_fin(params, pend, p_work, base_len, p_dist, q_dist,
-                          drafts, hidden, last_token, k_rej)
-                if timed:
-                    jax.block_until_ready(committed)
-                    stats.reject_time += time.perf_counter() - t0
-            else:
-                (t_cache, p_state, last_token, committed, n_commit, n_acc,
-                 pf) = round_fn(params, t_cache, p_state, last_token, k_prop,
-                                k_rej)
-            committed = np.asarray(committed)        # device sync
-            n_commit_np = np.asarray(n_commit)
-            stats.round_time += time.perf_counter() - t_round
-            if pf is not None:
-                stats.prefetch_hits += int(np.asarray(pf["hits"]))
-                stats.prefetch_actual += int(np.asarray(pf["actual"]))
-                stats.prefetch_predicted += int(np.asarray(pf["predicted"]))
+            key, k_round = jax.random.split(key)
+            state, res = self.round(state, gamma=gamma, key=k_round,
+                                    timed=timed)
             for b in range(B):
-                n = int(n_commit_np[b])
+                n = int(res.n_commit[b])
                 w = min(n, out.shape[1] - n_out[b])
-                out[b, n_out[b]: n_out[b] + w] = committed[b, :w]
+                out[b, n_out[b]: n_out[b] + w] = res.committed[b, :w]
                 n_out[b] += w
-            width = committed.shape[1]               # actual g + 1
-            stats.rounds += 1
-            stats.generated += int(n_commit_np.sum())
-            # sigma is accounted against the REQUESTED gamma: a proposer
-            # that drafts fewer than gamma tokens (degenerate "none" path)
-            # honestly scores sigma = generated/(gamma+1), not 1.0
-            stats.max_possible += (gamma + 1) * B
-            stats.accept_events += int(np.asarray(n_acc))
-            stats.draft_events += (width - 1) * B
-        if pf_aware:
-            self.prefetch_totals["hits"] += stats.prefetch_hits
-            self.prefetch_totals["actual"] += stats.prefetch_actual
-            self.prefetch_totals["predicted"] += stats.prefetch_predicted
-            self.prefetch_totals["rounds"] += stats.rounds
+            stats.absorb_round(res, B)
+        self.accumulate_prefetch_totals(stats)
         return out[:, :max_new_tokens], stats
 
 

@@ -8,6 +8,14 @@
 on the target's features), "prefetch" (small draft model + draft-phase
 expert warming, printing per-wave hit rates — core/prefetch.py), or "none"
 (plain AR baseline).
+
+``--scheduler continuous`` switches from wave decoding to the slot
+scheduler (serving/scheduler.py): a fixed pool of KV slots, per-slot
+retirement, in-flight admission between rounds and {use_sd, gamma}
+re-planned on the live slot count every round.  ``--arrival-rate`` replays
+a Poisson arrival trace (mean arrivals per decode round) and
+``--mixed-max-new`` draws each request's budget from a comma list — the
+mixed-length traffic where wave padding costs the most.
 """
 from __future__ import annotations
 
@@ -17,12 +25,14 @@ import jax
 import numpy as np
 
 from repro.configs.registry import draft_for, get_config
+from repro.core.analytics import occupancy_timeline
 from repro.core.autotune import AutoTuner
 from repro.core.proposer import registered_proposers
 from repro.data.pipeline import prompt_batch
 from repro.data.tokenizer import ByteTokenizer
 from repro.models.model import Model
 from repro.serving.engine import ServingEngine
+from repro.serving.scheduler import submit_poisson
 
 
 def main():
@@ -46,6 +56,19 @@ def main():
                     help="MoE dispatch for the decode path; the serving "
                          "default is the ragged grouped-matmul kernel "
                          "(training keeps onehot)")
+    ap.add_argument("--scheduler", default="wave",
+                    choices=["wave", "continuous"],
+                    help="wave: static batch per wave; continuous: slot "
+                         "pool with in-flight admission and per-round "
+                         "N(t) re-planning (serving/scheduler.py)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="continuous mode: Poisson mean arrivals per decode "
+                         "round (0 = everything arrives at round 0)")
+    ap.add_argument("--mixed-max-new", default=None,
+                    help="comma list of max_new_tokens choices drawn per "
+                         "request (default: --max-new for every request)")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="early-exit token id (per-request finish_reason)")
     ap.add_argument("--timed", action="store_true",
                     help="record per-phase propose/verify/reject timings")
     ap.add_argument("--no-autotune", action="store_true")
@@ -89,12 +112,16 @@ def main():
                         max_batch=args.max_batch, tuner=tuner,
                         gamma=args.gamma, temperature=args.temperature,
                         proposer=args.proposer, proposer_opts=proposer_opts,
-                        seed=args.seed, timed=args.timed)
+                        seed=args.seed, timed=args.timed,
+                        scheduler=args.scheduler, eos_id=args.eos_id)
 
     pb = prompt_batch(cfg.vocab_size, args.requests, kind=args.kind,
                       seed=args.seed)
-    for i in range(args.requests):
-        eng.submit(pb["tokens"][i][: pb["lengths"][i]], args.max_new)
+    max_new_choices = ([int(x) for x in args.mixed_max_new.split(",")]
+                       if args.mixed_max_new else [args.max_new])
+    submit_poisson(eng, pb["tokens"], pb["lengths"],
+                   rate=args.arrival_rate, max_new_choices=max_new_choices,
+                   seed=args.seed)
 
     reports = eng.run()
     tok = ByteTokenizer(cfg.vocab_size)
@@ -112,16 +139,30 @@ def main():
         pf = (f" prefetch_hit={r.prefetch_hit_rate:.2f} "
               f"({r.prefetch_hits}/{r.stats.prefetch_actual})"
               if r.stats and r.stats.prefetch_actual else "")
-        print(f"wave: B={r.batch}/{r.bucket} gamma={r.gamma} "
+        print(f"{r.scheduler}: B={r.batch}/{r.bucket} gamma={r.gamma} "
               f"proposer={r.proposer} dispatch={r.moe_dispatch} "
               f"sd={r.used_sd} {r.tokens_per_second:.1f} tok/s  "
               f"{sd}{pf}{timing}")
+        if r.steps:
+            occ = occupancy_timeline([s.live for s in r.steps],
+                                     [s.committed for s in r.steps])
+            handoffs = sum(1 for a, b in zip(r.steps, r.steps[1:])
+                           if a.used_sd != b.used_sd)
+            print(f"  N(t): peak={occ['peak_live']:.0f} "
+                  f"mean={occ['mean_live']:.2f} "
+                  f"token_weighted={occ['token_weighted_live']:.2f} "
+                  f"occupancy={occ['mean_occupancy']:.2f}  "
+                  f"admitted={sum(s.admitted for s in r.steps)} "
+                  f"retired={sum(s.retired for s in r.steps)} "
+                  f"sd_handoffs={handoffs}")
     for kind, s in eng.session_stats().items():
         print(f"session[{kind}]: constructed {s['constructions']}x, "
               f"gammas compiled {s['gammas_compiled']}, "
-              f"{len(s['traces'])} round traces")
+              f"{len(s['traces'])} round traces, "
+              f"{len(s['admit_traces'])} admit traces")
     sample = eng.done[1]
-    print("sample completion:", repr(tok.decode(sample.output)[:80]))
+    print(f"sample completion ({sample.finish_reason}):",
+          repr(tok.decode(sample.output)[:80]))
 
 
 if __name__ == "__main__":

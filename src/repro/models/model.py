@@ -49,6 +49,39 @@ def _dtype(cfg: ModelConfig):
     return jnp.dtype(cfg.dtype)
 
 
+def merge_cache_rows(old: dict, new: dict, mask: jnp.ndarray) -> dict:
+    """Row-wise select between two same-shape decode caches.
+
+    The continuous-batching admission primitive (core/spec_decode.
+    SDEngine.admit): rows where ``mask`` is True take ``new`` (a freshly
+    prefilled cache), all other rows keep ``old`` untouched — so new
+    requests enter a live batch without disturbing in-flight sequences and
+    without changing any compiled shape.
+
+    Works on the ``{"layers": [...], "lengths": (B,)}`` cache layout:
+    ``lengths`` carries batch on axis 0, stack-cache leaves on axis 1
+    (leading ``num_periods`` axis — attention K/V, SWA ring ``pos``, MLA
+    latents and recurrent states all follow it, see
+    transformer.make_stack_cache).  Encoder-decoder ``cross`` caches are
+    not supported (continuous admission would need per-row re-encoding).
+    """
+    if old.get("cross") is not None:
+        raise NotImplementedError(
+            "merge_cache_rows: encoder-decoder cross caches are static "
+            "per-wave; continuous admission is decoder-only")
+    mask = jnp.asarray(mask, bool)
+
+    def pick(o, n):
+        shape = [1] * o.ndim
+        shape[1] = mask.shape[0]
+        return jnp.where(mask.reshape(shape), n, o)
+
+    layers = [jax.tree.map(pick, lo, ln)
+              for lo, ln in zip(old["layers"], new["layers"])]
+    lengths = jnp.where(mask, new["lengths"], old["lengths"])
+    return dict(old, layers=layers, lengths=lengths)
+
+
 def sinusoidal_at(positions: jnp.ndarray, d_model: int) -> jnp.ndarray:
     """Sinusoidal embedding evaluated at arbitrary positions (B,T) → (B,T,d)."""
     pos = positions.astype(jnp.float32)[..., None]

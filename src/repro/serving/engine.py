@@ -1,12 +1,25 @@
 """Serving engine: request queue → batched speculative decoding → completions.
 
 Private-serving shape (the paper's target scenario, Sec. 3.4): tens of
-concurrent requests, batched together, decoded with SD.  The engine:
+concurrent requests, batched together, decoded with SD.  Two schedulers:
 
-  * admits up to ``max_batch`` requests per generation wave (static batch
-    per wave, continuous across waves — the moderate-batch regime),
+  * ``scheduler="wave"`` — admit up to ``max_batch`` requests per
+    generation wave (static batch per wave, continuous across waves), run
+    SD rounds until EVERY sequence in the wave is done.  Finished rows ride
+    along as padding until the slowest request completes, and the AutoTuner
+    is consulted once per wave.
+  * ``scheduler="continuous"`` — a fixed pool of KV-cache slots decoded
+    round-by-round (serving/scheduler.py): slots retire the moment their
+    request finishes (per-request ``max_new_tokens``, optional ``eos_id``),
+    freed slots are refilled by a masked prefill BETWEEN rounds (zero
+    retraces within a batch bucket), and the AutoTuner re-plans
+    {use_sd, gamma} on the LIVE slot count every round — the paper's
+    N(t)-dependence operated, not just measured.
+
+Either way the engine:
+
   * consults the AutoTuner (core/autotune.py, beyond-paper) to pick
-    {use_sd, gamma} for the admitted batch size from the fitted perf model,
+    {use_sd, gamma} from the fitted perf model,
   * holds ONE persistent decoding session (core/spec_decode.SDEngine) per
     proposer kind — "model" / "eagle" / "none" via the Proposer registry —
     so compiled SD rounds are reused across waves instead of re-jitting a
@@ -14,12 +27,18 @@ concurrent requests, batched together, decoded with SD.  The engine:
     buckets and cache lengths are bucketed too, so the jit cache is keyed
     on (proposer_kind, gamma, batch_bucket) and a tuner-driven gamma change
     only adds one cache entry (returning to a seen gamma is compile-free),
-  * runs SD rounds until every sequence in the wave is done,
   * reports per-wave SDStats (sigma, alpha, rounds, phase timings) and
     target-efficiency measurements, feeding alpha back into the tuner.
 
 Every wave gets its own PRNG key split from the engine's root key, so
 sampling is never correlated across waves.
+
+Per-request sampling: each ``Request`` carries ``SamplingParams``
+(serving/sampling.py).  ``max_new_tokens`` is honored per request (and per
+SLOT in continuous mode); ``temperature``/``top_k``/``top_p`` must match
+the engine's global policy — batched rejection sampling shares one
+temperature across the batch — and ``submit`` fails loudly on mismatch
+rather than silently decoding with the wrong policy.
 """
 from __future__ import annotations
 
@@ -37,6 +56,7 @@ from repro.core.proposer import make_proposer
 from repro.core.spec_decode import SDEngine, SDStats
 from repro.data.tokenizer import PAD
 from repro.models.model import Model
+from repro.serving.sampling import SamplingParams
 
 
 @dataclass
@@ -48,6 +68,24 @@ class Request:
     output: Optional[np.ndarray] = None
     submitted_at: float = field(default_factory=time.perf_counter)
     finished_at: Optional[float] = None
+    sampling: Optional[SamplingParams] = None
+    finish_reason: Optional[str] = None  # "length" | "eos" once finished
+    arrival_round: int = 0               # continuous mode: visible from here
+
+
+def finish_output(tokens: np.ndarray, eos_id: Optional[int]):
+    """Truncate a generated stream at the first ``eos_id`` (inclusive).
+
+    Returns ``(tokens, reason)`` with reason "eos" if an eos fired before
+    the length budget, else "length" — the per-request accounting both
+    schedulers share, so ``WaveReport.tokens_out`` counts only REAL
+    generated tokens."""
+    tokens = np.asarray(tokens)
+    if eos_id is not None:
+        hits = np.nonzero(tokens == eos_id)[0]
+        if hits.size:
+            return tokens[: int(hits[0]) + 1], "eos"
+    return tokens, "length"
 
 
 @dataclass
@@ -61,6 +99,8 @@ class WaveReport:
     proposer: str = "model"
     bucket: int = 0                       # padded batch actually decoded
     moe_dispatch: str = "onehot"          # target's decode dispatch mode
+    scheduler: str = "wave"               # "wave" | "continuous"
+    steps: Optional[list] = None          # continuous: per-round StepReports
 
     @property
     def tokens_per_second(self) -> float:
@@ -128,7 +168,12 @@ class ServingEngine:
         seed: int = 0,
         timed: bool = False,
         bucket_batches: bool = True,
+        scheduler: str = "wave",            # "wave" | "continuous"
+        eos_id: Optional[int] = None,       # early-exit token (both modes)
     ):
+        if scheduler not in ("wave", "continuous"):
+            raise ValueError(f"scheduler must be 'wave' or 'continuous', "
+                             f"got {scheduler!r}")
         self.proposer_kind = draft_kind if draft_kind is not None else proposer
         self.proposer_opts = dict(proposer_opts or {})
         self.target, self.draft = target, draft
@@ -140,6 +185,8 @@ class ServingEngine:
         self.force_sd = force_sd
         self.timed = timed
         self.bucket_batches = bucket_batches
+        self.scheduler = scheduler
+        self.eos_id = eos_id
         self.queue: Deque[Request] = deque()
         self.done: Dict[int, Request] = {}
         self.reports: List[WaveReport] = []
@@ -149,12 +196,55 @@ class ServingEngine:
         # exactly once and reused for every wave (compile-cache lives inside)
         self._sessions: Dict[str, SDEngine] = {}
         self.session_constructions: Dict[str, int] = {}
+        self._slot_scheduler = None         # lazy ContinuousScheduler
 
     # ----------------------------------------------------------------- queue
-    def submit(self, prompt: np.ndarray, max_new_tokens: int = 64) -> int:
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 64, *,
+               sampling: Optional[SamplingParams] = None,
+               arrival_round: int = 0) -> int:
+        """Queue one request.
+
+        Parameters
+        ----------
+        prompt : array-like
+            (T,) token ids.
+        max_new_tokens : int
+            Generation budget (ignored if ``sampling`` is given — its
+            ``max_new_tokens`` wins).
+        sampling : SamplingParams, optional
+            Per-request sampling policy.  ``max_new_tokens`` is honored per
+            request; ``temperature`` must equal the engine's and
+            ``top_k``/``top_p`` must be off — batched rejection sampling
+            shares one distribution policy across the batch, so a mismatch
+            raises ``ValueError`` instead of silently decoding with the
+            wrong policy (build one engine per policy).
+        arrival_round : int
+            Continuous mode: the request becomes admissible only from this
+            decode round on (workload drivers use it to replay
+            Poisson-arrival traces).  Wave mode ignores it.
+
+        Returns
+        -------
+        int
+            The request uid (key into ``self.done`` once finished).
+        """
+        sp = sampling if sampling is not None else SamplingParams(
+            temperature=self.temperature, max_new_tokens=max_new_tokens)
+        if sp.temperature != self.temperature:
+            raise ValueError(
+                f"per-request temperature {sp.temperature} != engine "
+                f"temperature {self.temperature}: batched rejection sampling "
+                "shares one temperature across the batch — submit matching "
+                "requests or build an engine per policy")
+        if sp.top_k > 0 or sp.top_p < 1.0:
+            raise ValueError(
+                "top_k/top_p are not supported on the speculative-decoding "
+                "path (rejection sampling needs the full target/draft "
+                "distributions); submit with default top_k=0, top_p=1.0")
         self._uid += 1
         self.queue.append(Request(self._uid, np.asarray(prompt, np.int32),
-                                  max_new_tokens))
+                                  sp.max_new_tokens, sp.temperature,
+                                  sampling=sp, arrival_round=arrival_round))
         return self._uid
 
     def _admit(self) -> List[Request]:
@@ -203,6 +293,9 @@ class ServingEngine:
             ``traces`` : list of (gamma, batch)
                 Every jit retrace the session performed; a wave that reuses
                 a compiled round adds nothing here.
+            ``admit_traces`` : list of (prompt_bucket, batch)
+                Every continuous-admission retrace; occupancy changes
+                within a bucket add nothing here (the admit mask is data).
             ``prefetch`` : dict
                 Session-lifetime expert-warmup aggregates ``{"hits",
                 "actual", "predicted", "rounds", "hit_rate"}`` summed over
@@ -216,6 +309,7 @@ class ServingEngine:
                 "constructions": self.session_constructions.get(kind, 0),
                 "gammas_compiled": sess.compiled_gammas(),
                 "traces": list(sess.trace_log),
+                "admit_traces": list(sess.admit_trace_log),
                 "prefetch": totals,
             }
         return out
@@ -266,7 +360,9 @@ class ServingEngine:
             The wave's report — batch/gamma/proposer, SDStats (sigma,
             alpha, per-phase timings, prefetch hit/miss counts for
             prefetch-aware waves), wall time and tokens/sec — or ``None``
-            if the queue was empty.
+            if the queue was empty.  ``tokens_out`` counts only real
+            generated tokens: per-request ``max_new_tokens`` and eos
+            truncation (``finish_reason``) are applied per request.
         """
         wave = self._admit()
         if not wave:
@@ -307,7 +403,8 @@ class ServingEngine:
 
         n_tokens = 0
         for i, r in enumerate(wave):                 # pad rows fall off here
-            r.output = out[i, : r.max_new_tokens]
+            r.output, r.finish_reason = finish_output(
+                out[i, : r.max_new_tokens], self.eos_id)
             r.finished_at = time.perf_counter()
             n_tokens += len(r.output)
             self.done[r.uid] = r
@@ -317,13 +414,38 @@ class ServingEngine:
         self.reports.append(report)
         return report
 
+    # ------------------------------------------------------------ continuous
+    def step_continuous(self) -> Optional[WaveReport]:
+        """Drain the queue through the continuous slot scheduler.
+
+        One call serves the WHOLE queued stream (arrivals included, via
+        ``Request.arrival_round``) round-by-round on a fixed pool of
+        ``max_batch`` KV slots, re-planning {use_sd, gamma} on the live
+        slot count every round.  Returns one aggregated WaveReport
+        (``scheduler="continuous"``) whose ``steps`` carry the per-round
+        StepReports, or ``None`` if the queue was empty.
+        """
+        from repro.serving.scheduler import ContinuousScheduler
+        if self._slot_scheduler is None:
+            self._slot_scheduler = ContinuousScheduler(self)
+        report = self._slot_scheduler.run_stream()
+        if report is not None:
+            self.reports.append(report)
+        return report
+
     def run(self, key: Optional[jax.Array] = None) -> List[WaveReport]:
-        """Drain the queue.  ``key`` (optional) reseeds the engine's root
-        key; each wave then decodes under its own split — never the same
-        key twice."""
+        """Drain the queue under the configured scheduler.  ``key``
+        (optional) reseeds the engine's root key; every wave / round then
+        decodes under its own split — never the same key twice."""
         if key is not None:
             self._key = key
         reports = []
+        if self.scheduler == "continuous":
+            while self.queue:
+                r = self.step_continuous()
+                if r:
+                    reports.append(r)
+            return reports
         while self.queue:
             r = self.step()
             if r:

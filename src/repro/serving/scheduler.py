@@ -1,0 +1,337 @@
+"""Continuous-batching slot scheduler: round-level SD with in-flight admission.
+
+The paper's central claim is that SD speedup for a sparse MoE is a function
+of the LIVE batch size N(t).  Wave scheduling can only measure that —
+finished sequences ride along as padding until the slowest request
+completes, and {use_sd, gamma} is planned once per wave.  This module
+*operates* it:
+
+  * a fixed pool of ``max_batch`` KV-cache slots is decoded round-by-round
+    through the session API (core/spec_decode.SDEngine.start/round/admit),
+  * a slot RETIRES the moment its request finishes (per-slot
+    ``max_new_tokens``, optional ``eos_id`` early exit) — its row goes
+    inactive via the round's ``active`` mask, which is data, so occupancy
+    changes never retrace,
+  * freed slots are REFILLED between rounds: queued requests (visible from
+    their ``arrival_round`` on, so Poisson traces replay exactly) prefill
+    into the retired rows via ``SDEngine.admit`` — a masked prefill into
+    the existing cache, zero retraces within a (batch, prompt-bucket),
+  * every round consults ``AutoTuner.plan()`` on the LIVE slot count: as
+    occupancy decays out of the speedup window the stream hands off SD→AR
+    mid-flight (a gamma=0 round in the SAME session — no session switch,
+    no state rebuild, and the draft cache stays reconcilable for SD
+    re-entry when admissions push N(t) back up).
+
+Per-round ``StepReport``s aggregate into the engine's existing
+``WaveReport`` / ``session_stats()`` surfaces; the occupancy trajectory
+they carry feeds the decay-aware predicted-vs-measured comparison in
+core/analytics.py (``occupancy_timeline`` / ``predicted_decay_speedup``).
+
+This mirrors in-flight batching in TensorRT-LLM / continuous batching in
+vLLM at round granularity: admission is batched at round boundaries (not
+token boundaries) because one SD round commits a variable 1..gamma+1
+tokens per slot.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.spec_decode import SDStats, SessionState
+from repro.data.tokenizer import PAD
+from repro.serving.engine import WaveReport, _pow2_at_least
+
+if TYPE_CHECKING:                                    # avoid runtime cycle
+    from repro.serving.engine import Request, ServingEngine
+
+
+def submit_poisson(engine: "ServingEngine", prompts, lengths, *,
+                   rate: float, max_new_choices=(8, 16, 32),
+                   seed: int = 0) -> List[int]:
+    """Submit a Poisson-arrival, mixed-length workload to an engine.
+
+    The continuous scheduler's unit of time is the decode ROUND: request i
+    arrives at ``cumsum(Exp(1/rate))`` rounds (``rate`` = mean arrivals per
+    round; ``rate <= 0`` submits everything at round 0) with a
+    ``max_new_tokens`` drawn uniformly from ``max_new_choices`` — the
+    mixed-completion-length traffic where wave scheduling pays the most
+    padding.  Wave engines ignore ``arrival_round`` (they admit FIFO), so
+    the same submission order drives both schedulers comparably.
+
+    Returns the submitted uids in arrival order.
+    """
+    rng = np.random.default_rng(seed)
+    t, uids = 0.0, []
+    for i in range(len(lengths)):
+        if rate > 0:
+            t += rng.exponential(1.0 / rate)
+        uids.append(engine.submit(
+            np.asarray(prompts[i][: int(lengths[i])]),
+            max_new_tokens=int(rng.choice(max_new_choices)),
+            arrival_round=int(t)))
+    return uids
+
+
+@dataclass
+class SlotState:
+    """One KV-cache row of the continuous pool.
+
+    ``active`` rows advance in SD rounds; inactive rows are shape-stable
+    padding awaiting admission.  ``tokens`` accumulates the request's
+    generated ids (the admission prefill's sampled token first), ``n_out``
+    counts them against the request's ``max_new_tokens``.
+    """
+    index: int
+    request: Optional["Request"] = None
+    active: bool = False
+    n_out: int = 0
+    tokens: List[int] = field(default_factory=list)
+
+
+@dataclass
+class StepReport:
+    """One SD round of a continuous stream.
+
+    ``live`` is the active-slot count the round decoded (the N(t) the
+    tuner planned on), ``committed`` the tokens credited to requests this
+    round (budget/eos truncation applied), ``admitted``/``retired`` the
+    slot churn at this round's boundary.
+    """
+    round_index: int
+    live: int
+    gamma: int
+    used_sd: bool
+    committed: int
+    admitted: int
+    retired: int
+    round_time: float
+
+
+class ContinuousScheduler:
+    """Round-level slot scheduler over one persistent decoding session.
+
+    Owns the slot pool and the round loop; the engine supplies sessions,
+    tuner, PRNG splits, and the request queue.  One ``run_stream()`` call
+    drains the queue (idling through rounds where every admissible request
+    is still in flight or yet to arrive) and returns an aggregated
+    ``WaveReport`` with per-round ``StepReport``s in ``.steps``.
+    """
+
+    def __init__(self, engine: "ServingEngine", *,
+                 slots: Optional[int] = None):
+        self.engine = engine
+        self.pool = slots if slots is not None else engine.max_batch
+        self._bucket_t = 1
+
+    # ------------------------------------------------------------- admission
+    def _admissible(self, round_idx: int) -> bool:
+        q = self.engine.queue
+        return bool(q) and q[0].arrival_round <= round_idx
+
+    def _admit_rows(self, sess, state: Optional[SessionState],
+                    batch_in: List[Tuple[SlotState, "Request"]],
+                    max_seq: int) -> SessionState:
+        """Prefill ``batch_in`` requests into their slots.
+
+        First call opens the session (``start`` over the full pool, filler
+        rows inactive); later calls are masked prefills into retired rows
+        (``admit``) — the existing cache rows of in-flight slots are
+        untouched and the admit mask is data, so refills within a
+        (pool, prompt-bucket) shape never retrace.
+        """
+        eng = self.engine
+        B = self.pool
+        t_new = max(len(r.prompt) for _, r in batch_in)
+        if eng.bucket_batches:
+            self._bucket_t = max(self._bucket_t, _pow2_at_least(t_new))
+        else:
+            self._bucket_t = max(self._bucket_t, t_new)
+        toks = np.full((B, self._bucket_t), PAD, np.int32)
+        lengths = np.ones((B,), np.int32)     # fillers: 1 (prefill-safe)
+        mask = np.zeros((B,), bool)
+        for s, r in batch_in:
+            toks[s.index, : len(r.prompt)] = r.prompt
+            lengths[s.index] = len(r.prompt)
+            mask[s.index] = True
+        key = eng._next_key()
+        if state is None:
+            params_d = None if eng.proposer_kind == "none" else eng.params_d
+            return sess.start(eng.params_t, params_d, jnp.asarray(toks),
+                              max_seq=max_seq,
+                              lengths=jnp.asarray(lengths), key=key)
+        return sess.admit(state, toks, lengths, mask, key=key)
+
+    # ------------------------------------------------------------ completion
+    def _append(self, slot: SlotState, tokens: List[int]) -> int:
+        """Credit round tokens to a slot; retire it on budget/eos.
+
+        Returns the number of tokens actually credited (commits past the
+        request's budget or its eos are discarded — SD can overshoot
+        within a round)."""
+        r = slot.request
+        eos = self.engine.eos_id
+        credited = 0
+        for t in tokens:
+            if slot.n_out >= r.max_new_tokens:
+                break
+            slot.tokens.append(int(t))
+            slot.n_out += 1
+            credited += 1
+            if eos is not None and int(t) == eos:
+                self._finish(slot, "eos")
+                return credited
+        if slot.n_out >= r.max_new_tokens:
+            self._finish(slot, "length")
+        return credited
+
+    def _finish(self, slot: SlotState, reason: str) -> None:
+        r = slot.request
+        r.output = np.asarray(slot.tokens, np.int32)
+        r.finish_reason = reason
+        r.finished_at = time.perf_counter()
+        self.engine.done[r.uid] = r
+        self._finished.append(r)
+        slot.request = None
+        slot.active = False
+        slot.tokens = []
+
+    # ------------------------------------------------------------------ loop
+    def run_stream(self) -> Optional[WaveReport]:
+        """Serve the queued stream to completion; one aggregated report.
+
+        The loop per round: (1) retire/refill — admit every admissible
+        request into free slots with one masked prefill; (2) re-plan —
+        ``tuner.plan(live)`` on the live slot count, SD→AR handoff via
+        gamma=0 when the plan says so; (3) decode one SD round with the
+        active mask; (4) credit tokens per slot, applying per-slot budgets
+        and eos.  Returns ``None`` on an empty queue.
+        """
+        eng = self.engine
+        if not eng.queue:
+            return None
+        kind = eng.proposer_kind
+        sess = eng._session(kind)
+        pending = list(eng.queue)
+        # static sizing for the whole stream: the cache must hold the
+        # longest admitted request under the largest plannable gamma
+        g_cands = [eng.gamma]
+        if eng.tuner is not None:
+            g_cands += [int(g) for g in getattr(eng.tuner, "gammas", ())]
+        g_max = max(g_cands)
+        t_max = max(len(r.prompt) for r in pending)
+        self._bucket_t = _pow2_at_least(t_max) if eng.bucket_batches else t_max
+        max_seq = self._bucket_t + max(r.max_new_tokens for r in pending) \
+            + g_max + 2
+        if eng.bucket_batches:
+            max_seq = _pow2_at_least(max_seq)
+
+        slots = [SlotState(i) for i in range(self.pool)]
+        state: Optional[SessionState] = None
+        stats = SDStats()
+        steps: List[StepReport] = []
+        self._finished: List["Request"] = []
+        used_sd_any = False
+        first_gamma: Optional[int] = None
+        round_idx = 0
+        t_start = time.perf_counter()
+        while True:
+            # ---- admit: one masked prefill covers every refill this round
+            free = [s for s in slots if not s.active]
+            batch_in: List[Tuple[SlotState, "Request"]] = []
+            while free and self._admissible(round_idx):
+                r = eng.queue.popleft()
+                need = len(r.prompt) + r.max_new_tokens + g_max + 2
+                if need > max_seq:
+                    raise ValueError(
+                        f"request uid={r.uid} needs {need} cache slots > "
+                        f"stream max_seq={max_seq} (sized at stream start); "
+                        "submit before run() so sizing can see it")
+                batch_in.append((free.pop(0), r))
+            admit_credited = 0
+            if batch_in:
+                state = self._admit_rows(sess, state, batch_in, max_seq)
+                first = np.asarray(state.last_token)
+                for s, r in batch_in:
+                    s.request, s.active = r, True
+                    s.n_out, s.tokens = 0, []
+                    # the admission prefill's sample is the first token
+                    admit_credited += self._append(s, [int(first[s.index])])
+            n_retired = sum(1 for s, r in batch_in if not s.active)
+
+            active_mask = np.array([s.active for s in slots], bool)
+            live = int(active_mask.sum())
+            if live == 0:
+                if batch_in:
+                    # every admitted slot finished on its prefill token
+                    # (1-token budgets / instant eos): record the churn so
+                    # steps never undercount admitted/retired/committed
+                    steps.append(StepReport(round_idx, 0, 0, False,
+                                            admit_credited, len(batch_in),
+                                            n_retired, 0.0))
+                if not eng.queue:
+                    break
+                round_idx += 1                  # idle: awaiting arrivals
+                continue
+
+            # ---- re-plan on the LIVE slot count (the paper's N(t))
+            gamma, use_sd = eng.gamma, True
+            if eng.tuner is not None:
+                plan = eng.tuner.plan(live)
+                gamma, use_sd = plan["gamma"], plan["use_sd"]
+            if eng.force_sd is not None:
+                use_sd = eng.force_sd
+            if kind == "none":
+                use_sd = False
+            if not use_sd:
+                gamma = 0                       # in-session SD→AR handoff
+            if gamma > g_max:
+                # max_seq was sized for g_max at stream start; a larger
+                # gamma would scatter verify KV past the cache, which JAX
+                # clamps SILENTLY — fail loudly instead
+                raise ValueError(
+                    f"tuner planned gamma={gamma} > g_max={g_max} the "
+                    "stream was sized for; expose the tuner's range via a "
+                    "'gammas' attribute (AutoTuner does)")
+            if first_gamma is None:
+                first_gamma = gamma
+            used_sd_any |= use_sd
+
+            # ---- one SD round over the pool, retired rows masked out
+            state, res = sess.round(state, gamma=gamma, key=eng._next_key(),
+                                    active=jnp.asarray(active_mask),
+                                    timed=eng.timed)
+            credited = 0
+            for s in slots:
+                if not s.active:
+                    continue
+                n = int(res.n_commit[s.index])
+                credited += self._append(s, list(res.committed[s.index, :n]))
+                if not s.active:
+                    n_retired += 1
+
+            # live-weighted accounting: retired rows' masked lanes commit
+            # nothing, so sigma/alpha describe the work actually requested
+            stats.absorb_round(res, live)
+            if use_sd and eng.tuner is not None and res.width and live:
+                eng.tuner.update_alpha(
+                    float(res.n_accept.sum()) / (res.width * live))
+            steps.append(StepReport(round_idx, live, gamma, use_sd,
+                                    admit_credited + credited,
+                                    len(batch_in), n_retired,
+                                    res.round_time))
+            round_idx += 1
+
+        sess.accumulate_prefetch_totals(stats)
+        wall = time.perf_counter() - t_start
+        n_tokens = sum(len(r.output) for r in self._finished)
+        return WaveReport(
+            batch=len(self._finished),
+            gamma=first_gamma if first_gamma is not None else 0,
+            used_sd=used_sd_any, stats=stats, wall_time=wall,
+            tokens_out=n_tokens, proposer=kind, bucket=self.pool,
+            moe_dispatch=eng.moe_dispatch, scheduler="continuous",
+            steps=steps)

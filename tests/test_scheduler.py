@@ -1,0 +1,255 @@
+"""Continuous-batching slot scheduler: parity, determinism, zero-retrace.
+
+The contracts the continuous serving mode rests on:
+  * token parity — at fixed occupancy the continuous scheduler is greedy
+    token-identical to wave mode (same rounds, same commits),
+  * slot lifecycle — per-slot max_new_tokens budgets and eos early-exit
+    retire slots, freed slots are refilled deterministically under split
+    PRNG keys,
+  * zero retraces — occupancy changes within a (pool, prompt-bucket) never
+    retrace the round or the admission prefill (masks are data),
+  * live re-planning — the tuner is consulted on the live slot count every
+    round and the SD→AR handoff happens mid-stream, in-session (gamma=0),
+  * honest accounting — tokens_out counts real generated tokens and every
+    Request carries a finish_reason.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.analytics import occupancy_timeline, predicted_decay_speedup
+from repro.models.model import Model
+from repro.serving.engine import ServingEngine
+from repro.serving.sampling import SamplingParams
+
+pytestmark = pytest.mark.tier1
+
+TCFG = ModelConfig("cs-moe", "moe", 2, 128, 4, 2, 256, 512, num_experts=4,
+                   num_experts_per_tok=2, dtype="float32")
+DCFG = ModelConfig("cs-draft", "dense", 2, 64, 2, 2, 128, 512,
+                   dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def models():
+    t, d = Model(TCFG), Model(DCFG)
+    return t, d, t.init(jax.random.PRNGKey(0)), d.init(jax.random.PRNGKey(1))
+
+
+def _engine(t, d, pt, pd, **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("gamma", 2)
+    kw.setdefault("force_sd", True)
+    return ServingEngine(t, d, pt, pd, **kw)
+
+
+def test_continuous_matches_wave_greedy_fixed_occupancy(models):
+    """Fixed occupancy (pool-sized batch, equal budgets): the continuous
+    scheduler must be greedy token-identical to wave mode."""
+    t, d, pt, pd = models
+    outs = {}
+    for sched in ("wave", "continuous"):
+        eng = _engine(t, d, pt, pd, scheduler=sched)
+        uids = [eng.submit(np.arange(3, 9), max_new_tokens=8)
+                for _ in range(4)]
+        (report,) = eng.run()
+        outs[sched] = [eng.done[u].output for u in uids]
+        assert report.scheduler == sched
+        assert report.tokens_out == 4 * 8
+        assert all(eng.done[u].finish_reason == "length" for u in uids)
+    for a, b in zip(outs["wave"], outs["continuous"]):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_slot_budgets_and_refill(models):
+    """More requests than slots, mixed budgets: every request is served to
+    exactly its own max_new_tokens and occupancy visibly varies."""
+    t, d, pt, pd = models
+    budgets = (4, 12, 6, 9, 5, 7)
+    eng = _engine(t, d, pt, pd, max_batch=2, scheduler="continuous")
+    uids = [eng.submit(np.arange(3, 9), max_new_tokens=m) for m in budgets]
+    (report,) = eng.run()
+    assert len(eng.done) == len(budgets)
+    assert all(len(eng.done[u].output) == m for u, m in zip(uids, budgets))
+    assert report.tokens_out == sum(budgets)
+    lives = [s.live for s in report.steps]
+    assert max(lives) == 2
+    assert sum(s.admitted for s in report.steps) == len(budgets)
+    assert sum(s.retired for s in report.steps) == len(budgets)
+
+
+def test_retire_refill_deterministic_under_split_keys(models):
+    """Sampled decoding: identical seeds replay the stream exactly
+    (admissions and rounds each consume their own key split); different
+    seeds diverge."""
+    t, d, pt, pd = models
+
+    def serve(seed):
+        eng = _engine(t, d, pt, pd, max_batch=2, scheduler="continuous",
+                      temperature=1.0, seed=seed)
+        uids = [eng.submit(np.arange(3, 9), max_new_tokens=m)
+                for m in (5, 9, 4, 7)]
+        eng.run()
+        return [eng.done[u].output for u in uids]
+
+    a, b, c = serve(5), serve(5), serve(6)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    assert any(not np.array_equal(x, y) for x, y in zip(a, c))
+
+
+def test_no_retrace_when_occupancy_changes_within_bucket(models):
+    """Retire/refill churn is data, not shape: a whole mixed-budget stream
+    compiles ONE round and ONE admission prefill."""
+    t, d, pt, pd = models
+    eng = _engine(t, d, pt, pd, max_batch=2, scheduler="continuous")
+    for m in (3, 7, 5, 4, 6):
+        eng.submit(np.arange(3, 9), max_new_tokens=m)
+    (report,) = eng.run()
+    lives = [s.live for s in report.steps]
+    assert len(set(lives)) > 1                 # occupancy really changed
+    stats = eng.session_stats()["model"]
+    assert stats["traces"] == [(2, 2)]         # one (gamma, pool) round
+    assert stats["admit_traces"] == [(8, 2)]   # one (bucket, pool) admit
+
+
+class _WindowTuner:
+    """Stub tuner: SD only while the live batch stays >= 2 slots."""
+
+    def __init__(self):
+        self.planned = []
+        self.alphas = []
+
+    def plan(self, batch):
+        self.planned.append(batch)
+        return {"use_sd": batch >= 2, "gamma": 2, "predicted_speedup": 2.0}
+
+    def update_alpha(self, alpha):
+        self.alphas.append(alpha)
+
+
+def test_tuner_replans_live_count_and_hands_off_to_ar(models):
+    """As slots drain, plan(live) sees the decayed N(t) and the stream
+    hands off SD→AR mid-flight (gamma=0 rounds, same session) — with
+    greedy outputs still token-identical to the all-SD wave decode."""
+    t, d, pt, pd = models
+    tuner = _WindowTuner()
+    eng = ServingEngine(t, d, pt, pd, max_batch=2, gamma=2, tuner=tuner,
+                        scheduler="continuous")
+    budgets = (4, 12)
+    uids = [eng.submit(np.arange(3, 9), max_new_tokens=m) for m in budgets]
+    (report,) = eng.run()
+    assert set(tuner.planned) == {1, 2}        # re-planned on live N(t)
+    sd_flags = [s.used_sd for s in report.steps]
+    assert True in sd_flags and False in sd_flags
+    assert all(s.gamma == 0 for s in report.steps if not s.used_sd)
+    # the handoff is in-session: one session, no "none" fallback session
+    assert eng.session_constructions == {"model": 1}
+    # greedy losslessness survives the mid-stream policy change
+    ref = _engine(t, d, pt, pd, max_batch=2)
+    ruids = [ref.submit(np.arange(3, 9), max_new_tokens=m) for m in budgets]
+    ref.run()
+    for u, ru in zip(uids, ruids):
+        np.testing.assert_array_equal(eng.done[u].output,
+                                      ref.done[ru].output)
+
+
+def test_eos_early_exit_both_schedulers(models):
+    """finish_reason="eos" + truncation at the first eos, wave and
+    continuous alike (and token-identical between them)."""
+    t, d, pt, pd = models
+    probe = _engine(t, d, pt, pd, max_batch=1)
+    u = probe.submit(np.arange(3, 9), max_new_tokens=8)
+    probe.run()
+    full = probe.done[u].output
+    eos = int(full[2])                         # greedy stream is fixed
+    cut = int(np.nonzero(full == eos)[0][0]) + 1
+    outs = {}
+    for sched in ("wave", "continuous"):
+        eng = _engine(t, d, pt, pd, max_batch=1, scheduler=sched,
+                      eos_id=eos)
+        uu = eng.submit(np.arange(3, 9), max_new_tokens=8)
+        (report,) = eng.run()
+        r = eng.done[uu]
+        assert r.finish_reason == "eos"
+        assert len(r.output) == cut
+        assert report.tokens_out == cut        # only real tokens counted
+        outs[sched] = r.output
+    np.testing.assert_array_equal(outs["wave"], outs["continuous"])
+
+
+def test_wave_tokens_out_counts_real_tokens(models):
+    """Mixed budgets in ONE wave: tokens_out is the sum of per-request
+    budgets, not batch * max(max_new_tokens)."""
+    t, d, pt, pd = models
+    eng = _engine(t, d, pt, pd, max_batch=4)
+    budgets = (4, 16, 8, 6)
+    uids = [eng.submit(np.arange(3, 9), max_new_tokens=m) for m in budgets]
+    (report,) = eng.run()
+    assert report.tokens_out == sum(budgets)
+    assert all(len(eng.done[u].output) == m
+               for u, m in zip(uids, budgets))
+    assert all(eng.done[u].finish_reason == "length" for u in uids)
+
+
+def test_per_request_sampling_validated_loudly(models):
+    """Request-level SamplingParams thread through (max_new_tokens) but a
+    distribution-policy mismatch fails at submit, not silently at decode."""
+    t, d, pt, pd = models
+    eng = _engine(t, d, pt, pd)
+    u = eng.submit(np.arange(3, 9),
+                   sampling=SamplingParams(temperature=0.0,
+                                           max_new_tokens=5))
+    eng.run()
+    assert len(eng.done[u].output) == 5        # sampling.max_new_tokens won
+    with pytest.raises(ValueError, match="temperature"):
+        eng.submit(np.arange(3, 9),
+                   sampling=SamplingParams(temperature=0.7))
+    with pytest.raises(ValueError, match="top_k/top_p"):
+        eng.submit(np.arange(3, 9),
+                   sampling=SamplingParams(top_k=5))
+
+
+def test_poisson_arrivals_delay_admission(models):
+    """Requests stay invisible to the scheduler until their
+    arrival_round; the stream idles through gaps and still serves all."""
+    t, d, pt, pd = models
+    eng = _engine(t, d, pt, pd, max_batch=2, scheduler="continuous")
+    eng.submit(np.arange(3, 9), max_new_tokens=4, arrival_round=0)
+    u_late = eng.submit(np.arange(3, 9), max_new_tokens=4, arrival_round=6)
+    (report,) = eng.run()
+    assert len(eng.done) == 2
+    assert len(eng.done[u_late].output) == 4
+    late_admit = [s.round_index for s in report.steps if s.admitted
+                  and s.round_index >= 6]
+    assert late_admit                          # admitted at/after round 6
+
+
+def test_occupancy_decay_helpers():
+    """analytics: timeline summary + decay-aware predicted speedup."""
+    live = [4, 4, 3, 2, 1]
+    committed = [8, 8, 6, 4, 2]
+    occ = occupancy_timeline(live, committed)
+    assert occ["peak_live"] == 4 and occ["final_live"] == 1
+    assert occ["mean_live"] == pytest.approx(2.8)
+    # token weighting leans toward the full-occupancy rounds
+    assert occ["token_weighted_live"] > occ["mean_live"]
+    pred = predicted_decay_speedup(live, 4, lambda b, g: float(b),
+                                   committed=committed)
+    assert list(pred["per_round"]) == live
+    assert pred["token_weighted"] == pytest.approx(
+        occ["token_weighted_live"])
+    # gamma=0 rounds (SD→AR handoff) are the AR baseline: speedup 1.0,
+    # and the SD formula is never evaluated at gamma=0
+    handoff = predicted_decay_speedup(
+        [4, 1], [4, 0], lambda b, g: 1 / g if g else 1 / 0)
+    assert list(handoff["per_round"]) == [0.25, 1.0]
+    # perf-model wrapper rides the same helper
+    from repro.core.perf_model import SpeedupModel
+    p = np.array([1.0, 0.5, 2.0, 1.5, 0.1, 0.05, 0.01, 0.001, 0.5, 1.2])
+    m = SpeedupModel(params=p)
+    out = m.predict_decay(live, [4] * 5, 2, 8, 0.8, committed=committed)
+    assert out["per_round"].shape == (5,)
+    assert out["token_weighted"] > 0
