@@ -20,6 +20,7 @@ MODULES = [
     ("sec2_prefetch_utility", "benchmarks.prefetch_utility"),
     ("spmoe_prefetch_sweep", "benchmarks.prefetch_sweep"),
     ("continuous_sweep", "benchmarks.continuous_sweep"),
+    ("admission_sweep", "benchmarks.admission_sweep"),
     ("kernels", "benchmarks.kernels"),
 ]
 

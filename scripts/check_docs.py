@@ -62,8 +62,12 @@ DOCUMENTED_API = [
     ("repro.core.prefetch", ["PrefetchProposer", "router_probe"]),
     ("repro.core.spec_decode", ["SDEngine", "SDEngine.start",
                                 "SDEngine.round", "SDEngine.admit",
+                                "SDEngine.admit_rows",
+                                "SDEngine.begin_admit_chunked",
+                                "SDEngine.admit_chunk",
+                                "SDEngine.grow_session",
                                 "SessionState", "RoundResult",
-                                "generate_ar"]),
+                                "PendingAdmission", "generate_ar"]),
     ("repro.serving.engine", ["ServingEngine.step",
                               "ServingEngine.step_continuous",
                               "ServingEngine.submit",
@@ -73,14 +77,18 @@ DOCUMENTED_API = [
                                  "ContinuousScheduler.run_stream",
                                  "SlotState", "StepReport",
                                  "submit_poisson"]),
-    ("repro.models.model", ["merge_cache_rows"]),
+    ("repro.models.model", ["merge_cache_rows", "scatter_cache_rows",
+                            "PageAllocator", "grow_cache_pages",
+                            "grow_cache_seq", "Model.init_cache"]),
     ("repro.core.analytics", ["occupancy_timeline",
-                              "predicted_decay_speedup"]),
+                              "predicted_decay_speedup",
+                              "admission_work"]),
     ("repro.kernels.gmm.ops", ["gmm", "gmm_legacy", "moe_ffn_gmm",
                                "expert_capacity"]),
     ("repro.models.moe", ["moe_forward", "warm_experts", "PrefetchPlan"]),
     ("repro.core.perf_model", ["SpeedupModel", "SpeedupModel.target_time",
-                               "SpeedupModel.predict_decay"]),
+                               "SpeedupModel.predict_decay",
+                               "SpeedupModel.admission_time"]),
 ]
 
 

@@ -14,8 +14,10 @@ timeout 120 python scripts/check_docs.py
 # interpret-mode kernel-parity smoke: ragged + fused gmm vs ref.py oracles
 timeout 120 python -m repro.kernels.gmm.ragged
 # continuous-serving smoke: slot scheduler end-to-end on a tiny config
-# (Poisson arrivals, mixed budgets, in-flight admission, live re-planning)
+# (Poisson arrivals, mixed budgets, row-sliced + chunked admission into
+# paged KV slots, live re-planning)
 timeout 300 python -m repro.launch.serve --arch qwen2-57b-a14b --reduced \
   --requests 4 --max-batch 2 --max-new 6 --gamma 2 --mixed-max-new 4,6 \
-  --scheduler continuous --arrival-rate 1.0 --no-autotune
+  --scheduler continuous --arrival-rate 1.0 --no-autotune \
+  --prefill-chunk 4 --kv-layout paged --page-size 16
 exec timeout "${CI_TIMEOUT:-600}" python -m pytest -q -m tier1 "$@"

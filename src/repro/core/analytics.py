@@ -100,6 +100,29 @@ def occupancy_timeline(live, committed=None):
     }
 
 
+def admission_work(admit_shapes, pool: int, full_bucket: int):
+    """Prefill token-work of a stream's admissions, sliced vs full-pool.
+
+    ``admit_shapes`` is a list of ``(prompt_bucket, rows)`` pairs — one
+    per admission prefill, exactly the entries ``SDEngine.admit_trace_log``
+    records plus repeats for shape-sharing refills (callers usually pass
+    per-round ``StepReport.admit_rows``/``admit_tokens`` reconstructions
+    or the raw per-admission shapes).  The sliced path's prefill work is
+    ``sum(rows_i * bucket_i)`` — ∝ what was admitted; the legacy full path
+    pays ``pool * full_bucket`` per admission regardless.  Returns both
+    totals and the fraction of prefill row-tokens the sliced path avoids.
+    """
+    shapes = [(int(t), int(r)) for t, r in admit_shapes]
+    sliced = sum(r * t for t, r in shapes)
+    full = len(shapes) * int(pool) * int(full_bucket)
+    return {
+        "admissions": len(shapes),
+        "sliced_tokens": sliced,
+        "full_tokens": full,
+        "savings": 1.0 - sliced / max(full, 1),
+    }
+
+
 def predicted_decay_speedup(live, gammas, speedup_fn, committed=None):
     """Occupancy-decay-aware predicted speedup for a continuous stream.
 

@@ -151,6 +151,26 @@ class EagleProposer:
         return {"cache": merge_cache_rows(old["cache"], new["cache"], mask),
                 "feat": jnp.where(mask[:, None], new["feat"], old["feat"])}
 
+    def scatter_state(self, old, new, rows, *, valid=None):
+        """Sliced admission: scatter head KV rows + feature carry."""
+        from repro.models.model import scatter_cache_rows
+        rows = jnp.asarray(rows, jnp.int32)
+        B = old["feat"].shape[0]
+        valid = (jnp.ones(rows.shape, bool) if valid is None
+                 else jnp.asarray(valid, bool))
+        rows_eff = jnp.where(valid, rows, B)
+        return {"cache": scatter_cache_rows(old["cache"], new["cache"],
+                                            rows, valid=valid),
+                "feat": old["feat"].at[rows_eff].set(new["feat"],
+                                                     mode="drop")}
+
+    def grow_state(self, state, new_max_seq):
+        """Pad the head's KV cache on session growth (feat has no seq axis)."""
+        from repro.models.model import grow_cache_seq
+        return {"cache": grow_cache_seq(state["cache"], self.head.cfg,
+                                        new_max_seq),
+                "feat": state["feat"]}
+
 
 class EagleSpecDecoder(SDEngine):
     """Legacy shim: target + EagleHead == SDEngine("eagle").

@@ -119,6 +119,25 @@ class SpeedupModel:
                         np.asarray(top_k, np.float64),
                         np.asarray(num_experts, np.float64), hit_rate=h)
 
+    def admission_time(self, rows, prompt_tokens, top_k, num_experts, *,
+                       dispatch: str | None = None,
+                       params: np.ndarray | None = None):
+        """Predicted wall time of one admission prefill.
+
+        A prefill forward processes ``rows * prompt_tokens`` tokens through
+        the target in one call, so it is priced as
+        ``T_target(rows * prompt_tokens)`` — admission work is ∝ ADMITTED
+        tokens.  The legacy full-pool path pays
+        ``admission_time(pool, global_bucket)`` per refill no matter how
+        few rows were actually admitted; the row-sliced path pays
+        ``admission_time(admitted, per_admission_bucket)``.  Monotone in
+        both arguments, which is what makes the sliced path a strict win.
+        """
+        t = np.asarray(rows, np.float64) * np.asarray(prompt_tokens,
+                                                      np.float64)
+        return self.target_time(t, top_k, num_experts, dispatch=dispatch,
+                                params=params, prefetch_hit_rate=0.0)
+
     def compute_speedup(self, p: np.ndarray, batch, gamma, top_k,
                         num_experts, sigma):
         """Alg. 1 line 3 — vectorized over measurement arrays."""

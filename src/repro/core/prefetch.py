@@ -162,5 +162,14 @@ class PrefetchProposer:
         return {"inner": self.inner.merge_state(old["inner"], new["inner"],
                                                 mask)}
 
+    def scatter_state(self, old, new, rows, *, valid=None):
+        """Sliced admission: fully delegated to the wrapped drafter."""
+        return {"inner": self.inner.scatter_state(old["inner"], new["inner"],
+                                                  rows, valid=valid)}
+
+    def grow_state(self, state, new_max_seq):
+        """Session growth: fully delegated to the wrapped drafter."""
+        return {"inner": self.inner.grow_state(state["inner"], new_max_seq)}
+
 
 register_proposer("prefetch", PrefetchProposer)

@@ -166,6 +166,28 @@ class Proposer(Protocol):
         """
         ...
 
+    def scatter_state(self, old: Any, new: Any, rows: jnp.ndarray, *,
+                      valid: Optional[jnp.ndarray] = None) -> Any:
+        """Row-scatter a COMPACT proposer state into the live one.
+
+        The row-sliced admission hook (SDEngine.admit_rows): ``new`` is an
+        ``init_state``-built state for only the R admitted rows; entry i
+        goes to pool row ``rows[i]``.  ``valid`` (R,) bool drops padding
+        lanes (row-count bucketing).  Must be pure/trace-safe — ``rows``
+        and ``valid`` are data, so which rows get admitted never retraces.
+        """
+        ...
+
+    def grow_state(self, state: Any, new_max_seq: int) -> Any:
+        """Pad the state's sequence capacity to ``new_max_seq``.
+
+        Called (host-side, between rounds) when a paged target session
+        grows its logical capacity: the proposer's dense caches must be
+        able to address the same positions.  States without a sequence
+        axis return themselves unchanged.
+        """
+        ...
+
 
 # ---------------------------------------------------------------------------
 # registry
@@ -312,6 +334,18 @@ class ModelProposer:
         from repro.models.model import merge_cache_rows
         return {"cache": merge_cache_rows(old["cache"], new["cache"], mask)}
 
+    def scatter_state(self, old, new, rows, *, valid=None):
+        """Sliced admission: row-scatter the compact draft cache."""
+        from repro.models.model import scatter_cache_rows
+        return {"cache": scatter_cache_rows(old["cache"], new["cache"],
+                                            rows, valid=valid)}
+
+    def grow_state(self, state, new_max_seq):
+        """Pad the draft cache's sequence axis on session growth."""
+        from repro.models.model import grow_cache_seq
+        return {"cache": grow_cache_seq(state["cache"], self.draft.cfg,
+                                        new_max_seq)}
+
 
 # ---------------------------------------------------------------------------
 # "none": the degenerate drafter — SD round with zero drafts IS plain AR
@@ -345,6 +379,14 @@ class NoneProposer:
     def merge_state(self, old, new, mask):
         """Stateless drafter: nothing to merge on admission."""
         return old
+
+    def scatter_state(self, old, new, rows, *, valid=None):
+        """Stateless drafter: nothing to scatter on admission."""
+        return old
+
+    def grow_state(self, state, new_max_seq):
+        """Stateless drafter: nothing to grow."""
+        return state
 
 
 register_proposer("model", ModelProposer)

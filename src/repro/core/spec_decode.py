@@ -33,7 +33,20 @@ Session/round API (the continuous-batching seam):
     masked prefill of NEW requests into retired rows of a live session:
     the full bucket is prefilled into fresh caches and merged row-wise
     (models/model.merge_cache_rows + Proposer.merge_state), so occupancy
-    changes within a batch bucket cause zero round retraces.
+    changes within a batch bucket cause zero round retraces.  Its cost is
+    ∝ the POOL (non-admitted rows are prefilled and discarded).
+  * ``admit_rows(state, prompts, lengths, rows)`` → ``SessionState`` —
+    the row-SLICED admission path: only the R admitted rows are prefilled,
+    at their own (R, prompt-bucket) shape, and the fresh KV/proposer state
+    is row-scattered into the live session (models/model.
+    scatter_cache_rows + Proposer.scatter_state).  Admission cost scales
+    with what was admitted, not the pool.
+  * ``begin_admit_chunked``/``admit_chunk`` — the sliced path split into
+    fixed-size prompt chunks so a long-prompt admission interleaves with
+    decode rounds instead of stalling the round it lands in.
+  * ``grow_session(state, new_max_seq, ...)`` — pad a paged session's
+    logical capacity (and the proposer's dense caches) so late-arriving
+    long requests admit instead of crashing the stream.
   * ``generate(...)`` is kept as the thin start+round loop for parity.
 
 The caller owning the loop is what enables continuous batching
@@ -185,6 +198,28 @@ class RoundResult:
     phase_times: Optional[Dict[str, float]] = None
 
 
+@dataclass
+class PendingAdmission:
+    """A chunked sliced admission in flight (SDEngine.begin_admit_chunked).
+
+    ``t_cache`` is the compact DENSE target cache under construction
+    (None until the first chunk ran), ``consumed`` the prompt tokens
+    prefilled so far.  The admitted rows join the live session only when
+    ``admit_chunk`` returns ``None`` for the pending half.
+    """
+    prompts: np.ndarray                  # (R, Tp) host-side
+    lengths: np.ndarray                  # (R,) true prompt lengths (equal)
+    rows: np.ndarray                     # (R,) destination pool rows
+    chunk: int
+    key: jax.Array
+    t_cache: Optional[dict] = None
+    consumed: int = 0
+
+    @property
+    def remaining(self) -> int:
+        return int(self.lengths[0]) - self.consumed
+
+
 class SDEngine:
     """One persistent decoding session: a target model + one Proposer.
 
@@ -204,8 +239,15 @@ class SDEngine:
         self._round_cache: Dict[int, Callable] = {}      # gamma -> jitted round
         self._stage_cache: Dict[int, Tuple] = {}         # gamma -> stage jits
         self._admit_cache: Dict[Tuple[int, int, int], Callable] = {}
+        self._sliced_cache: Dict[Tuple[int, int, int], Callable] = {}
+        self._chunk_cache: Dict[Tuple, Callable] = {}
         self.trace_log: List[Tuple[int, int]] = []       # (gamma, B) per trace
-        self.admit_trace_log: List[Tuple[int, int]] = []  # (T_prompt, B)
+        # (T_prompt, rows): full-path entries carry rows == pool, sliced-
+        # path entries rows == the admitted-row bucket — the jit-signature
+        # contract tests assert on
+        self.admit_trace_log: List[Tuple[int, int]] = []
+        self.chunk_trace_log: List[Tuple[str, int, int]] = []  # (stage, C, R)
+        self.growth_log: List[Tuple[int, Optional[int]]] = []
         # session-lifetime expert-prefetch aggregates (prefetch proposers):
         # summed across every generate() call this session served
         self.prefetch_totals: Dict[str, int] = {
@@ -356,41 +398,43 @@ class SDEngine:
     # --------------------------------------------------------------- prefill
     def prefill(self, params_t, params_p, prompts: jnp.ndarray, max_seq: int,
                 *, lengths=None, key=None,
-                prefill_kwargs: Optional[dict] = None):
-        """Prefill target + proposer; returns (t_cache, p_state, last_token)."""
-        B = prompts.shape[0]
-        kw = prefill_kwargs or {}
+                prefill_kwargs: Optional[dict] = None,
+                cache_opts: Optional[dict] = None, page_table=None):
+        """Prefill target + proposer; returns (t_cache, p_state, last_token).
+
+        ``cache_opts`` forwards to ``Model.init_cache`` (e.g.
+        ``{"paged": True, "page_size": 64, "pool_pages": N}``);
+        ``page_table`` pre-assigns the paged cache's block table (a
+        ``PageAllocator``'s table) so the prefill writes land in the
+        admitted rows' pages.  Proposer caches stay dense either way."""
         params = {"target": params_t, "draft": params_p}
-        t_cache = self.target.init_cache(B, max_seq)
-        if self.proposer.needs_hidden:
-            last_t, last_hidden, t_cache = self.target.prefill_with_hidden(
-                params_t, prompts, t_cache, lengths=lengths, **kw)
-        else:
-            last_t, t_cache = self.target.prefill(params_t, prompts, t_cache,
-                                                  lengths=lengths, **kw)
-            last_hidden = None
-        p_state = self.proposer.init_state(params, prompts, max_seq,
-                                           lengths=lengths,
-                                           last_hidden=last_hidden)
+        t_cache, p_state, last_l = self._fresh_prefill(
+            params, prompts, lengths, max_seq, cache_opts=cache_opts,
+            page_table=page_table, prefill_kwargs=prefill_kwargs)
         key = key if key is not None else jax.random.PRNGKey(0)
-        p = probs_from_logits(last_t, self.temperature)
+        p = probs_from_logits(last_l, self.temperature)
         last_token = sample_from(p, key, self.temperature)
         return t_cache, p_state, last_token
 
     # --------------------------------------------------------------- session
     def start(self, params_t, params_p, prompts: jnp.ndarray, *,
               max_seq: int, lengths=None, key=None,
-              prefill_kwargs: Optional[dict] = None) -> SessionState:
+              prefill_kwargs: Optional[dict] = None,
+              cache_opts: Optional[dict] = None,
+              page_table=None) -> SessionState:
         """Open a decoding batch: prefill + cache alloc → ``SessionState``.
 
         The prefill-sampled token is each row's FIRST generated token; the
         caller reads it from ``state.last_token``.  ``max_seq`` is the
-        static cache capacity for the whole batch lifetime (continuous
-        callers must size it for the longest admitted request).
+        static cache capacity for the whole batch lifetime — unless the
+        session is PAGED (``cache_opts={"paged": True, ...}`` +
+        ``page_table``), where it is only the initial logical capacity and
+        ``grow_session`` raises it later without resizing any row.
         """
         t_cache, p_state, last_token = self.prefill(
             params_t, params_p, prompts, max_seq, lengths=lengths, key=key,
-            prefill_kwargs=prefill_kwargs)
+            prefill_kwargs=prefill_kwargs, cache_opts=cache_opts,
+            page_table=page_table)
         return SessionState(params={"target": params_t, "draft": params_p},
                             t_cache=t_cache, p_state=p_state,
                             last_token=last_token, max_seq=max_seq)
@@ -580,6 +624,274 @@ class SDEngine:
             jnp.asarray(prompts), jnp.asarray(lengths, jnp.int32), mask, key)
         return replace(state, t_cache=t_cache, p_state=p_state,
                        last_token=last_token)
+
+    # ------------------------------------------------------ sliced admission
+    def _fresh_prefill(self, params, prompts, lengths, max_seq, *,
+                       cache_opts=None, page_table=None,
+                       prefill_kwargs=None):
+        """Prefill a batch into fresh caches + proposer state; returns
+        (t_cache, p_state, last_logits).  The one shared implementation
+        behind ``prefill``/``start`` (full batch, optionally paged), the
+        sliced ``admit_rows`` path (compact R-row dense batch) and the
+        final chunk of a chunked admission."""
+        target, proposer = self.target, self.proposer
+        kw = prefill_kwargs or {}
+        B = prompts.shape[0]
+        fresh_t = target.init_cache(B, max_seq, **(cache_opts or {}))
+        if page_table is not None:
+            fresh_t["pages"] = dict(fresh_t["pages"],
+                                    table=jnp.asarray(page_table, jnp.int32))
+        if proposer.needs_hidden:
+            last_l, last_h, fresh_t = target.prefill_with_hidden(
+                params["target"], prompts, fresh_t, lengths=lengths, **kw)
+        else:
+            last_l, fresh_t = target.prefill(
+                params["target"], prompts, fresh_t, lengths=lengths, **kw)
+            last_h = None
+        fresh_p = proposer.init_state(params, prompts, max_seq,
+                                      lengths=lengths, last_hidden=last_h)
+        return fresh_t, fresh_p, last_l
+
+    def _scatter_admitted(self, state_parts, fresh, rows, valid, key, Tp):
+        """Scatter a compact fresh (cache, p_state, last_logits) into the
+        live session arrays; shared by admit_rows and the final chunk."""
+        from repro.models.model import scatter_cache_rows
+        t_cache, p_state, last_token = state_parts
+        fresh_t, fresh_p, last_l = fresh
+        first = sample_from(probs_from_logits(last_l, self.temperature), key,
+                            self.temperature)
+        merged_t = scatter_cache_rows(t_cache, fresh_t, rows, valid=valid,
+                                      n_prompt=Tp)
+        merged_p = self.proposer.scatter_state(p_state, fresh_p, rows,
+                                               valid=valid)
+        B = last_token.shape[0]
+        rows_eff = jnp.where(valid, jnp.asarray(rows, jnp.int32), B)
+        merged_last = last_token.at[rows_eff].set(first, mode="drop")
+        return merged_t, merged_p, merged_last
+
+    def _admit_rows_fn(self, R: int, Tp: int, max_seq: int) -> Callable:
+        fn = self._sliced_cache.get((R, Tp, max_seq))
+        if fn is None:
+            def admit_rows_fn(params, t_cache, p_state, last_token, prompts,
+                              lengths, rows, valid, key):
+                self.admit_trace_log.append((Tp, R))
+                fresh = self._fresh_prefill(params, prompts, lengths,
+                                            max_seq)
+                return self._scatter_admitted(
+                    (t_cache, p_state, last_token), fresh, rows, valid, key,
+                    Tp)
+
+            fn = jax.jit(admit_rows_fn)
+            self._sliced_cache[(R, Tp, max_seq)] = fn
+        return fn
+
+    def admit_rows(self, state: SessionState, prompts: jnp.ndarray, lengths,
+                   rows, *, valid=None, key: Optional[jax.Array] = None
+                   ) -> SessionState:
+        """Row-SLICED admission: prefill only the admitted rows.
+
+        The compact counterpart of :meth:`admit`: ``prompts`` holds just
+        the R admitted requests (R <= pool), the fresh prefill runs at the
+        (R, T_prompt) shape — its cost scales with what was admitted — and
+        the resulting target cache rows / proposer state rows / first
+        sampled tokens are row-scattered into the live session
+        (models/model.scatter_cache_rows + ``Proposer.scatter_state``).
+        Works on dense and paged sessions alike (the fresh prefill is
+        always dense; a paged session receives it through its block
+        table, which the caller's ``PageAllocator`` must already map).
+
+        Parameters
+        ----------
+        state : SessionState
+            The live session.
+        prompts : jnp.ndarray
+            (R, T_prompt) admitted prompts, row-count-bucketed by the
+            caller (pad lanes replicate real rows and are dropped via
+            ``valid``).
+        lengths : array-like
+            (R,) true prompt lengths.
+        rows : array-like
+            (R,) pool row index each admitted request lands in.  DATA —
+            which rows admit never retraces; only a new (R, T_prompt)
+            shape does (logged in ``admit_trace_log`` as ``(T_prompt, R)``).
+        valid : array-like, optional
+            (R,) bool; False lanes are padding and scatter nothing.
+        key : jax.Array, optional
+            PRNG key for the admitted rows' first sampled tokens.
+
+        Returns
+        -------
+        SessionState
+            The live session with the admitted rows prefilled and ready
+            for the next ``round``.
+        """
+        R, Tp = prompts.shape
+        if key is None:
+            if self.temperature > 0.0:
+                raise ValueError(
+                    "admit_rows() needs a fresh per-call key at "
+                    "temperature>0 (split one per admission)")
+            key = jax.random.PRNGKey(0)
+        valid = (np.ones((R,), bool) if valid is None
+                 else np.asarray(valid, bool))
+        fn = self._admit_rows_fn(R, Tp, state.max_seq)
+        t_cache, p_state, last_token = fn(
+            state.params, state.t_cache, state.p_state, state.last_token,
+            jnp.asarray(prompts), jnp.asarray(lengths, jnp.int32),
+            jnp.asarray(rows, jnp.int32), jnp.asarray(valid), key)
+        return replace(state, t_cache=t_cache, p_state=p_state,
+                       last_token=last_token)
+
+    # ----------------------------------------------------- chunked admission
+    def begin_admit_chunked(self, prompts, lengths, rows, *, chunk: int,
+                            key: Optional[jax.Array] = None
+                            ) -> "PendingAdmission":
+        """Open a chunked (incremental) sliced admission.
+
+        Long prompts prefill ``chunk`` tokens at a time — one
+        ``admit_chunk`` call per decode-round boundary — so a single long
+        admission no longer stalls the round it lands in.  The compact
+        cache under construction attends only to its own already-written
+        positions (the ``extend``-at-offset discipline), so chunked and
+        one-shot prefills are token-identical.  The admitted rows stay
+        OUT of the live session (inactive, shape-stable) until the final
+        chunk scatters them in.
+
+        Restriction: one chunked admission holds requests of EQUAL prompt
+        length (callers admit long prompts one request at a time), and SWA
+        targets need ``chunk <= SWA_RING_PAD + 1`` (ring eviction) — the
+        serving engine validates both.
+        """
+        prompts = np.asarray(prompts)
+        lengths = np.asarray(lengths, np.int32)
+        if len(set(int(x) for x in lengths)) != 1:
+            raise ValueError("chunked admission requires equal prompt "
+                             "lengths; admit long prompts one at a time")
+        if int(lengths[0]) <= chunk:
+            raise ValueError("prompt fits one chunk; use admit_rows")
+        if key is None:
+            if self.temperature > 0.0:
+                raise ValueError(
+                    "begin_admit_chunked() needs a fresh key at "
+                    "temperature>0")
+            key = jax.random.PRNGKey(0)
+        return PendingAdmission(prompts=prompts, lengths=lengths,
+                                rows=np.asarray(rows, np.int32),
+                                chunk=int(chunk), key=key)
+
+    def _chunk_fn(self, stage: str, R: int, C: int, Tp: int,
+                  max_seq: int) -> Callable:
+        # "first"/"mid" never touch the full prompt, so they share one
+        # compile across prompt buckets; only "final" keys on Tp
+        cache_key = (stage, R, C, Tp if stage == "final" else 0, max_seq)
+        fn = self._chunk_cache.get(cache_key)
+        if fn is not None:
+            return fn
+        target, proposer = self.target, self.proposer
+
+        if stage == "first":
+            def chunk_fn(params, toks, lens):
+                self.chunk_trace_log.append((stage, C, R))
+                fresh_t = target.init_cache(R, max_seq)
+                _, fresh_t = target.prefill(params["target"], toks, fresh_t,
+                                            lengths=lens)
+                return fresh_t
+        elif stage == "mid":
+            def chunk_fn(params, fresh_t, toks, n_row):
+                self.chunk_trace_log.append((stage, C, R))
+                _, pend = target.extend(params["target"], toks, fresh_t,
+                                        collect=True)
+                return target.commit(pend, n_row, collected=True)
+        else:                                        # "final"
+            def chunk_fn(params, t_cache, p_state, last_token, fresh_t,
+                         toks, prompts, lengths, n_row, rows, valid, key):
+                self.chunk_trace_log.append((stage, C, R))
+                logits, hidden, pend = target.extend_with_hidden(
+                    params["target"], toks, fresh_t, collect=True)
+                fresh_t = target.commit(pend, n_row, collected=True)
+                idx = (n_row - 1)[:, None, None].astype(jnp.int32)
+                last_l = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
+                last_h = jnp.take_along_axis(hidden, idx, axis=1)[:, 0] \
+                    if proposer.needs_hidden else None
+                fresh_p = proposer.init_state(params, prompts, max_seq,
+                                              lengths=lengths,
+                                              last_hidden=last_h)
+                return self._scatter_admitted(
+                    (t_cache, p_state, last_token),
+                    (fresh_t, fresh_p, last_l), rows, valid, key, Tp)
+
+        fn = jax.jit(chunk_fn)
+        self._chunk_cache[cache_key] = fn
+        return fn
+
+    def admit_chunk(self, state: SessionState, pa: "PendingAdmission"
+                    ) -> Tuple[SessionState, Optional["PendingAdmission"]]:
+        """Advance a chunked admission by ONE chunk.
+
+        Non-final chunks touch only the pending compact cache (the live
+        session is returned unchanged — its slots keep decoding); the
+        final chunk commits the tail, builds the proposer state over the
+        full prompt, samples the first tokens and scatters everything into
+        the live session exactly like :meth:`admit_rows`.
+
+        Returns ``(state, pending)`` — ``pending`` is ``None`` once the
+        admission landed (the rows are then live).
+        """
+        R, Tp = pa.prompts.shape
+        C = pa.chunk
+        done = pa.consumed
+        total = int(pa.lengths[0])
+        take = min(C, total - done)
+        toks = np.full((R, C), 0, np.int32)
+        toks[:, :take] = pa.prompts[:, done:done + take]
+        toks = jnp.asarray(toks)
+        n_row = jnp.full((R,), take, jnp.int32)
+        final = done + take >= total
+        params = state.params
+        if done == 0:
+            fn = self._chunk_fn("first", R, C, Tp, state.max_seq)
+            fresh_t = fn(params, toks, jnp.minimum(pa.lengths, C))
+            return state, replace(pa, t_cache=fresh_t, consumed=take)
+        if not final:
+            fn = self._chunk_fn("mid", R, C, Tp, state.max_seq)
+            fresh_t = fn(params, pa.t_cache, toks, n_row)
+            return state, replace(pa, t_cache=fresh_t,
+                                  consumed=done + take)
+        fn = self._chunk_fn("final", R, C, Tp, state.max_seq)
+        valid = jnp.ones((R,), bool)
+        t_cache, p_state, last_token = fn(
+            params, state.t_cache, state.p_state, state.last_token,
+            pa.t_cache, toks, jnp.asarray(pa.prompts),
+            jnp.asarray(pa.lengths), n_row, jnp.asarray(pa.rows), valid,
+            pa.key)
+        new_state = replace(state, t_cache=t_cache, p_state=p_state,
+                            last_token=last_token)
+        return new_state, None
+
+    # ---------------------------------------------------------------- growth
+    def grow_session(self, state: SessionState, new_max_seq: int, *,
+                     pool_pages: Optional[int] = None,
+                     max_pages: Optional[int] = None) -> SessionState:
+        """Grow a PAGED session's logical capacity to ``new_max_seq``.
+
+        Pads the target's physical page pool / block table
+        (models/model.grow_cache_pages) and the proposer's dense caches
+        (``Proposer.grow_state``) so a late-arriving request longer than
+        anything the stream was sized for admits instead of raising.  A
+        growth changes compiled shapes, so the next round/admit retraces —
+        pow2 geometry amortizes that; events land in ``growth_log``.
+        """
+        from repro.models.model import grow_cache_pages
+        t_cache = state.t_cache
+        if t_cache.get("pages") is None:
+            raise ValueError("grow_session: dense sessions are statically "
+                             "sized; use a paged session (kv_layout='paged')")
+        if pool_pages is not None:
+            t_cache = grow_cache_pages(t_cache, pool_pages, max_pages)
+        p_state = self.proposer.grow_state(state.p_state, new_max_seq)
+        self.growth_log.append((new_max_seq, pool_pages))
+        return replace(state, t_cache=t_cache, p_state=p_state,
+                       max_seq=new_max_seq)
 
     # -------------------------------------------------------------- generate
     def generate(

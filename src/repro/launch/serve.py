@@ -16,6 +16,14 @@ re-planned on the live slot count every round.  ``--arrival-rate`` replays
 a Poisson arrival trace (mean arrivals per decode round) and
 ``--mixed-max-new`` draws each request's budget from a comma list — the
 mixed-length traffic where wave padding costs the most.
+
+Admission knobs (continuous mode): ``--admit-mode sliced`` (default)
+prefills only the admitted rows per refill (``full`` keeps the legacy
+pool-wide prefill for comparison); ``--prefill-chunk N`` prefills long
+prompts N tokens per round boundary instead of stalling one round;
+``--kv-layout paged --page-size N`` stores target KV in block-table pages
+so capacity grows with the traffic instead of being sized for the
+worst-case request up front.
 """
 from __future__ import annotations
 
@@ -69,6 +77,20 @@ def main():
                          "request (default: --max-new for every request)")
     ap.add_argument("--eos-id", type=int, default=None,
                     help="early-exit token id (per-request finish_reason)")
+    ap.add_argument("--admit-mode", default="sliced",
+                    choices=["sliced", "full"],
+                    help="continuous admission: prefill only the admitted "
+                         "rows (sliced, default) or the whole pool (full, "
+                         "the legacy path kept for comparison)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="continuous mode: prefill prompts longer than "
+                         "this in chunks interleaved with decode rounds")
+    ap.add_argument("--kv-layout", default="dense",
+                    choices=["dense", "paged"],
+                    help="target KV layout; paged = block-table pages "
+                         "with on-demand growth (continuous mode)")
+    ap.add_argument("--page-size", type=int, default=64,
+                    help="positions per KV page with --kv-layout paged")
     ap.add_argument("--timed", action="store_true",
                     help="record per-phase propose/verify/reject timings")
     ap.add_argument("--no-autotune", action="store_true")
@@ -113,7 +135,10 @@ def main():
                         gamma=args.gamma, temperature=args.temperature,
                         proposer=args.proposer, proposer_opts=proposer_opts,
                         seed=args.seed, timed=args.timed,
-                        scheduler=args.scheduler, eos_id=args.eos_id)
+                        scheduler=args.scheduler, eos_id=args.eos_id,
+                        admit_mode=args.admit_mode,
+                        prefill_chunk=args.prefill_chunk,
+                        kv_layout=args.kv_layout, page_size=args.page_size)
 
     pb = prompt_batch(cfg.vocab_size, args.requests, kind=args.kind,
                       seed=args.seed)
@@ -155,11 +180,16 @@ def main():
                   f"admitted={sum(s.admitted for s in r.steps)} "
                   f"retired={sum(s.retired for s in r.steps)} "
                   f"sd_handoffs={handoffs}")
+            print(f"  admission: {sum(s.admit_rows for s in r.steps)} "
+                  f"prefill rows, {sum(s.admit_tokens for s in r.steps)} "
+                  f"row-tokens ({args.admit_mode})")
     for kind, s in eng.session_stats().items():
         print(f"session[{kind}]: constructed {s['constructions']}x, "
               f"gammas compiled {s['gammas_compiled']}, "
               f"{len(s['traces'])} round traces, "
-              f"{len(s['admit_traces'])} admit traces")
+              f"{len(s['admit_traces'])} admit traces, "
+              f"{len(s['chunk_traces'])} chunk traces, "
+              f"{len(s['growths'])} growths")
     sample = eng.done[1]
     print(f"sample completion ({sample.finish_reason}):",
           repr(tok.decode(sample.output)[:80]))

@@ -87,7 +87,13 @@ def init_cross_attn(key, cfg, dtype) -> dict:
 SWA_RING_PAD = 8
 
 
-def make_attn_cache(cfg, batch: int, max_seq: int, kind: str, dtype) -> dict:
+def make_attn_cache(cfg, batch: int, max_seq: int, kind: str, dtype, *,
+                    paged: bool = False, page_size: int = 64,
+                    pool_pages: Optional[int] = None) -> dict:
+    """Per-layer decode cache.  ``paged=True`` stores full-attn / MLA
+    sequence axes as a shared physical page pool (``*_pages`` leaves,
+    (pool_pages, page_size, ...)) addressed through the model-level block
+    table; SWA rings are already bounded per row and stay dense."""
     hd = cfg.head_dim
     if kind == "swa":
         w = min(cfg.sliding_window + SWA_RING_PAD, max_seq)
@@ -95,6 +101,22 @@ def make_attn_cache(cfg, batch: int, max_seq: int, kind: str, dtype) -> dict:
             "k": jnp.zeros((batch, w, cfg.num_kv_heads, hd), dtype),
             "v": jnp.zeros((batch, w, cfg.num_kv_heads, hd), dtype),
             "pos": jnp.full((batch, w), -1, jnp.int32),
+        }
+    if paged:
+        npg = (batch * (-(-max_seq // page_size)) + 1
+               if pool_pages is None else pool_pages)
+        if kind == "mla":
+            return {
+                "latent_pages": jnp.zeros(
+                    (npg, page_size, cfg.mla_kv_lora_rank), dtype),
+                "k_rope_pages": jnp.zeros(
+                    (npg, page_size, cfg.mla_qk_rope_dim), dtype),
+            }
+        return {
+            "k_pages": jnp.zeros((npg, page_size, cfg.num_kv_heads, hd),
+                                 dtype),
+            "v_pages": jnp.zeros((npg, page_size, cfg.num_kv_heads, hd),
+                                 dtype),
         }
     if kind == "mla":
         return {
@@ -105,6 +127,29 @@ def make_attn_cache(cfg, batch: int, max_seq: int, kind: str, dtype) -> dict:
         "k": jnp.zeros((batch, max_seq, cfg.num_kv_heads, hd), dtype),
         "v": jnp.zeros((batch, max_seq, cfg.num_kv_heads, hd), dtype),
     }
+
+
+def _paged_write(pool: jnp.ndarray, table: jnp.ndarray,
+                 positions: jnp.ndarray, vals: jnp.ndarray) -> jnp.ndarray:
+    """Scatter per-row values at logical ``positions`` (B, T) into the
+    physical page pool (NP, page, ...) through the block table (B, MP).
+    Unallocated positions resolve to the trash page — harmless."""
+    ps = pool.shape[1]
+    bidx = jnp.arange(positions.shape[0])[:, None]
+    pid = table[bidx, positions // ps]                       # (B, T)
+    return pool.at[pid, positions % ps].set(vals)
+
+
+def _paged_view(pool: jnp.ndarray, table: jnp.ndarray):
+    """Gather the (B, MP*page, ...) dense view of a paged pool plus its
+    logical key positions.  Stale/trash content is masked the same way
+    rejected SD suffixes are: the causal mask only admits positions the
+    row has actually written (k_pos <= q_pos)."""
+    B, MP = table.shape
+    ps = pool.shape[1]
+    view = pool[table].reshape((B, MP * ps) + pool.shape[2:])
+    k_pos = jnp.broadcast_to(jnp.arange(MP * ps)[None, :], (B, MP * ps))
+    return view, k_pos
 
 
 # ---------------------------------------------------------------------------
@@ -323,6 +368,7 @@ def gqa_forward(
     mrope_positions=None,
     use_flash: bool = False,
     causal: bool = True,
+    page_table: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, Optional[dict]]:
     B, T, _ = x.shape
     window = cfg.sliding_window if kind == "swa" else 0
@@ -363,6 +409,13 @@ def gqa_forward(
                     "v": cache["v"].at[bidx, slots].set(v[:, -tw:]),
                     "pos": cache["pos"].at[bidx, slots].set(positions[:, -tw:]),
                 }
+            elif "k_pages" in cache:
+                cache = {
+                    "k_pages": _paged_write(cache["k_pages"], page_table,
+                                            positions, k),
+                    "v_pages": _paged_write(cache["v_pages"], page_table,
+                                            positions, v),
+                }
             else:
                 bidx = jnp.arange(B)[:, None]
                 cache = {
@@ -383,6 +436,19 @@ def gqa_forward(
         }
         k_pos = cache["pos"]
         out = attend(q, cache["k"], cache["v"], positions, k_pos)
+    elif "k_pages" in cache:
+        # paged: write the new tokens through the block table, then attend
+        # against the gathered dense view (decode kernel expects contiguous
+        # K/V, so paged decode takes the generic masked path)
+        cache = {
+            "k_pages": _paged_write(cache["k_pages"], page_table, positions,
+                                    k),
+            "v_pages": _paged_write(cache["v_pages"], page_table, positions,
+                                    v),
+        }
+        k_view, k_pos = _paged_view(cache["k_pages"], page_table)
+        v_view, _ = _paged_view(cache["v_pages"], page_table)
+        out = attend(q, k_view, v_view, positions, k_pos)
     else:
         cache = {
             "k": cache["k"].at[bidx, positions].set(k),
@@ -433,6 +499,7 @@ def mla_forward(
     *,
     cache: Optional[dict] = None,
     mode: str = "train",
+    page_table: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, Optional[dict]]:
     B, T, _ = x.shape
     H = cfg.num_heads
@@ -454,11 +521,31 @@ def mla_forward(
         k_pos = positions
         new_cache = None
         if mode == "prefill" and cache is not None:
-            bidx = jnp.arange(B)[:, None]
-            new_cache = {
-                "latent": cache["latent"].at[bidx, positions].set(latent),
-                "k_rope": cache["k_rope"].at[bidx, positions].set(k_rope_new),
-            }
+            if "latent_pages" in cache:
+                new_cache = {
+                    "latent_pages": _paged_write(cache["latent_pages"],
+                                                 page_table, positions,
+                                                 latent),
+                    "k_rope_pages": _paged_write(cache["k_rope_pages"],
+                                                 page_table, positions,
+                                                 k_rope_new),
+                }
+            else:
+                bidx = jnp.arange(B)[:, None]
+                new_cache = {
+                    "latent": cache["latent"].at[bidx, positions].set(latent),
+                    "k_rope": cache["k_rope"].at[bidx, positions].set(
+                        k_rope_new),
+                }
+    elif "latent_pages" in cache:
+        new_cache = {
+            "latent_pages": _paged_write(cache["latent_pages"], page_table,
+                                         positions, latent),
+            "k_rope_pages": _paged_write(cache["k_rope_pages"], page_table,
+                                         positions, k_rope_new),
+        }
+        lat_all, k_pos = _paged_view(new_cache["latent_pages"], page_table)
+        k_rope_all, _ = _paged_view(new_cache["k_rope_pages"], page_table)
     else:
         bidx = jnp.arange(B)[:, None]
         lat_all = cache["latent"].at[bidx, positions].set(latent)

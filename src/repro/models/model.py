@@ -21,6 +21,16 @@ pass.  With ``collect=True`` recurrent slots return per-step states
 (leading T axis); ``commit`` gathers the state of the last consumed-and-
 accepted token and bumps ``lengths``.  Attention slots are committed in
 place (stale entries are masked by position, see attention.py).
+
+Paged KV (``init_cache(..., paged=True)``): full-attention and MLA slots
+store their sequence axis in fixed-size pages drawn from a shared pool
+(``{"k_pages": (P, NP, page, H, D), ...}``) indexed by a per-row block
+table ``cache["pages"]["table"]`` (B, max_pages) — physical page 0 is a
+reserved trash page that unallocated/retired rows point at, so stale lanes
+write harmlessly and no index is ever negative.  The table is DATA: page
+assignment (``PageAllocator``) never retraces, only pool growth
+(``grow_cache_pages``) does.  SWA rings and recurrent states are bounded
+per row already and stay dense inside a paged cache.
 """
 from __future__ import annotations
 
@@ -69,6 +79,10 @@ def merge_cache_rows(old: dict, new: dict, mask: jnp.ndarray) -> dict:
         raise NotImplementedError(
             "merge_cache_rows: encoder-decoder cross caches are static "
             "per-wave; continuous admission is decoder-only")
+    if old.get("pages") is not None:
+        raise NotImplementedError(
+            "merge_cache_rows needs two same-shape caches; a paged cache "
+            "admits through scatter_cache_rows (the sliced path)")
     mask = jnp.asarray(mask, bool)
 
     def pick(o, n):
@@ -80,6 +94,228 @@ def merge_cache_rows(old: dict, new: dict, mask: jnp.ndarray) -> dict:
               for lo, ln in zip(old["layers"], new["layers"])]
     lengths = jnp.where(mask, new["lengths"], old["lengths"])
     return dict(old, layers=layers, lengths=lengths)
+
+
+_PAGED_LEAF_PAIRS = (("k_pages", "k"), ("v_pages", "v"),
+                     ("latent_pages", "latent"), ("k_rope_pages", "k_rope"))
+
+
+def scatter_cache_rows(old: dict, new: dict, rows: jnp.ndarray, *,
+                       valid: Optional[jnp.ndarray] = None,
+                       n_prompt: Optional[int] = None) -> dict:
+    """Row-scatter a COMPACT (R-row) cache into a live B-row cache.
+
+    The row-sliced admission primitive (core/spec_decode.SDEngine.
+    admit_rows): ``new`` is a freshly prefilled cache holding only the R
+    admitted rows, ``rows`` (R,) the pool row index each goes to.  Unlike
+    :func:`merge_cache_rows` the fresh prefill's shape is (R, ...) — its
+    cost scales with what was admitted, not the pool.
+
+    ``valid`` (R,) bool marks real lanes; padding lanes (row-count
+    bucketing replicates admissions round-robin, and at temperature>0 the
+    replicas sample different first tokens) are dropped from the scatter so
+    results never depend on lane order.  ``rows`` itself is data — which
+    rows get admitted never retraces.
+
+    Dense leaves (batch on axis 1, like merge_cache_rows) scatter whole
+    rows.  Paged leaves scatter the first ``n_prompt`` positions (rounded
+    up to whole pages) through ``old["pages"]["table"]``; the admitted
+    row's decode-region pages are left stale — decode writes its positions
+    before attending, the same discipline that makes rejected SD suffixes
+    safe.  ``new`` must be a DENSE cache whose max_seq matches the live
+    cache's logical capacity (so SWA ring widths line up).
+    """
+    if old.get("cross") is not None:
+        raise NotImplementedError(
+            "scatter_cache_rows: continuous admission is decoder-only")
+    rows = jnp.asarray(rows, jnp.int32)
+    R = rows.shape[0]
+    B = old["lengths"].shape[0]
+    if valid is None:
+        valid = jnp.ones((R,), bool)
+    else:
+        valid = jnp.asarray(valid, bool)
+    # invalid lanes target index B — out of bounds, dropped by the scatter
+    rows_eff = jnp.where(valid, rows, B)
+    table = None if old.get("pages") is None else old["pages"]["table"]
+
+    def scatter_dense(o, n):
+        return o.at[:, rows_eff].set(n, mode="drop")
+
+    def scatter_paged(o, n):
+        # o: (P, NP, ps, ...), n: (P, R, S_f, ...) — write the prompt pages
+        # of each admitted row through the block table
+        ps = o.shape[2]
+        S_f = n.shape[2]
+        span = S_f if n_prompt is None else min(-(-n_prompt // ps) * ps, S_f)
+        pos = jnp.arange(span)
+        pid = table[rows[:, None], (pos // ps)[None, :]]        # (R, span)
+        pid = jnp.where(valid[:, None], pid, o.shape[1])        # drop pads
+        return o.at[:, pid, (pos % ps)[None, :]].set(n[:, :, :span],
+                                                     mode="drop")
+
+    paged_to_dense = dict(_PAGED_LEAF_PAIRS)
+    layers = []
+    for lo, ln in zip(old["layers"], new["layers"]):
+        slot = {k: (scatter_paged(leaf, ln[paged_to_dense[k]])
+                    if k in paged_to_dense else scatter_dense(leaf, ln[k]))
+                for k, leaf in lo.items()}
+        layers.append(slot)
+    lengths = old["lengths"].at[rows_eff].set(new["lengths"], mode="drop")
+    return dict(old, layers=layers, lengths=lengths)
+
+
+class PageAllocator:
+    """Host-side block manager for a paged decode cache.
+
+    Mirrors TensorRT-LLM's KV block manager at the granularity this repo
+    needs: a free list over the physical pool, per-row page ownership, and
+    a (B, max_pages) logical→physical table the jitted forwards consume as
+    DATA.  Physical page 0 is the trash page — never allocated, the target
+    of every unassigned table entry — so retired rows' frozen-lane writes
+    land harmlessly and reads stay in bounds.
+
+    ``alloc``/``free_row`` mutate ``self.table`` in place; callers push
+    ``jnp.asarray(alloc.table)`` back into the session state after a
+    change (an input-array swap, never a retrace).  When ``can_alloc``
+    says no, ``grown_geometry`` returns the next pow2 (pool_pages,
+    max_pages) to rebuild with via :func:`grow_cache_pages`.
+    """
+
+    def __init__(self, batch: int, page_size: int, pool_pages: int,
+                 max_pages: int):
+        import numpy as np
+        self.page_size = int(page_size)
+        self.pool_pages = int(pool_pages)
+        self.max_pages = int(max_pages)
+        self.free: List[int] = list(range(1, self.pool_pages))
+        self.owned: Dict[int, List[int]] = {}
+        self.table = np.zeros((batch, self.max_pages), np.int32)
+
+    def pages_for(self, n_positions: int) -> int:
+        return -(-int(n_positions) // self.page_size)
+
+    def can_alloc(self, n_positions: int) -> bool:
+        need = self.pages_for(n_positions)
+        return need <= len(self.free) and need <= self.max_pages
+
+    def alloc(self, row: int, n_positions: int) -> None:
+        """Assign pages covering ``n_positions`` to ``row`` (must be free)."""
+        need = self.pages_for(n_positions)
+        if row in self.owned:
+            raise ValueError(f"row {row} already owns pages; free_row first")
+        if need > len(self.free) or need > self.max_pages:
+            raise ValueError(
+                f"cannot allocate {need} pages (free={len(self.free)}, "
+                f"max_pages={self.max_pages}); grow the pool first")
+        pages = [self.free.pop() for _ in range(need)]
+        self.owned[row] = pages
+        self.table[row, :] = 0
+        self.table[row, :need] = pages
+
+    def free_row(self, row: int) -> None:
+        """Return ``row``'s pages to the pool; its table goes to trash."""
+        self.free.extend(self.owned.pop(row, []))
+        self.table[row, :] = 0
+
+    def grown_geometry(self, n_positions: int) -> Tuple[int, int]:
+        """(pool_pages, max_pages) after pow2 growth that fits an
+        allocation of ``n_positions`` more positions."""
+        need = self.pages_for(n_positions)
+        max_pages = self.max_pages
+        while need > max_pages:
+            max_pages *= 2
+        pool = self.pool_pages
+        while need > pool - 1 - (self.pool_pages - 1 - len(self.free)):
+            pool *= 2
+        return pool, max_pages
+
+    def grow(self, pool_pages: int, max_pages: int) -> None:
+        """Adopt a grown geometry (pool/table already padded by
+        :func:`grow_cache_pages` on the device side)."""
+        import numpy as np
+        assert pool_pages >= self.pool_pages and max_pages >= self.max_pages
+        self.free.extend(range(self.pool_pages, pool_pages))
+        self.table = np.pad(self.table,
+                            ((0, 0), (0, max_pages - self.max_pages)))
+        self.pool_pages, self.max_pages = pool_pages, max_pages
+
+
+def grow_cache_pages(cache: dict, pool_pages: int, max_pages: int) -> dict:
+    """Pad a paged cache to a larger pool / logical capacity.
+
+    Pool leaves pad along the physical-page axis, the block table along
+    the logical-page axis (new entries point at trash page 0).  Dense
+    leaves inside the paged cache (SWA rings, recurrent states, lengths)
+    are untouched — their per-row footprint is position-count independent.
+    A growth changes leaf SHAPES, so the next round/admit call retraces:
+    that is the amortized price of not sizing ``max_seq`` for the
+    worst-case request up front.
+    """
+    if cache.get("pages") is None:
+        raise ValueError("grow_cache_pages: not a paged cache")
+
+    def grow_slot(slot):
+        out = dict(slot)
+        for paged_key, _ in _PAGED_LEAF_PAIRS:
+            if paged_key in slot:
+                leaf = slot[paged_key]
+                extra = pool_pages - leaf.shape[1]
+                if extra:
+                    pad = [(0, 0)] * leaf.ndim
+                    pad[1] = (0, extra)
+                    out[paged_key] = jnp.pad(leaf, pad)
+        return out
+
+    table = cache["pages"]["table"]
+    extra_lp = max_pages - table.shape[1]
+    if extra_lp:
+        table = jnp.pad(table, ((0, 0), (0, extra_lp)))
+    return dict(cache, layers=[grow_slot(s) for s in cache["layers"]],
+                pages=dict(cache["pages"], table=table))
+
+
+def grow_cache_seq(cache: dict, cfg: ModelConfig, new_max_seq: int) -> dict:
+    """Pad a DENSE cache's sequence axis to ``new_max_seq``.
+
+    The draft-side companion of :func:`grow_cache_pages`: when a paged
+    target session grows its logical capacity, the (cheap, dense) proposer
+    caches must be able to address the same positions.  Full-attention K/V
+    and MLA latents pad along axis 2 (leading period, batch axes);
+    recurrent states and lengths have no sequence axis.  SWA rings only
+    match if the window already fit the old capacity (a ring resize would
+    remap ``pos % w`` slots of live data — unsupported, fail loudly).
+    """
+    from repro.models.attention import SWA_RING_PAD
+
+    def grow_slot(slot, kind):
+        if kind not in ATTN_KINDS:
+            return slot
+        if kind == "swa":
+            w_new = min(cfg.sliding_window + SWA_RING_PAD, new_max_seq)
+            if slot["k"].shape[2] != w_new:
+                raise NotImplementedError(
+                    "grow_cache_seq: SWA ring resize would remap live "
+                    "slots; size the stream so capacity >= window + pad")
+            return slot
+        out = {}
+        for k, leaf in slot.items():
+            extra = new_max_seq - leaf.shape[2]
+            if extra > 0:
+                pad = [(0, 0)] * leaf.ndim
+                pad[2] = (0, extra)
+                leaf = jnp.pad(leaf, pad)
+            out[k] = leaf
+        return out
+
+    layers = [grow_slot(s, kind)
+              for s, kind in zip(cache["layers"], cfg.layer_pattern)]
+    return dict(cache, layers=layers)
+
+
+def _page_table(cache: dict) -> Optional[jnp.ndarray]:
+    pages = cache.get("pages")
+    return None if pages is None else pages["table"]
 
 
 def sinusoidal_at(positions: jnp.ndarray, d_model: int) -> jnp.ndarray:
@@ -213,13 +449,31 @@ class Model:
         return self._head(params, x), metrics
 
     # ----------------------------------------------------------------- cache
-    def init_cache(self, batch: int, max_seq: int) -> dict:
+    def init_cache(self, batch: int, max_seq: int, *, paged: bool = False,
+                   page_size: int = 64,
+                   pool_pages: Optional[int] = None) -> dict:
+        """Allocate a decode cache.
+
+        Dense (default): every attention slot holds (B, max_seq) K/V.
+        ``paged=True``: full-attn/MLA slots share a physical page pool of
+        ``pool_pages`` pages of ``page_size`` positions (default: enough
+        for every row at ``max_seq``, plus the trash page), addressed
+        through ``cache["pages"]["table"]`` (B, ceil(max_seq/page_size)).
+        ``max_seq`` becomes the LOGICAL capacity — growable later via
+        :func:`grow_cache_pages` without resizing any row.
+        """
         cfg = self.cfg
         dt = _dtype(cfg)
         cache: Dict[str, Any] = {
-            "layers": tfm.make_stack_cache(cfg, batch, max_seq, dt),
+            "layers": tfm.make_stack_cache(cfg, batch, max_seq, dt,
+                                           paged=paged, page_size=page_size,
+                                           pool_pages=pool_pages),
             "lengths": jnp.zeros((batch,), jnp.int32),
         }
+        if paged:
+            max_pages = -(-max_seq // page_size)
+            cache["pages"] = {
+                "table": jnp.zeros((batch, max_pages), jnp.int32)}
         return cache
 
     # --------------------------------------------------------------- prefill
@@ -270,7 +524,7 @@ class Model:
             params["layers"], cfg, x, positions, cache["layers"],
             mode="prefill", dispatch=self.moe_dispatch, want_metrics=False,
             use_flash=self.use_flash, remat=self.remat, cross_kvs=cross_kvs,
-            mrope_positions=mrope_positions)
+            mrope_positions=mrope_positions, page_table=_page_table(cache))
         # head only at each sequence's last prompt position — never (B,T,V)
         last_h = jnp.take_along_axis(
             x, (lengths - 1)[:, None, None].astype(jnp.int32), axis=1)
@@ -296,7 +550,8 @@ class Model:
             params["layers"], cfg, x, positions, cache["layers"],
             mode="extend", collect=collect, dispatch=self.moe_dispatch,
             want_metrics=False, use_flash=self.use_flash,
-            cross_kvs=cache.get("cross"), prefetch_masks=prefetch_masks)
+            cross_kvs=cache.get("cross"), prefetch_masks=prefetch_masks,
+            page_table=_page_table(cache))
         logits = self._head(params, x)                           # (B, T, V)
         return logits, x, dict(cache, layers=new_layers), metrics
 

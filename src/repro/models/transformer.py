@@ -55,9 +55,13 @@ def init_block(key, cfg, kind: str, is_moe: bool, dtype, cross: bool = False) ->
     return p
 
 
-def make_block_cache(cfg, kind: str, batch: int, max_seq: int, dtype) -> dict:
+def make_block_cache(cfg, kind: str, batch: int, max_seq: int, dtype, *,
+                     paged: bool = False, page_size: int = 64,
+                     pool_pages: Optional[int] = None) -> dict:
     if kind in ATTN_KINDS:
-        return attn.make_attn_cache(cfg, batch, max_seq, kind, dtype)
+        return attn.make_attn_cache(cfg, batch, max_seq, kind, dtype,
+                                    paged=paged, page_size=page_size,
+                                    pool_pages=pool_pages)
     return ssm_mod.MAKE_STATE[kind](cfg, batch, dtype)
 
 
@@ -79,16 +83,18 @@ def block_forward(
     cross_kv: Optional[dict] = None,
     mrope_positions=None,
     prefetch_mask: Optional[jnp.ndarray] = None,
+    page_table: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, Optional[dict], dict]:
     h = apply_norm(params["norm1"], x, cfg.norm_eps)
     if kind in ("attn", "swa"):
         out, new_cache = attn.gqa_forward(
             params["mixer"], cfg, h, positions, kind=kind, cache=cache,
             mode=mode, mrope_positions=mrope_positions, use_flash=use_flash,
-            causal=causal)
+            causal=causal, page_table=page_table)
     elif kind == "mla":
         out, new_cache = attn.mla_forward(
-            params["mixer"], cfg, h, positions, cache=cache, mode=mode)
+            params["mixer"], cfg, h, positions, cache=cache, mode=mode,
+            page_table=page_table)
     else:
         state = cache if cache is not None else ssm_mod.MAKE_STATE[kind](
             cfg, x.shape[0], x.dtype)
@@ -147,11 +153,16 @@ def init_stack(key, cfg, dtype, cross: bool = False) -> List[dict]:
     return out
 
 
-def make_stack_cache(cfg, batch: int, max_seq: int, dtype) -> List[dict]:
+def make_stack_cache(cfg, batch: int, max_seq: int, dtype, *,
+                     paged: bool = False, page_size: int = 64,
+                     pool_pages: Optional[int] = None) -> List[dict]:
     P = cfg.num_periods
+    if paged and pool_pages is None:
+        pool_pages = batch * (-(-max_seq // page_size)) + 1   # + trash page
     out = []
     for kind in cfg.layer_pattern:
-        c = make_block_cache(cfg, kind, batch, max_seq, dtype)
+        c = make_block_cache(cfg, kind, batch, max_seq, dtype, paged=paged,
+                             page_size=page_size, pool_pages=pool_pages)
         out.append(jax.tree.map(lambda a: jnp.broadcast_to(a, (P,) + a.shape), c))
     return out
 
@@ -173,6 +184,7 @@ def stack_forward(
     cross_kvs: Optional[List[dict]] = None,
     mrope_positions=None,
     prefetch_masks: Optional[List[jnp.ndarray]] = None,
+    page_table: Optional[jnp.ndarray] = None,
 ) -> Tuple[jnp.ndarray, Optional[List[dict]], dict]:
     """Run the full stack.  caches/cross_kvs leaves carry leading (P, ...).
 
@@ -183,6 +195,10 @@ def stack_forward(
     predicted-hot expert masks (models/moe.PrefetchPlan.masks); when given,
     the returned metrics include ``prefetch_hits/actual/predicted`` counts
     summed over all MoE layers.
+
+    ``page_table`` (optional) is the (B, max_pages) logical→physical block
+    table of a paged cache (models/model.py) — shared by every paged
+    attention slot, carried as a scan closure constant.
     """
 
     def make_block(i, kind, is_moe):
@@ -191,7 +207,8 @@ def stack_forward(
                 lp_i, cfg, kind, is_moe, h, positions, lc_i,
                 mode=mode, collect=collect, causal=causal, dispatch=dispatch,
                 want_metrics=want_metrics, use_flash=use_flash, cross_kv=lx_i,
-                mrope_positions=mrope_positions, prefetch_mask=lm_i)
+                mrope_positions=mrope_positions, prefetch_mask=lm_i,
+                page_table=page_table)
         # per-LAYER rematerialization: checkpointing the whole period keeps
         # every layer's FFN/attention intermediates live during the period's
         # backward (107 GB/device on jamba train_4k — §Perf C4); per-layer

@@ -69,7 +69,7 @@ class Request:
     submitted_at: float = field(default_factory=time.perf_counter)
     finished_at: Optional[float] = None
     sampling: Optional[SamplingParams] = None
-    finish_reason: Optional[str] = None  # "length" | "eos" once finished
+    finish_reason: Optional[str] = None  # "length" | "eos" | "rejected"
     arrival_round: int = 0               # continuous mode: visible from here
 
 
@@ -170,10 +170,44 @@ class ServingEngine:
         bucket_batches: bool = True,
         scheduler: str = "wave",            # "wave" | "continuous"
         eos_id: Optional[int] = None,       # early-exit token (both modes)
+        kv_layout: str = "dense",           # "dense" | "paged" (continuous)
+        page_size: int = 64,                # paged: positions per KV page
+        prefill_chunk: Optional[int] = None,  # continuous: chunked prefill
+        admit_mode: str = "sliced",         # "sliced" | "full" (legacy)
     ):
         if scheduler not in ("wave", "continuous"):
             raise ValueError(f"scheduler must be 'wave' or 'continuous', "
                              f"got {scheduler!r}")
+        if kv_layout not in ("dense", "paged"):
+            raise ValueError(f"kv_layout must be 'dense' or 'paged', "
+                             f"got {kv_layout!r}")
+        if admit_mode not in ("sliced", "full"):
+            raise ValueError(f"admit_mode must be 'sliced' or 'full', "
+                             f"got {admit_mode!r}")
+        if kv_layout == "paged":
+            if scheduler != "continuous":
+                raise ValueError("kv_layout='paged' is a continuous-serving "
+                                 "layout; wave decoding sizes caches per "
+                                 "wave already")
+            if admit_mode == "full":
+                raise ValueError("admit_mode='full' merges same-shape "
+                                 "caches and cannot address a paged pool; "
+                                 "use the sliced path with paged KV")
+        if prefill_chunk is not None:
+            if prefill_chunk < 1:
+                raise ValueError(f"prefill_chunk must be >= 1, got "
+                                 f"{prefill_chunk}")
+            if scheduler != "continuous":
+                raise ValueError("prefill_chunk interleaves with decode "
+                                 "rounds; it requires scheduler="
+                                 "'continuous'")
+            from repro.models.attention import SWA_RING_PAD
+            if (any(k == "swa" for k in target.cfg.layer_pattern)
+                    and prefill_chunk > SWA_RING_PAD + 1):
+                raise ValueError(
+                    f"prefill_chunk={prefill_chunk} > SWA_RING_PAD+1="
+                    f"{SWA_RING_PAD + 1}: a larger chunk evicts ring "
+                    "entries still inside earlier chunk queries' windows")
         self.proposer_kind = draft_kind if draft_kind is not None else proposer
         self.proposer_opts = dict(proposer_opts or {})
         self.target, self.draft = target, draft
@@ -187,6 +221,10 @@ class ServingEngine:
         self.bucket_batches = bucket_batches
         self.scheduler = scheduler
         self.eos_id = eos_id
+        self.kv_layout = kv_layout
+        self.page_size = page_size
+        self.prefill_chunk = prefill_chunk
+        self.admit_mode = admit_mode
         self.queue: Deque[Request] = deque()
         self.done: Dict[int, Request] = {}
         self.reports: List[WaveReport] = []
@@ -293,9 +331,17 @@ class ServingEngine:
             ``traces`` : list of (gamma, batch)
                 Every jit retrace the session performed; a wave that reuses
                 a compiled round adds nothing here.
-            ``admit_traces`` : list of (prompt_bucket, batch)
-                Every continuous-admission retrace; occupancy changes
-                within a bucket add nothing here (the admit mask is data).
+            ``admit_traces`` : list of (prompt_bucket, rows)
+                Every continuous-admission retrace.  Sliced admissions
+                key on the ADMITTED row bucket (rows << pool for typical
+                refills); the legacy full path keys on the pool.  Which
+                rows admit is data and adds nothing here.
+            ``chunk_traces`` : list of (stage, chunk, rows)
+                Chunked-prefill retraces ("first"/"mid"/"final" stage
+                functions, compiled once per shape).
+            ``growths`` : list of (new_max_seq, pool_pages)
+                Paged-session capacity growths (each one retrace, pow2-
+                amortized).
             ``prefetch`` : dict
                 Session-lifetime expert-warmup aggregates ``{"hits",
                 "actual", "predicted", "rounds", "hit_rate"}`` summed over
@@ -310,6 +356,8 @@ class ServingEngine:
                 "gammas_compiled": sess.compiled_gammas(),
                 "traces": list(sess.trace_log),
                 "admit_traces": list(sess.admit_trace_log),
+                "chunk_traces": list(sess.chunk_trace_log),
+                "growths": list(sess.growth_log),
                 "prefetch": totals,
             }
         return out

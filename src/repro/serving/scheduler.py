@@ -7,15 +7,26 @@ completes, and {use_sd, gamma} is planned once per wave.  This module
 *operates* it:
 
   * a fixed pool of ``max_batch`` KV-cache slots is decoded round-by-round
-    through the session API (core/spec_decode.SDEngine.start/round/admit),
+    through the session API (core/spec_decode.SDEngine.start/round/
+    admit_rows),
   * a slot RETIRES the moment its request finishes (per-slot
     ``max_new_tokens``, optional ``eos_id`` early exit) — its row goes
     inactive via the round's ``active`` mask, which is data, so occupancy
     changes never retrace,
   * freed slots are REFILLED between rounds: queued requests (visible from
     their ``arrival_round`` on, so Poisson traces replay exactly) prefill
-    into the retired rows via ``SDEngine.admit`` — a masked prefill into
-    the existing cache, zero retraces within a (batch, prompt-bucket),
+    into the retired rows via ``SDEngine.admit_rows`` — a ROW-SLICED
+    prefill whose cost scales with the admitted rows at their own
+    per-admission prompt bucket, not the pool at a stream-global bucket,
+  * long prompts optionally prefill in fixed-size CHUNKS
+    (``prefill_chunk``), one chunk per round boundary, so a single long
+    admission no longer stalls the round it lands in,
+  * with ``kv_layout="paged"`` the target cache is block-table paged
+    (models/model.py): per-row page lists from a growable pool, so
+    ``max_seq`` is only an initial logical capacity — a late-submitted
+    long request GROWS the session instead of raising.  Dense streams
+    instead REJECT the oversize request (``finish_reason="rejected"``)
+    and keep serving,
   * every round consults ``AutoTuner.plan()`` on the LIVE slot count: as
     occupancy decays out of the speedup window the stream hands off SD→AR
     mid-flight (a gamma=0 round in the SAME session — no session switch,
@@ -25,7 +36,9 @@ completes, and {use_sd, gamma} is planned once per wave.  This module
 Per-round ``StepReport``s aggregate into the engine's existing
 ``WaveReport`` / ``session_stats()`` surfaces; the occupancy trajectory
 they carry feeds the decay-aware predicted-vs-measured comparison in
-core/analytics.py (``occupancy_timeline`` / ``predicted_decay_speedup``).
+core/analytics.py, and their ``admit_rows``/``admit_tokens`` fields feed
+the admission-work accounting (``core/analytics.admission_work``,
+``benchmarks/admission_sweep.py``).
 
 This mirrors in-flight batching in TensorRT-LLM / continuous batching in
 vLLM at round granularity: admission is batched at round boundaries (not
@@ -35,14 +48,15 @@ tokens per slot.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace as dc_replace
 from typing import TYPE_CHECKING, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.spec_decode import SDStats, SessionState
+from repro.core.spec_decode import PendingAdmission, SDStats, SessionState
 from repro.data.tokenizer import PAD
+from repro.models.model import PageAllocator
 from repro.serving.engine import WaveReport, _pow2_at_least
 
 if TYPE_CHECKING:                                    # avoid runtime cycle
@@ -99,7 +113,10 @@ class StepReport:
     ``live`` is the active-slot count the round decoded (the N(t) the
     tuner planned on), ``committed`` the tokens credited to requests this
     round (budget/eos truncation applied), ``admitted``/``retired`` the
-    slot churn at this round's boundary.
+    slot churn at this round's boundary.  ``admit_rows``/``admit_tokens``
+    are the rows and row-tokens the boundary's admission prefills actually
+    processed (chunked-prefill chunk steps included) — the work the sliced
+    path keeps ∝ what was admitted.
     """
     round_index: int
     live: int
@@ -109,61 +126,167 @@ class StepReport:
     admitted: int
     retired: int
     round_time: float
+    admit_rows: int = 0
+    admit_tokens: int = 0
+
+
+@dataclass
+class _Chunking:
+    """A slot reserved by an in-flight chunked admission."""
+    slot: SlotState
+    request: "Request"
+    pa: PendingAdmission
 
 
 class ContinuousScheduler:
     """Round-level slot scheduler over one persistent decoding session.
 
-    Owns the slot pool and the round loop; the engine supplies sessions,
-    tuner, PRNG splits, and the request queue.  One ``run_stream()`` call
-    drains the queue (idling through rounds where every admissible request
-    is still in flight or yet to arrive) and returns an aggregated
-    ``WaveReport`` with per-round ``StepReport``s in ``.steps``.
+    Owns the slot pool, the round loop and the admission policy (sliced /
+    full, chunked prefill, paged growth); the engine supplies sessions,
+    tuner, PRNG splits, layout knobs and the request queue.  One
+    ``run_stream()`` call drains the queue (idling through rounds where
+    every admissible request is still in flight or yet to arrive) and
+    returns an aggregated ``WaveReport`` with per-round ``StepReport``s in
+    ``.steps``.
     """
 
     def __init__(self, engine: "ServingEngine", *,
                  slots: Optional[int] = None):
         self.engine = engine
         self.pool = slots if slots is not None else engine.max_batch
-        self._bucket_t = 1
+        self._alloc: Optional[PageAllocator] = None
 
     # ------------------------------------------------------------- admission
     def _admissible(self, round_idx: int) -> bool:
         q = self.engine.queue
         return bool(q) and q[0].arrival_round <= round_idx
 
-    def _admit_rows(self, sess, state: Optional[SessionState],
-                    batch_in: List[Tuple[SlotState, "Request"]],
-                    max_seq: int) -> SessionState:
-        """Prefill ``batch_in`` requests into their slots.
+    def _need(self, r: "Request") -> int:
+        """Cache positions request ``r`` can touch over its lifetime."""
+        return len(r.prompt) + r.max_new_tokens + self._g_max + 2
 
-        First call opens the session (``start`` over the full pool, filler
-        rows inactive); later calls are masked prefills into retired rows
-        (``admit``) — the existing cache rows of in-flight slots are
-        untouched and the admit mask is data, so refills within a
-        (pool, prompt-bucket) shape never retrace.
-        """
+    def _bucket(self, n: int) -> int:
+        return _pow2_at_least(n) if self.engine.bucket_batches else n
+
+    def _swa_capacity_floor(self) -> int:
+        """Minimum paged logical capacity so every SWA ring allocates at
+        its FULL width (window + pad) from round 0.  Rings are dense and
+        bounded — sizing them below full width only saves memory when the
+        stream never grows, and a growth cannot resize a live ring
+        (``pos % w`` would remap entries), so a paged session must never
+        start below this."""
+        from repro.models.attention import SWA_RING_PAD
+        floor = 0
+        for m in (self.engine.target, self.engine.draft):
+            cfg = getattr(m, "cfg", None)
+            if cfg is not None and any(
+                    k == "swa" for k in getattr(cfg, "layer_pattern", ())):
+                floor = max(floor, cfg.sliding_window + SWA_RING_PAD)
+        return floor
+
+    def _open_session(self, sess, max_seq: int) -> SessionState:
+        """Open the pool with 1-token fillers; every REAL request then
+        enters through the (sliced/chunked) admission path, so admission
+        cost is accounted uniformly and the prompt bucket is always
+        per-admission."""
         eng = self.engine
         B = self.pool
+        toks = np.full((B, 1), PAD, np.int32)
+        cache_opts, table = None, None
+        if self._alloc is not None:
+            cache_opts = {"paged": True, "page_size": eng.page_size,
+                          "pool_pages": self._alloc.pool_pages}
+            table = self._alloc.table
+        params_d = None if eng.proposer_kind == "none" else eng.params_d
+        return sess.start(eng.params_t, params_d, jnp.asarray(toks),
+                          max_seq=max_seq,
+                          lengths=jnp.ones((B,), jnp.int32),
+                          key=eng._next_key(), cache_opts=cache_opts,
+                          page_table=table)
+
+    def _sync_table(self, state: SessionState) -> SessionState:
+        """Push the allocator's (host) block table into the session —
+        an input-array swap, never a retrace."""
+        pages = dict(state.t_cache["pages"],
+                     table=jnp.asarray(self._alloc.table))
+        return dc_replace(state, t_cache=dict(state.t_cache, pages=pages))
+
+    def _ensure_capacity(self, sess, state: SessionState, r: "Request",
+                         chunking: List["_Chunking"]) -> SessionState:
+        """Paged: make the session able to hold ``r`` — grow the logical
+        capacity and/or the physical pool (pow2) if it cannot.  In-flight
+        chunked admissions' compact caches are padded along, so their
+        final scatter still matches the grown session."""
+        from repro.models.model import grow_cache_seq
+        need = self._need(r)
+        alloc = self._alloc
+        if need > state.max_seq or not alloc.can_alloc(need):
+            pool_pages, max_pages = alloc.grown_geometry(need)
+            new_cap = max_pages * alloc.page_size
+            state = sess.grow_session(state, new_cap,
+                                      pool_pages=pool_pages,
+                                      max_pages=max_pages)
+            alloc.grow(pool_pages, max_pages)
+            state = self._sync_table(state)
+            for c in chunking:
+                if c.pa.t_cache is not None:
+                    c.pa = dc_replace(c.pa, t_cache=grow_cache_seq(
+                        c.pa.t_cache, self.engine.target.cfg, new_cap))
+        return state
+
+    def _reject(self, r: "Request") -> None:
+        """Refuse one request without killing the stream (dense layout:
+        the cache was sized at stream start and cannot hold it)."""
+        r.output = np.zeros((0,), np.int32)
+        r.finish_reason = "rejected"
+        r.finished_at = time.perf_counter()
+        self.engine.done[r.uid] = r
+        self._finished.append(r)
+
+    def _admit_batch(self, sess, state: SessionState,
+                     batch_in: List[Tuple[SlotState, "Request"]]
+                     ) -> Tuple[SessionState, int, int]:
+        """One admission prefill for this round's refills.
+
+        Sliced (default): only the admitted rows, at a prompt bucket
+        computed FRESH from this batch (no stream-lifetime ratchet), row-
+        count bucketed pow2 with padding lanes replicated round-robin and
+        dropped from the scatter.  Full (legacy, kept for the admission
+        benchmark's old-vs-sliced comparison): the whole pool is prefilled
+        and non-admitted rows discarded via the admit mask.
+
+        Returns ``(state, prefill_rows, prefill_tokens)`` — the work the
+        call actually dispatched.
+        """
+        eng = self.engine
         t_new = max(len(r.prompt) for _, r in batch_in)
-        if eng.bucket_batches:
-            self._bucket_t = max(self._bucket_t, _pow2_at_least(t_new))
-        else:
-            self._bucket_t = max(self._bucket_t, t_new)
-        toks = np.full((B, self._bucket_t), PAD, np.int32)
-        lengths = np.ones((B,), np.int32)     # fillers: 1 (prefill-safe)
-        mask = np.zeros((B,), bool)
-        for s, r in batch_in:
-            toks[s.index, : len(r.prompt)] = r.prompt
-            lengths[s.index] = len(r.prompt)
-            mask[s.index] = True
-        key = eng._next_key()
-        if state is None:
-            params_d = None if eng.proposer_kind == "none" else eng.params_d
-            return sess.start(eng.params_t, params_d, jnp.asarray(toks),
-                              max_seq=max_seq,
-                              lengths=jnp.asarray(lengths), key=key)
-        return sess.admit(state, toks, lengths, mask, key=key)
+        Tp = self._bucket(t_new)
+        key = eng._next_key()                 # one fresh key per admission
+        if eng.admit_mode == "full":
+            B = self.pool
+            toks = np.full((B, Tp), PAD, np.int32)
+            lengths = np.ones((B,), np.int32)
+            mask = np.zeros((B,), bool)
+            for s, r in batch_in:
+                toks[s.index, : len(r.prompt)] = r.prompt
+                lengths[s.index] = len(r.prompt)
+                mask[s.index] = True
+            state = sess.admit(state, toks, lengths, mask, key=key)
+            return state, B, B * Tp
+        R = min(self._bucket(len(batch_in)), self.pool)
+        toks = np.full((R, Tp), PAD, np.int32)
+        lengths = np.ones((R,), np.int32)
+        rows = np.zeros((R,), np.int32)
+        valid = np.zeros((R,), bool)
+        for i in range(R):
+            s, r = batch_in[i % len(batch_in)]     # pad lanes replicate
+            toks[i, : len(r.prompt)] = r.prompt
+            lengths[i] = len(r.prompt)
+            rows[i] = s.index
+            valid[i] = i < len(batch_in)
+        state = sess.admit_rows(state, toks, lengths, rows, valid=valid,
+                                key=key)
+        return state, R, R * Tp
 
     # ------------------------------------------------------------ completion
     def _append(self, slot: SlotState, tokens: List[int]) -> int:
@@ -198,17 +321,21 @@ class ContinuousScheduler:
         slot.request = None
         slot.active = False
         slot.tokens = []
+        self._retired_rows.append(slot.index)
 
     # ------------------------------------------------------------------ loop
     def run_stream(self) -> Optional[WaveReport]:
         """Serve the queued stream to completion; one aggregated report.
 
-        The loop per round: (1) retire/refill — admit every admissible
-        request into free slots with one masked prefill; (2) re-plan —
-        ``tuner.plan(live)`` on the live slot count, SD→AR handoff via
-        gamma=0 when the plan says so; (3) decode one SD round with the
-        active mask; (4) credit tokens per slot, applying per-slot budgets
-        and eos.  Returns ``None`` on an empty queue.
+        The loop per round: (1) advance every in-flight chunked admission
+        by one chunk (landed ones activate their slot); (2) retire/refill
+        — admit every admissible request into free slots with one sliced
+        prefill, rejecting (dense) or growing for (paged) requests the
+        stream wasn't sized for; (3) re-plan — ``tuner.plan(live)`` on the
+        live slot count, SD→AR handoff via gamma=0 when the plan says so;
+        (4) decode one SD round with the active mask; (5) credit tokens
+        per slot, applying per-slot budgets and eos, freeing pages of
+        retired rows.  Returns ``None`` on an empty queue.
         """
         eng = self.engine
         if not eng.queue:
@@ -216,63 +343,121 @@ class ContinuousScheduler:
         kind = eng.proposer_kind
         sess = eng._session(kind)
         pending = list(eng.queue)
-        # static sizing for the whole stream: the cache must hold the
-        # longest admitted request under the largest plannable gamma
+        # the cache must hold every plannable gamma's verify overshoot
         g_cands = [eng.gamma]
         if eng.tuner is not None:
             g_cands += [int(g) for g in getattr(eng.tuner, "gammas", ())]
-        g_max = max(g_cands)
-        t_max = max(len(r.prompt) for r in pending)
-        self._bucket_t = _pow2_at_least(t_max) if eng.bucket_batches else t_max
-        max_seq = self._bucket_t + max(r.max_new_tokens for r in pending) \
-            + g_max + 2
-        if eng.bucket_batches:
-            max_seq = _pow2_at_least(max_seq)
+        self._g_max = g_max = max(g_cands)
+
+        paged = eng.kv_layout == "paged"
+        if paged:
+            ps = eng.page_size
+            # logical capacity sized on what is VISIBLE at round 0 only —
+            # later arrivals grow the session instead of inflating it now
+            visible = [r for r in pending if r.arrival_round <= 0] \
+                or pending[:1]
+            cap = max(self._bucket(max(self._need(r) for r in visible)),
+                      self._swa_capacity_floor())
+            max_seq = -(-cap // ps) * ps
+            pool_pages = 1 + sum(-(-self._need(r) // ps)
+                                 for r in visible[: self.pool])
+            self._alloc = PageAllocator(self.pool, ps,
+                                        _pow2_at_least(pool_pages),
+                                        max_seq // ps)
+        else:
+            # static sizing for the whole stream: the cache must hold the
+            # longest KNOWN request; a later over-long submit is rejected
+            # (finish_reason="rejected"), never fatal
+            self._alloc = None
+            max_seq = self._bucket(max(len(r.prompt) for r in pending)) \
+                + max(r.max_new_tokens for r in pending) + g_max + 2
+            if eng.bucket_batches:
+                max_seq = _pow2_at_least(max_seq)
 
         slots = [SlotState(i) for i in range(self.pool)]
-        state: Optional[SessionState] = None
+        state = self._open_session(sess, max_seq)
         stats = SDStats()
         steps: List[StepReport] = []
         self._finished: List["Request"] = []
+        self._retired_rows: List[int] = []
+        chunking: List[_Chunking] = []
         used_sd_any = False
         first_gamma: Optional[int] = None
         round_idx = 0
         t_start = time.perf_counter()
         while True:
-            # ---- admit: one masked prefill covers every refill this round
-            free = [s for s in slots if not s.active]
+            admit_credited, landed, n_retired = 0, [], 0
+            admit_rows_n, admit_tokens = 0, 0
+            # ---- advance chunked admissions: one chunk per round boundary
+            for c in list(chunking):
+                R, C = c.pa.prompts.shape[0], c.pa.chunk
+                state, pa = sess.admit_chunk(state, c.pa)
+                admit_rows_n += R
+                admit_tokens += R * min(C, c.pa.remaining)
+                if pa is None:
+                    chunking.remove(c)
+                    landed.append((c.slot, c.request))
+                else:
+                    c.pa = pa
+            # ---- admit: one sliced prefill covers every refill this round
+            # (slots whose chunked admission just landed activate below —
+            # reserve them so the refill loop can't double-admit the row)
+            reserved = {c.slot.index for c in chunking} \
+                | {s.index for s, _ in landed}
+            free = [s for s in slots
+                    if not s.active and s.index not in reserved]
             batch_in: List[Tuple[SlotState, "Request"]] = []
+            table_dirty = False
             while free and self._admissible(round_idx):
                 r = eng.queue.popleft()
-                need = len(r.prompt) + r.max_new_tokens + g_max + 2
-                if need > max_seq:
-                    raise ValueError(
-                        f"request uid={r.uid} needs {need} cache slots > "
-                        f"stream max_seq={max_seq} (sized at stream start); "
-                        "submit before run() so sizing can see it")
-                batch_in.append((free.pop(0), r))
-            admit_credited = 0
+                if not paged and self._need(r) > max_seq:
+                    self._reject(r)
+                    continue
+                if paged:
+                    state = self._ensure_capacity(sess, state, r, chunking)
+                    self._alloc.alloc(free[0].index, self._need(r))
+                    table_dirty = True
+                s = free.pop(0)
+                if eng.prefill_chunk and len(r.prompt) > eng.prefill_chunk:
+                    chunking.append(_Chunking(s, r, sess.begin_admit_chunked(
+                        np.asarray(r.prompt)[None, :],
+                        np.array([len(r.prompt)], np.int32),
+                        np.array([s.index], np.int32),
+                        chunk=eng.prefill_chunk, key=eng._next_key())))
+                    continue
+                batch_in.append((s, r))
+            if table_dirty:
+                # one table upload covers every page assignment this round
+                # (nothing reads it before the admission prefill below)
+                state = self._sync_table(state)
             if batch_in:
-                state = self._admit_rows(sess, state, batch_in, max_seq)
+                state, rows_n, toks_n = self._admit_batch(sess, state,
+                                                          batch_in)
+                admit_rows_n += rows_n
+                admit_tokens += toks_n
+                landed.extend(batch_in)
+            if landed:
                 first = np.asarray(state.last_token)
-                for s, r in batch_in:
+                for s, r in landed:
                     s.request, s.active = r, True
                     s.n_out, s.tokens = 0, []
                     # the admission prefill's sample is the first token
                     admit_credited += self._append(s, [int(first[s.index])])
-            n_retired = sum(1 for s, r in batch_in if not s.active)
+            n_retired = sum(1 for s, r in landed if not s.active)
 
             active_mask = np.array([s.active for s in slots], bool)
             live = int(active_mask.sum())
             if live == 0:
-                if batch_in:
+                if landed or admit_rows_n:
                     # every admitted slot finished on its prefill token
-                    # (1-token budgets / instant eos): record the churn so
-                    # steps never undercount admitted/retired/committed
+                    # (1-token budgets / instant eos) or only chunk work
+                    # ran: record the churn so steps never undercount
                     steps.append(StepReport(round_idx, 0, 0, False,
-                                            admit_credited, len(batch_in),
-                                            n_retired, 0.0))
-                if not eng.queue:
+                                            admit_credited, len(landed),
+                                            n_retired, 0.0, admit_rows_n,
+                                            admit_tokens))
+                self._free_retired()
+                if not eng.queue and not chunking:
                     break
                 round_idx += 1                  # idle: awaiting arrivals
                 continue
@@ -289,9 +474,9 @@ class ContinuousScheduler:
             if not use_sd:
                 gamma = 0                       # in-session SD→AR handoff
             if gamma > g_max:
-                # max_seq was sized for g_max at stream start; a larger
-                # gamma would scatter verify KV past the cache, which JAX
-                # clamps SILENTLY — fail loudly instead
+                # the cache margin was sized for g_max at stream start; a
+                # larger gamma would scatter verify KV past the allocated
+                # pages/rows, which JAX clamps SILENTLY — fail loudly
                 raise ValueError(
                     f"tuner planned gamma={gamma} > g_max={g_max} the "
                     "stream was sized for; expose the tuner's range via a "
@@ -312,6 +497,7 @@ class ContinuousScheduler:
                 credited += self._append(s, list(res.committed[s.index, :n]))
                 if not s.active:
                     n_retired += 1
+            self._free_retired()
 
             # live-weighted accounting: retired rows' masked lanes commit
             # nothing, so sigma/alpha describe the work actually requested
@@ -321,8 +507,9 @@ class ContinuousScheduler:
                     float(res.n_accept.sum()) / (res.width * live))
             steps.append(StepReport(round_idx, live, gamma, use_sd,
                                     admit_credited + credited,
-                                    len(batch_in), n_retired,
-                                    res.round_time))
+                                    len(landed), n_retired,
+                                    res.round_time, admit_rows_n,
+                                    admit_tokens))
             round_idx += 1
 
         sess.accumulate_prefetch_totals(stats)
@@ -335,3 +522,12 @@ class ContinuousScheduler:
             tokens_out=n_tokens, proposer=kind, bucket=self.pool,
             moe_dispatch=eng.moe_dispatch, scheduler="continuous",
             steps=steps)
+
+    def _free_retired(self) -> None:
+        """Return retired rows' pages to the pool (paged layout)."""
+        if self._alloc is None:
+            self._retired_rows.clear()
+            return
+        for row in self._retired_rows:
+            self._alloc.free_row(row)
+        self._retired_rows.clear()

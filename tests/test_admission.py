@@ -1,0 +1,318 @@
+"""Row-sliced / chunked / paged admission: the pool-width-overhead fix.
+
+The contracts this PR adds on top of the continuous scheduler:
+  * work scaling — the sliced admission prefill is jit-keyed on
+    (admitted_rows, per-admission prompt-bucket), never on
+    (pool, stream-global bucket); the prompt bucket RESETS per refill
+    instead of ratcheting up for the stream's lifetime,
+  * robustness — a mid-stream request the stream wasn't sized for is
+    rejected (dense) or admitted via paged growth (kv_layout="paged"),
+    never a stream-killing ValueError,
+  * parity — chunked prefill ≡ one-shot prefill and paged ≡ dense caches
+    are greedy token-identical,
+  * determinism — every admission consumes its own PRNG split, so
+    identical streams replay exactly and identical prompts admitted in
+    different rounds never share sample streams.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.analytics import admission_work
+from repro.models.model import Model, merge_cache_rows, scatter_cache_rows
+from repro.serving.engine import ServingEngine
+
+pytestmark = pytest.mark.tier1
+
+TCFG = ModelConfig("ad-moe", "moe", 2, 128, 4, 2, 256, 512, num_experts=4,
+                   num_experts_per_tok=2, dtype="float32")
+DCFG = ModelConfig("ad-draft", "dense", 2, 64, 2, 2, 128, 512,
+                   dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def models():
+    t, d = Model(TCFG), Model(DCFG)
+    return t, d, t.init(jax.random.PRNGKey(0)), d.init(jax.random.PRNGKey(1))
+
+
+def _engine(t, d, pt, pd, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("gamma", 2)
+    kw.setdefault("force_sd", True)
+    kw.setdefault("scheduler", "continuous")
+    return ServingEngine(t, d, pt, pd, **kw)
+
+
+class _MidStreamSubmitter:
+    """Stub tuner that injects one LONG request while the stream runs —
+    the "late-submitted" case stream-start sizing cannot see."""
+
+    gammas = (2,)
+
+    def __init__(self, engine_ref, at_call=3, prompt_len=40):
+        self.engine_ref = engine_ref
+        self.at_call = at_call
+        self.prompt_len = prompt_len
+        self.calls = 0
+        self.uid = None
+
+    def plan(self, batch):
+        self.calls += 1
+        if self.calls == self.at_call and self.uid is None:
+            self.uid = self.engine_ref[0].submit(
+                np.arange(3, 3 + self.prompt_len), max_new_tokens=6)
+        return {"use_sd": True, "gamma": 2, "predicted_speedup": 2.0}
+
+    def update_alpha(self, alpha):
+        pass
+
+
+# ---------------------------------------------------------------- tentpole
+def test_sliced_admit_jit_keyed_on_admitted_rows(models):
+    """The sliced-admit jit signature is (admitted_rows, prompt-bucket):
+    a 1-row refill into a pool of 4 traces at rows=1, and the legacy full
+    path traces at rows=pool for the identical workload."""
+    t, d, pt, pd = models
+
+    def run(mode):
+        eng = _engine(t, d, pt, pd, max_batch=4, admit_mode=mode)
+        for m in (4, 10, 6, 8):
+            eng.submit(np.arange(3, 9), max_new_tokens=m)
+        eng.submit(np.arange(3, 9), max_new_tokens=4, arrival_round=4)
+        eng.run()
+        return eng, eng.session_stats()["model"]["admit_traces"]
+
+    eng, sliced = run("sliced")
+    assert len(eng.done) == 5
+    # initial 4-row fill + 1-row refills — never a (bucket, pool) entry
+    # for a 1-row refill
+    assert (8, 4) in sliced and (8, 1) in sliced
+    _, full = run("full")
+    assert all(r == 4 for _, r in full)        # legacy path: pool always
+    work = admission_work(sliced, pool=4, full_bucket=8)
+    assert work["sliced_tokens"] < work["full_tokens"]
+
+
+def test_admission_bucket_resets_per_refill(models):
+    """One long prompt must not ratchet the admission bucket for the whole
+    stream: later short refills prefill at their OWN (smaller) bucket."""
+    t, d, pt, pd = models
+    eng = _engine(t, d, pt, pd)
+    eng.submit(np.arange(3, 19), max_new_tokens=4)            # bucket 16
+    eng.submit(np.arange(3, 9), max_new_tokens=4)             # bucket 8
+    eng.submit(np.arange(3, 9), max_new_tokens=4, arrival_round=3)
+    eng.submit(np.arange(3, 9), max_new_tokens=4, arrival_round=5)
+    eng.run()
+    traces = eng.session_stats()["model"]["admit_traces"]
+    assert (16, 2) in traces                   # the mixed initial fill
+    assert (8, 1) in traces                    # refills came back DOWN
+    assert all(t <= 16 for t, _ in traces)
+
+
+def test_late_oversize_request_rejected_not_fatal(models):
+    """Dense stream: a mid-stream request exceeding the stream's sizing is
+    rejected with finish_reason="rejected"; everything else completes."""
+    t, d, pt, pd = models
+    ref = []
+    tuner = _MidStreamSubmitter(ref)
+    eng = ServingEngine(t, d, pt, pd, max_batch=2, gamma=2, tuner=tuner,
+                        force_sd=True, scheduler="continuous")
+    ref.append(eng)
+    uids = [eng.submit(np.arange(3, 9), max_new_tokens=8),
+            eng.submit(np.arange(3, 10), max_new_tokens=12)]
+    eng.run()
+    assert tuner.uid is not None
+    assert eng.done[tuner.uid].finish_reason == "rejected"
+    assert len(eng.done[tuner.uid].output) == 0
+    assert all(eng.done[u].finish_reason == "length" for u in uids)
+    assert all(len(eng.done[u].output) == m
+               for u, m in zip(uids, (8, 12)))
+
+
+def test_paged_session_grows_for_late_long_prompt(models):
+    """Paged stream: the same late long request is ADMITTED via pool/
+    capacity growth (logged), serves to completion, and the short
+    requests' outputs match the dense stream's token-for-token."""
+    t, d, pt, pd = models
+
+    def run(**kw):
+        ref = []
+        tuner = _MidStreamSubmitter(ref)
+        eng = ServingEngine(t, d, pt, pd, max_batch=2, gamma=2, tuner=tuner,
+                            force_sd=True, scheduler="continuous", **kw)
+        ref.append(eng)
+        uids = [eng.submit(np.arange(3, 9), max_new_tokens=8),
+                eng.submit(np.arange(3, 10), max_new_tokens=12)]
+        eng.run()
+        return eng, uids, tuner.uid
+
+    dense, d_uids, _ = run()
+    paged, p_uids, long_uid = run(kv_layout="paged", page_size=8)
+    assert paged.done[long_uid].finish_reason == "length"
+    assert len(paged.done[long_uid].output) == 6
+    assert paged.session_stats()["model"]["growths"]
+    for du, pu in zip(d_uids, p_uids):
+        np.testing.assert_array_equal(dense.done[du].output,
+                                      paged.done[pu].output)
+
+
+def test_chunked_prefill_matches_one_shot(models):
+    """Chunked prefill (here: 16-token prompts in 4-token chunks) is
+    greedy token-identical to the one-shot sliced admission."""
+    t, d, pt, pd = models
+    outs = {}
+    for chunk in (None, 4):
+        eng = _engine(t, d, pt, pd, prefill_chunk=chunk)
+        uids = [eng.submit(np.arange(3, 19), max_new_tokens=m)
+                for m in (6, 9, 5)]
+        (report,) = eng.run()
+        outs[chunk] = [eng.done[u].output for u in uids]
+        if chunk:
+            stats = eng.session_stats()["model"]
+            assert stats["chunk_traces"]       # the chunk path really ran
+            assert {s for s, _, _ in stats["chunk_traces"]} == \
+                {"first", "mid", "final"}
+    for a, b in zip(outs[None], outs[4]):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_paged_matches_dense_rounds(models):
+    """Paged ≡ dense round parity on a mixed-budget refill stream."""
+    t, d, pt, pd = models
+    outs = {}
+    for layout in ("dense", "paged"):
+        eng = _engine(t, d, pt, pd, kv_layout=layout, page_size=8)
+        uids = [eng.submit(np.arange(3, 9), max_new_tokens=m)
+                for m in (4, 12, 6, 9)]
+        eng.run()
+        outs[layout] = [eng.done[u].output for u in uids]
+    for a, b in zip(outs["dense"], outs["paged"]):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_eagle_proposer_sliced_admission(models):
+    """The sliced scatter covers every proposer: an eagle continuous
+    stream with refills matches its own wave decode."""
+    t, _, pt, _ = models
+    from repro.core.eagle import EagleHead
+    head = EagleHead(t)
+    ph = head.init(jax.random.PRNGKey(2))
+    outs = {}
+    for sched in ("wave", "continuous"):
+        eng = ServingEngine(t, head, pt, ph, max_batch=2, gamma=2,
+                            force_sd=True, proposer="eagle",
+                            scheduler=sched)
+        uids = [eng.submit(np.arange(3, 9), max_new_tokens=6)
+                for _ in range(2)]
+        eng.run()
+        outs[sched] = [eng.done[u].output for u in uids]
+    for a, b in zip(outs["wave"], outs["continuous"]):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_paged_growth_swa_target():
+    """SWA targets under paged KV: the logical capacity is floored at the
+    full ring width (window + pad), so a mid-stream growth never has to
+    resize a live ring — the late long request still admits and the short
+    requests match the dense stream."""
+    swa_cfg = ModelConfig("ad-swa", "dense", 2, 128, 4, 2, 256, 512,
+                          layer_pattern=("swa", "attn"), sliding_window=6,
+                          dtype="float32")
+    t, d = Model(swa_cfg), Model(DCFG)
+    pt, pd = t.init(jax.random.PRNGKey(0)), d.init(jax.random.PRNGKey(1))
+
+    def run(**kw):
+        ref = []
+        tuner = _MidStreamSubmitter(ref)
+        eng = ServingEngine(t, d, pt, pd, max_batch=2, gamma=2, tuner=tuner,
+                            force_sd=True, scheduler="continuous", **kw)
+        ref.append(eng)
+        uids = [eng.submit(np.arange(3, 9), max_new_tokens=8),
+                eng.submit(np.arange(3, 10), max_new_tokens=10)]
+        eng.run()
+        return eng, uids, tuner.uid
+
+    dense, d_uids, _ = run()
+    paged, p_uids, long_uid = run(kv_layout="paged", page_size=8)
+    assert paged.done[long_uid].finish_reason == "length"
+    assert len(paged.done[long_uid].output) == 6
+    assert paged.session_stats()["model"]["growths"]
+    for du, pu in zip(d_uids, p_uids):
+        np.testing.assert_array_equal(dense.done[du].output,
+                                      paged.done[pu].output)
+
+
+# ------------------------------------------------------------- determinism
+def test_admission_prng_deterministic_and_unshared(models):
+    """Sampled decoding: identical seeds replay the stream exactly, and
+    two IDENTICAL prompts admitted in different rounds draw different
+    sample streams (each admission consumes its own key split)."""
+    t, d, pt, pd = models
+
+    def serve(seed):
+        eng = _engine(t, d, pt, pd, max_batch=1, temperature=1.0,
+                      seed=seed)
+        uids = [eng.submit(np.arange(3, 9), max_new_tokens=8),
+                eng.submit(np.arange(3, 9), max_new_tokens=8,
+                           arrival_round=2)]
+        eng.run()
+        return [eng.done[u].output for u in uids]
+
+    a, b = serve(11), serve(11)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)    # replay is exact
+    # same prompt, different admission round → different stream
+    assert not np.array_equal(a[0], a[1])
+
+
+# ----------------------------------------------------------------- pricing
+def test_admission_work_and_pricing():
+    """analytics/perf_model price admission ∝ admitted tokens: sliced
+    shapes cost less than the pool-wide path, monotone in rows/tokens."""
+    shapes = [(8, 4), (8, 1), (8, 1), (8, 1)]
+    w = admission_work(shapes, pool=4, full_bucket=8)
+    assert w["admissions"] == 4
+    assert w["sliced_tokens"] == 8 * 7
+    assert w["full_tokens"] == 4 * 4 * 8
+    assert 0.0 < w["savings"] < 1.0
+    from repro.core.perf_model import SpeedupModel
+    p = np.array([1.0, 0.5, 2.0, 1.5, 0.1, 0.05, 0.01, 0.001, 0.5, 1.2])
+    m = SpeedupModel(params=p)
+    t_1 = float(m.admission_time(1, 8, 2, 8))
+    t_pool = float(m.admission_time(4, 8, 2, 8))
+    t_long = float(m.admission_time(1, 32, 2, 8))
+    assert t_1 < t_pool                        # rows monotone
+    assert t_1 < t_long                        # tokens monotone
+
+
+# -------------------------------------------------------------------- unit
+def test_scatter_cache_rows_matches_merge(models):
+    """scatter (compact fresh rows) ≡ merge (full-bucket fresh rows) on a
+    dense cache — the two admission primitives agree where both apply."""
+    t, _, pt, _ = models
+    B, R, max_seq = 4, 2, 32
+    toks_full = jnp.asarray(np.random.default_rng(0).integers(
+        3, 200, (B, 6)), jnp.int32)
+    lengths = jnp.full((B,), 6, jnp.int32)
+    live = t.init_cache(B, max_seq)
+    _, live = t.prefill(pt, toks_full, live, lengths=lengths)
+    fresh_full = t.init_cache(B, max_seq)
+    _, fresh_full = t.prefill(pt, toks_full + 1, fresh_full,
+                              lengths=lengths)
+    rows = np.array([1, 3])
+    mask = np.zeros((B,), bool)
+    mask[rows] = True
+    merged = merge_cache_rows(live, fresh_full, jnp.asarray(mask))
+    fresh_rows = t.init_cache(R, max_seq)
+    _, fresh_rows = t.prefill(pt, toks_full[rows] + 1, fresh_rows,
+                              lengths=lengths[rows])
+    scattered = scatter_cache_rows(live, fresh_rows, jnp.asarray(rows))
+    np.testing.assert_array_equal(np.asarray(merged["lengths"]),
+                                  np.asarray(scattered["lengths"]))
+    for lm, ls in zip(merged["layers"], scattered["layers"]):
+        for k in lm:
+            np.testing.assert_allclose(np.asarray(lm[k]),
+                                       np.asarray(ls[k]), rtol=0, atol=0)

@@ -102,7 +102,9 @@ def test_retire_refill_deterministic_under_split_keys(models):
 
 def test_no_retrace_when_occupancy_changes_within_bucket(models):
     """Retire/refill churn is data, not shape: a whole mixed-budget stream
-    compiles ONE round and ONE admission prefill."""
+    compiles ONE round and one admission prefill per (prompt-bucket,
+    admitted-rows) shape — the initial 2-row fill plus the 1-row refill,
+    reused for every later refill."""
     t, d, pt, pd = models
     eng = _engine(t, d, pt, pd, max_batch=2, scheduler="continuous")
     for m in (3, 7, 5, 4, 6):
@@ -112,7 +114,9 @@ def test_no_retrace_when_occupancy_changes_within_bucket(models):
     assert len(set(lives)) > 1                 # occupancy really changed
     stats = eng.session_stats()["model"]
     assert stats["traces"] == [(2, 2)]         # one (gamma, pool) round
-    assert stats["admit_traces"] == [(8, 2)]   # one (bucket, pool) admit
+    assert stats["admit_traces"] == [(8, 2), (8, 1)]
+    # 5 admissions landed but only the two shapes above ever traced
+    assert sum(s.admitted for s in report.steps) == 5
 
 
 class _WindowTuner:
