@@ -89,6 +89,11 @@ DOCUMENTED_API = [
     ("repro.core.perf_model", ["SpeedupModel", "SpeedupModel.target_time",
                                "SpeedupModel.predict_decay",
                                "SpeedupModel.admission_time"]),
+    ("repro.analysis", ["analyze_paths", "compile_guard", "CompileGuard",
+                        "compile_count", "compilation_events_available",
+                        "Finding", "Report", "ratchet", "load_baseline",
+                        "write_baseline"]),
+    ("repro.analysis.registry", ["KnownEntry", "lookup_entry"]),
 ]
 
 

@@ -8,6 +8,9 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+# static-analysis gate: tracer-safety + cache-key + Pallas-contract lint,
+# ratcheted against scripts/lint_baseline.txt (AST-only, no jax import)
+timeout 120 bash scripts/lint.sh
 # docs gate: broken relative links in README/docs + docstring presence on
 # the public API surface the docs point at
 timeout 120 python scripts/check_docs.py

@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Static analysis gate: tracer-safety lint, jit-cache-key audit and Pallas
+# kernel-contract checks over the serving stack, ratcheted against
+# scripts/lint_baseline.txt (which ships empty — new findings fail).
+#
+#   scripts/lint.sh                 # lint src/repro against the baseline
+#   scripts/lint.sh --json src/     # machine-readable findings
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m repro.analysis "$@"

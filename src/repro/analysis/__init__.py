@@ -1,0 +1,53 @@
+"""Repo-native static analysis + retrace guard for the jit/Pallas stack.
+
+Three source-level passes (no imports of the analyzed code, no
+accelerator needed) plus one runtime guard:
+
+* :mod:`repro.analysis.tracer_lint` — tracer-safety dataflow (T1xx),
+* :mod:`repro.analysis.cache_keys` — jit-cache-key audit (K2xx),
+* :mod:`repro.analysis.pallas_lint` — Pallas kernel contracts (P3xx),
+* :mod:`repro.analysis.runtime` — ``compile_guard()`` XLA-compile counter.
+
+Run the analyzer with ``python -m repro.analysis src/repro`` (see
+``scripts/lint.sh`` for the CI invocation against the ratchet baseline)
+and read ``docs/analysis.md`` for the finding codes, the traced-ness
+model, and how to extend the entry-point registry.
+"""
+from __future__ import annotations
+
+import os
+from typing import List, Optional, Sequence
+
+from repro.analysis import cache_keys, pallas_lint, tracer_lint
+from repro.analysis._astutil import Project
+from repro.analysis.findings import (CODES, Finding, Report, apply_waivers,
+                                     load_baseline, parse_waivers, ratchet,
+                                     write_baseline)
+from repro.analysis.pallas_lint import _DEFAULT_VMEM_BUDGET
+from repro.analysis.runtime import (CompileGuard, compilation_events_available,
+                                    compile_count, compile_guard)
+
+__all__ = [
+    "CODES", "Finding", "Report", "analyze_paths", "compile_guard",
+    "CompileGuard", "compile_count", "compilation_events_available",
+    "load_baseline", "ratchet", "write_baseline",
+]
+
+
+def analyze_paths(paths: Sequence[str], repo_root: Optional[str] = None,
+                  vmem_budget: int = _DEFAULT_VMEM_BUDGET) -> List[Finding]:
+    """Run all static passes over ``paths`` (files or directories) and
+    return findings with inline waivers already applied, sorted by
+    location.  ``repo_root`` anchors the repo-relative finding paths
+    (defaults to the current directory, which is where CI runs)."""
+    root = os.path.abspath(repo_root or os.getcwd())
+    project = Project(list(paths), root)
+    findings: List[Finding] = []
+    findings += tracer_lint.run(project)
+    findings += cache_keys.run(project)
+    findings += pallas_lint.run(project, vmem_budget=vmem_budget)
+    waivers = {mod.rel: parse_waivers(mod.source)
+               for mod in project.modules.values()}
+    kept = apply_waivers(findings, waivers)
+    kept.sort(key=lambda f: (f.path, f.line, f.code))
+    return kept

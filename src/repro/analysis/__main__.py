@@ -1,0 +1,52 @@
+"""CLI driver: ``python -m repro.analysis [paths...]``.
+
+Exit status is the CI contract: 0 when every finding is waived or
+baselined, 1 when new findings exist.  ``--update-baseline`` regenerates
+the ratchet file from the current findings (each entry then needs a
+justification comment before review).  ``--json`` emits the full report
+for tooling.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis import (analyze_paths, load_baseline, ratchet,
+                            write_baseline)
+from repro.analysis.pallas_lint import _DEFAULT_VMEM_BUDGET
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Tracer-safety / cache-key / Pallas-contract analyzer.")
+    ap.add_argument("paths", nargs="*", default=["src/repro"],
+                    help="files or directories to analyze "
+                         "(default: src/repro)")
+    ap.add_argument("--baseline", default="scripts/lint_baseline.txt",
+                    help="ratchet baseline file")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report every finding, ignoring the baseline")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline from current findings")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the report as JSON")
+    ap.add_argument("--vmem-budget", type=int,
+                    default=_DEFAULT_VMEM_BUDGET,
+                    help="Pallas VMEM budget in bytes (P304)")
+    args = ap.parse_args(argv)
+
+    findings = analyze_paths(args.paths or ["src/repro"],
+                             vmem_budget=args.vmem_budget)
+    if args.update_baseline:
+        write_baseline(args.baseline, findings)
+        print(f"wrote {len(findings)} entr(ies) to {args.baseline}")
+        return 0
+    baseline = {} if args.no_baseline else load_baseline(args.baseline)
+    report = ratchet(findings, baseline)
+    print(report.as_json() if args.json else report.render())
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,390 @@
+"""Jit-cache-key audit: hand-rolled compiled-fn caches vs. what they key on.
+
+The serving stack memoizes ``jax.jit`` results in plain dicts
+(``SDEngine._round_cache``, ``_stage_cache``, ``_admit_cache``,
+``_sliced_cache``, ``_chunk_cache``): a builder method computes a Python
+tuple key, ``.get()``s the cache, and on miss closes a fresh function over
+the builder's arguments and stores ``jax.jit(fn)`` under the key.  The
+failure mode is silent: a builder argument that varies shapes or Python
+branching but is *missing from the key* makes two different programs share
+one cache slot — the second caller gets the first caller's compiled
+artifact and wrong shapes/semantics, with no retrace to warn anyone.
+
+This pass finds every builder (a function that both ``.get()``s and
+stores into the same cache dict, where the stored value traces to a
+``jax.jit`` call) and cross-checks:
+
+========  ===========================================================
+ K201     a builder parameter does not appear in the cache key.
+ K202     a jitted-function parameter drives Python branching at trace
+          time but is not in ``static_argnames``.
+ K203     ``static_argnames`` names a parameter that does not exist.
+ K204     the jitted closure captures a builder-scope variable that is
+          neither derived from the key/self/module globals nor safe.
+ K205     the ``.get()`` key and the store key are different expressions.
+========  ===========================================================
+"""
+from __future__ import annotations
+
+import ast
+import builtins
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis._astutil import (FuncInfo, ModuleInfo, Project,
+                                     assigned_names, call_keywords,
+                                     const_eval, dotted_name)
+from repro.analysis.findings import Finding
+
+_JIT_NAMES = ("jax.jit", "jit", "api.jit")
+_PARTIAL_NAMES = ("functools.partial", "partial")
+_BUILTINS = frozenset(dir(builtins))
+
+
+def _own_nodes(fi: FuncInfo) -> Iterator[ast.AST]:
+    """All nodes in ``fi``'s own body, NOT descending into nested function
+    bodies (their statements belong to the inner scope)."""
+    stack: List[ast.AST] = list(fi.body())
+    while stack:
+        node = stack.pop()
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                yield child                       # the binding, not the body
+                continue
+            stack.append(child)
+
+
+def _all_nodes(node: ast.AST) -> Iterator[ast.AST]:
+    yield from ast.walk(node)
+
+
+@dataclass
+class _CacheUse:
+    """One cache dict referenced from a builder: its gets and stores."""
+    attr: str
+    gets: List[Tuple[ast.expr, int]] = field(default_factory=list)
+    stores: List[Tuple[ast.expr, ast.expr, int]] = field(default_factory=list)
+
+
+class CacheKeyAudit:
+    def __init__(self, project: Project):
+        self.project = project
+        self.findings: List[Finding] = []
+
+    def run(self) -> List[Finding]:
+        for mod in self.project.modules.values():
+            for fi in mod.functions.values():
+                self._audit_builder(fi)
+                self._audit_static_argnames(fi)
+        self.findings.sort(key=lambda f: (f.path, f.line, f.code))
+        return self.findings
+
+    # ------------------------------------------------------ builder detection
+    def _audit_builder(self, fi: FuncInfo) -> None:
+        uses: Dict[str, _CacheUse] = {}
+        local_assigns = self._local_assigns(fi)
+        for node in _own_nodes(fi):
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr == "get" and node.args:
+                attr = self._cache_name(node.func.value)
+                if attr:
+                    uses.setdefault(attr, _CacheUse(attr)).gets.append(
+                        (node.args[0], node.lineno))
+            elif isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Subscript):
+                tgt = node.targets[0]
+                attr = self._cache_name(tgt.value)
+                if attr:
+                    uses.setdefault(attr, _CacheUse(attr)).stores.append(
+                        (tgt.slice, node.value, node.lineno))
+        for use in uses.values():
+            if not use.stores:
+                continue
+            inner = self._jitted_inners(fi, use, local_assigns)
+            if inner is None:
+                continue                    # not a compiled-fn cache
+            self._check_cache(fi, use, inner, local_assigns)
+
+    def _cache_name(self, expr: ast.expr) -> Optional[str]:
+        """``self.X`` -> X; bare local ``name`` -> name.  Anything deeper
+        (``self.a.b``) is out of scope for the audit."""
+        if isinstance(expr, ast.Attribute) \
+                and isinstance(expr.value, ast.Name) \
+                and expr.value.id == "self":
+            return expr.attr
+        if isinstance(expr, ast.Name):
+            return expr.id
+        return None
+
+    def _local_assigns(self, fi: FuncInfo) -> Dict[str, List[ast.expr]]:
+        out: Dict[str, List[ast.expr]] = {}
+        for node in _own_nodes(fi):
+            if isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        out.setdefault(tgt.id, []).append(node.value)
+                    elif isinstance(tgt, (ast.Tuple, ast.List)):
+                        for name in assigned_names(tgt):
+                            out.setdefault(name, []).append(node.value)
+        return out
+
+    def _jitted_inners(self, fi: FuncInfo, use: _CacheUse,
+                       local_assigns: Dict[str, List[ast.expr]]
+                       ) -> Optional[List[Tuple[ast.Call, FuncInfo]]]:
+        """Resolve the stored value(s) to ``jax.jit(inner)`` calls.  None
+        when the stored values never trace to a jit call (a data cache,
+        not a compiled-fn cache)."""
+        jit_calls: List[ast.Call] = []
+        for _, value, _ in use.stores:
+            jit_calls.extend(self._trace_to_jit(value, local_assigns, 0))
+        if not jit_calls:
+            return None
+        out: List[Tuple[ast.Call, FuncInfo]] = []
+        for call in jit_calls:
+            if not call.args:
+                continue
+            arg = call.args[0]
+            inners: List[FuncInfo] = []
+            if isinstance(arg, ast.Name):
+                inners = self.project.resolve_name(arg.id, fi.module, fi)
+            elif isinstance(arg, ast.Lambda):
+                inners = [FuncInfo(arg, fi.module,
+                                   f"{fi.qualname}.<lambda>", fi)]
+            for inner in inners:
+                out.append((call, inner))
+        return out
+
+    def _trace_to_jit(self, value: ast.expr,
+                      local_assigns: Dict[str, List[ast.expr]],
+                      depth: int) -> List[ast.Call]:
+        if depth > 4:
+            return []
+        if isinstance(value, ast.Call) \
+                and dotted_name(value.func) in _JIT_NAMES:
+            return [value]
+        if isinstance(value, ast.Tuple):
+            out: List[ast.Call] = []
+            for e in value.elts:
+                out.extend(self._trace_to_jit(e, local_assigns, depth + 1))
+            return out
+        if isinstance(value, ast.Name):
+            out = []
+            for rhs in local_assigns.get(value.id, []):
+                out.extend(self._trace_to_jit(rhs, local_assigns, depth + 1))
+            return out
+        return []
+
+    # ------------------------------------------------------------ the checks
+    def _check_cache(self, fi: FuncInfo, use: _CacheUse,
+                     inners: List[Tuple[ast.Call, FuncInfo]],
+                     local_assigns: Dict[str, List[ast.expr]]) -> None:
+        get_keys = [self._resolve_key(k, local_assigns) for k, _ in use.gets]
+        store_keys = [self._resolve_key(k, local_assigns)
+                      for k, _, _ in use.stores]
+        key_names: Set[str] = set()
+        for key in get_keys + store_keys:
+            key_names |= {n.id for n in _all_nodes(key)
+                          if isinstance(n, ast.Name)}
+
+        # K205 — get key vs store key
+        if get_keys and store_keys:
+            get_repr = {ast.dump(k) for k in get_keys}
+            store_repr = {ast.dump(k) for k in store_keys}
+            if get_repr != store_repr:
+                self._emit(fi, use.stores[0][2], "K205",
+                           f"cache `{use.attr}` .get() key "
+                           f"`{_src(use.gets[0][0])}` != store key "
+                           f"`{_src(use.stores[0][0])}`")
+
+        # K201 — builder params must all REACH the key: directly, or
+        # through a derived local (`opts_key = tuple(sorted(
+        # cache_opts.items()))` covers `cache_opts`)
+        key_reads = set(key_names)
+        changed = True
+        while changed:
+            changed = False
+            for name in list(key_reads):
+                for rhs in local_assigns.get(name, []):
+                    reads = {n.id for n in _all_nodes(rhs)
+                             if isinstance(n, ast.Name)}
+                    if not reads <= key_reads:
+                        key_reads |= reads
+                        changed = True
+        params = [p for p in fi.params() if p not in ("self", "cls")]
+        for p in params:
+            if p not in key_reads:
+                self._emit(fi, fi.line, "K201",
+                           f"builder param `{p}` of `{fi.qualname}` missing "
+                           f"from cache key for `{use.attr}` — two call "
+                           "shapes can share one compiled artifact")
+
+        # per jitted inner: K202/K203 at the jit site, K204 on the closure
+        safe = self._safe_names(fi, key_names, local_assigns)
+        for call, inner in inners:
+            statics = self._static_argnames(call, inner)
+            self._check_k202(fi, call, inner, statics)
+            self._check_k204(fi, use, inner, safe)
+
+    def _resolve_key(self, key: ast.expr,
+                     local_assigns: Dict[str, List[ast.expr]]) -> ast.expr:
+        """``cache_key`` -> its assignment RHS so name-vs-literal spellings
+        of the same key compare equal."""
+        if isinstance(key, ast.Name):
+            rhs = local_assigns.get(key.id, [])
+            if len(rhs) == 1:
+                return rhs[0]
+        return key
+
+    def _static_argnames(self, call: ast.Call,
+                         inner: FuncInfo) -> Set[str]:
+        kw = call_keywords(call)
+        out: Set[str] = set()
+        names = const_eval(kw.get("static_argnames"), {})
+        if isinstance(names, str):
+            out.add(names)
+        elif isinstance(names, tuple):
+            out |= {str(n) for n in names}
+        nums = const_eval(kw.get("static_argnums"), {})
+        if isinstance(nums, int):
+            nums = (nums,)
+        if isinstance(nums, tuple):
+            pos = inner.positional_params()
+            for i in nums:
+                if isinstance(i, int) and 0 <= i < len(pos):
+                    out.add(pos[i])
+        return out
+
+    def _check_k202(self, fi: FuncInfo, call: ast.Call, inner: FuncInfo,
+                    statics: Set[str]) -> None:
+        """Inner-fn params driving Python branching must be static."""
+        params = set(inner.params()) - statics
+        flagged: Set[str] = set()
+        for node in _all_nodes(inner.node):
+            test = None
+            if isinstance(node, (ast.If, ast.While, ast.IfExp)):
+                test = node.test
+            elif isinstance(node, ast.Assert):
+                test = node.test
+            if test is None:
+                continue
+            for name in _all_nodes(test):
+                if isinstance(name, ast.Name) and name.id in params \
+                        and name.id not in flagged:
+                    flagged.add(name.id)
+                    self._emit(fi, getattr(node, "lineno", inner.line),
+                               "K202",
+                               f"param `{name.id}` of jitted "
+                               f"`{inner.qualname}` drives a Python branch "
+                               "at trace time but is not in "
+                               "static_argnames")
+
+    def _audit_static_argnames(self, fi: FuncInfo) -> None:
+        """K203 on every jit site (call or decorator), cache or not."""
+        sites: List[Tuple[ast.Call, FuncInfo]] = []
+        if isinstance(fi.node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in fi.node.decorator_list:
+                if isinstance(dec, ast.Call) and (
+                        dotted_name(dec.func) in _JIT_NAMES
+                        or (dotted_name(dec.func) in _PARTIAL_NAMES
+                            and dec.args
+                            and dotted_name(dec.args[0]) in _JIT_NAMES)):
+                    sites.append((dec, fi))
+        for node in _own_nodes(fi):
+            if isinstance(node, ast.Call) \
+                    and dotted_name(node.func) in _JIT_NAMES and node.args:
+                arg = node.args[0]
+                if isinstance(arg, ast.Name):
+                    for inner in self.project.resolve_name(
+                            arg.id, fi.module, fi):
+                        sites.append((node, inner))
+        for call, inner in sites:
+            params = set(inner.params())
+            for name in self._static_argnames(call, inner):
+                if name not in params:
+                    self._emit(fi, call.lineno, "K203",
+                               f"static_argnames entry `{name}` matches no "
+                               f"parameter of `{inner.qualname}`")
+
+    # ------------------------------------------------------------------ K204
+    def _safe_names(self, fi: FuncInfo, key_names: Set[str],
+                    local_assigns: Dict[str, List[ast.expr]]) -> Set[str]:
+        """Builder-scope names a jitted closure may capture: the key names,
+        self, module globals/imports, builder params (K201 covers those),
+        and locals transitively derived from safe names only."""
+        mod = fi.module
+        module_names: Set[str] = set(mod.imports) | set(mod.top_funcs) \
+            | set(mod.classes)
+        for node in mod.tree.body:
+            if isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    module_names.update(assigned_names(tgt))
+            elif isinstance(node, ast.AnnAssign):
+                module_names.update(assigned_names(node.target))
+        safe = set(key_names) | module_names | set(fi.params()) \
+            | {"self", "cls"} | _BUILTINS
+        # fixpoint: a local is safe when every name its RHS reads is safe
+        changed = True
+        while changed:
+            changed = False
+            for name, rhss in local_assigns.items():
+                if name in safe:
+                    continue
+                reads: Set[str] = set()
+                for rhs in rhss:
+                    reads |= {n.id for n in _all_nodes(rhs)
+                              if isinstance(n, ast.Name)}
+                if reads <= safe:
+                    safe.add(name)
+                    changed = True
+        return safe
+
+    def _check_k204(self, fi: FuncInfo, use: _CacheUse, inner: FuncInfo,
+                    safe: Set[str]) -> None:
+        bound: Set[str] = set(inner.params())
+        for node in _all_nodes(inner.node):
+            if isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    bound.update(assigned_names(tgt))
+            elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                bound.update(assigned_names(node.target))
+            elif isinstance(node, ast.For):
+                bound.update(assigned_names(node.target))
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                bound.add(node.name)
+                bound.update(p.arg for p in node.args.args
+                             + node.args.kwonlyargs + node.args.posonlyargs)
+            elif isinstance(node, ast.Lambda):
+                bound.update(p.arg for p in node.args.args
+                             + node.args.kwonlyargs + node.args.posonlyargs)
+            elif isinstance(node, (ast.Import, ast.ImportFrom)):
+                bound.update(a.asname or a.name.split(".")[0]
+                             for a in node.names)
+            elif isinstance(node, ast.comprehension):
+                bound.update(assigned_names(node.target))
+        used = {n.id for n in _all_nodes(inner.node)
+                if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)}
+        for name in sorted(used - bound - safe):
+            self._emit(fi, inner.line, "K204",
+                       f"jitted `{inner.qualname}` captures builder-scope "
+                       f"`{name}` which is not derived from the "
+                       f"`{use.attr}` key")
+
+    def _emit(self, fi: FuncInfo, line: int, code: str,
+              message: str) -> None:
+        self.findings.append(Finding(fi.module.rel, line, code, message))
+
+
+def _src(expr: ast.AST) -> str:
+    try:
+        text = ast.unparse(expr)
+    except Exception:                            # pragma: no cover
+        return "<expr>"
+    return text if len(text) <= 40 else text[:37] + "..."
+
+
+def run(project: Project) -> List[Finding]:
+    """Entry point used by the driver: all cache-key findings."""
+    return CacheKeyAudit(project).run()

@@ -1,0 +1,217 @@
+"""Finding model, inline waivers and the ratchet baseline.
+
+Every analysis pass emits ``Finding``s; the driver (``__main__``) renders
+them as ``path:line: CODE message`` (the grep/editor-clickable format),
+filters the ones the repo has explicitly accepted, and fails on the rest.
+
+Two acceptance mechanisms, by design intent:
+
+* **Inline waiver** — a ``# lint: allow[CODE] reason`` comment on (or one
+  line above) the flagged line.  For violations that are *intentional
+  behavior* (e.g. the SDEngine trace-log append: a deliberate trace-time
+  side effect tests assert on).  The reason is mandatory: a waiver without
+  one is itself a finding (``W001``).
+* **Ratchet baseline** — ``scripts/lint_baseline.txt``, a checked-in list
+  of ``path:CODE:fingerprint`` entries for *legacy debt*: findings that
+  predate the analyzer and are queued for fixes.  The baseline only ever
+  shrinks ("ratchet"): a finding NOT in the baseline fails CI, and a
+  baseline entry whose finding disappeared is reported as stale so it gets
+  deleted.  Fingerprints hash the finding message, not the line number, so
+  unrelated edits above a baselined site don't churn the file.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Tuple
+
+#: code -> one-line description (docs/analysis.md is generated-by-hand from
+#: this table; tests assert the two stay in sync)
+CODES: Dict[str, str] = {
+    # tracer-safety lint (tracer_lint.py)
+    "T101": "Python `if` on a traced value (trace-time branch)",
+    "T102": "Python `while` on a traced value (trace-time loop)",
+    "T103": "int()/float()/bool() coercion of a traced value",
+    "T104": "host sync of a traced value (.item()/.tolist()/np.asarray)",
+    "T105": "f-string/str.format interpolation of a traced value",
+    "T106": "mutation of captured Python state inside a jitted body",
+    "T107": "assert on a traced value",
+    "T108": "range() bound by a traced value (unrolls or crashes)",
+    # jit-cache-key audit (cache_keys.py)
+    "K201": "hand-rolled cache key misses a builder parameter",
+    "K202": "param branches/shapes at trace time but is not static",
+    "K203": "static_argnames names a parameter that does not exist",
+    "K204": "jitted closure captures a builder-scope variable not in the key",
+    "K205": "cache .get() key and store key differ",
+    # Pallas kernel-contract lint (pallas_lint.py)
+    "P301": "index-map arity != grid dims + scalar-prefetch operands",
+    "P302": "kernel parameter count != scalars + inputs + outputs + scratch",
+    "P303": "BlockSpec block dims unaligned to the dtype's TPU tile",
+    "P304": "VMEM footprint (blocks + scratch) exceeds the budget",
+    "P305": "num_scalar_prefetch inconsistent with the grid spec",
+    # waiver hygiene
+    "W001": "lint waiver without a reason",
+}
+
+_WAIVER_RE = re.compile(r"#\s*lint:\s*allow\[([A-Z]\d{3}(?:,\s*[A-Z]\d{3})*)\]"
+                        r"\s*(.*)")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One analyzer result, anchored to a source location.
+
+    ``path`` is repo-relative, ``line`` 1-indexed, ``code`` one of
+    :data:`CODES`.  ``fingerprint`` (path + code + message, line-free) is
+    what the ratchet baseline stores, so baselined findings survive
+    unrelated edits shifting line numbers.
+    """
+    path: str
+    line: int
+    code: str
+    message: str
+
+    def __post_init__(self):
+        assert self.code in CODES, f"unknown finding code {self.code}"
+
+    @property
+    def fingerprint(self) -> str:
+        h = hashlib.sha256(
+            f"{self.path}:{self.code}:{self.message}".encode()).hexdigest()
+        return h[:12]
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.code} {self.message}"
+
+    def as_json(self) -> dict:
+        return {"path": self.path, "line": self.line, "code": self.code,
+                "message": self.message, "fingerprint": self.fingerprint}
+
+
+def parse_waivers(source: str) -> Dict[int, Tuple[Tuple[str, ...], str]]:
+    """Map line number -> (waived codes, reason) for ``# lint: allow[...]``
+    comments.  A waiver covers its own line and the line below it (so it
+    can sit above a long statement)."""
+    out: Dict[int, Tuple[Tuple[str, ...], str]] = {}
+    for i, text in enumerate(source.splitlines(), start=1):
+        m = _WAIVER_RE.search(text)
+        if m:
+            codes = tuple(c.strip() for c in m.group(1).split(","))
+            out[i] = (codes, m.group(2).strip())
+    return out
+
+
+def apply_waivers(findings: Iterable[Finding],
+                  waivers_by_path: Dict[str, Dict[int, Tuple[Tuple[str, ...],
+                                                             str]]]
+                  ) -> List[Finding]:
+    """Drop findings covered by an inline waiver; emit W001 for waivers
+    that carry no reason (waiving silently defeats the justification
+    requirement the ratchet exists for)."""
+    kept: List[Finding] = []
+    used: set = set()
+    for f in findings:
+        waivers = waivers_by_path.get(f.path, {})
+        hit = None
+        for ln in (f.line, f.line - 1):
+            w = waivers.get(ln)
+            if w and f.code in w[0]:
+                hit = (ln, w)
+                break
+        if hit is None:
+            kept.append(f)
+            continue
+        used.add((f.path, hit[0]))
+        if not hit[1][1]:
+            kept.append(Finding(f.path, hit[0], "W001",
+                                f"waiver for {f.code} has no reason"))
+    return kept
+
+
+# ------------------------------------------------------------------ baseline
+def load_baseline(path: str) -> Dict[str, str]:
+    """Parse a ratchet baseline file: ``path:CODE:fingerprint`` per line;
+    ``#`` comments (the per-entry justifications) and blanks skipped.
+    Returns fingerprint -> entry-line (for stale reporting)."""
+    entries: Dict[str, str] = {}
+    try:
+        with open(path) as fh:
+            for raw in fh:
+                line = raw.strip()
+                if not line or line.startswith("#"):
+                    continue
+                parts = line.rsplit(":", 2)
+                if len(parts) != 3:
+                    raise ValueError(f"malformed baseline entry: {line!r}")
+                entries[parts[2]] = line
+    except FileNotFoundError:
+        pass
+    return entries
+
+
+def write_baseline(path: str, findings: Iterable[Finding]) -> None:
+    """Regenerate the baseline from current findings (``--update-baseline``).
+    Every entry gets a TODO-justify comment slot — CI does not parse the
+    comments, reviewers do."""
+    lines = [
+        "# Ratchet baseline for `python -m repro.analysis` "
+        "(scripts/lint.sh).",
+        "# Format: path:CODE:fingerprint — one accepted finding per line.",
+        "# Each entry MUST carry a justification comment; entries only ever",
+        "# get deleted (fix the finding), never silently added.",
+        "",
+    ]
+    for f in sorted(set(findings), key=lambda f: (f.path, f.code, f.line)):
+        lines.append(f"# JUSTIFY: {f.message}")
+        lines.append(f"{f.path}:{f.code}:{f.fingerprint}")
+    with open(path, "w") as fh:
+        fh.write("\n".join(lines) + "\n")
+
+
+@dataclass
+class Report:
+    """Driver outcome: new findings (fail), baselined ones (pass, counted)
+    and stale baseline entries (pass, nagged)."""
+    new: List[Finding] = field(default_factory=list)
+    baselined: List[Finding] = field(default_factory=list)
+    stale: List[str] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.new
+
+    def render(self) -> str:
+        out = [f.render() for f in self.new]
+        if self.stale:
+            out.append("stale baseline entries (fixed — delete them):")
+            out.extend(f"  {e}" for e in self.stale)
+        out.append(f"{len(self.new)} new finding(s), "
+                   f"{len(self.baselined)} baselined, "
+                   f"{len(self.stale)} stale baseline entr(ies)")
+        return "\n".join(out)
+
+    def as_json(self) -> str:
+        return json.dumps({
+            "ok": self.ok,
+            "new": [f.as_json() for f in self.new],
+            "baselined": [f.as_json() for f in self.baselined],
+            "stale_baseline": list(self.stale),
+        }, indent=2)
+
+
+def ratchet(findings: Iterable[Finding],
+            baseline: Dict[str, str]) -> Report:
+    """Split findings by baseline membership and spot stale entries."""
+    rep = Report()
+    seen: set = set()
+    for f in findings:
+        if f.fingerprint in baseline:
+            rep.baselined.append(f)
+            seen.add(f.fingerprint)
+        else:
+            rep.new.append(f)
+    rep.stale = [entry for fp, entry in baseline.items() if fp not in seen]
+    rep.new.sort(key=lambda f: (f.path, f.line, f.code))
+    return rep

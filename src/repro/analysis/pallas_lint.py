@@ -1,0 +1,444 @@
+"""Pallas kernel-contract lint: BlockSpecs, grids, scalar prefetch, VMEM.
+
+Statically parses every ``pl.pallas_call`` site and checks the contracts
+the TPU lowering enforces at runtime (or worse, silently pads around):
+
+========  ===========================================================
+ P301     index-map arity != len(grid) + num_scalar_prefetch.
+ P302     kernel positional-parameter count != scalar-prefetch operands
+          + inputs + outputs + scratch refs.
+ P303     BlockSpec block dims unaligned to the dtype's TPU tile
+          (last dim % 128, second-to-last % 8 fp32 / % 16 bf16 /
+          % 32 int8-fp8).
+ P304     statically-resolvable VMEM footprint (blocks + scratch)
+          exceeds the budget (default 16 MiB/core).
+ P305     grid-spec inconsistency: ``grid_spec=`` combined with direct
+          ``grid``/``in_specs``/``out_specs``/``scratch_shapes`` kwargs,
+          a non-constant ``num_scalar_prefetch``, or a
+          ``PrefetchScalarGridSpec`` with no grid.
+========  ===========================================================
+
+Everything is best-effort symbolic: a dim that does not const-evaluate
+(e.g. a runtime ``d``) is skipped, never guessed, so the checks that do
+fire are real.  Counts (P302) are only checked when ``in_specs`` /
+``out_shape`` / ``scratch_shapes`` are statically-sized literals — the
+ragged-GMM builder assembles its spec lists dynamically and is skipped by
+design.  P304 sums only resolvable footprints, so it can under-count but
+never false-positives.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis._astutil import (FuncInfo, ModuleInfo, Project,
+                                     call_keywords, const_eval, dotted_name,
+                                     dtype_bytes, dtype_token)
+from repro.analysis.findings import Finding
+
+_PALLAS_NAMES = ("pl.pallas_call", "pallas_call", "pallas.pallas_call")
+_PARTIAL_NAMES = ("functools.partial", "partial")
+#: second-to-last-dim tile requirement per dtype token (last dim is 128)
+_SUBLANE = {"float32": 8, "f32": 8, "int32": 8, "uint32": 8,
+            "bfloat16": 16, "bf16": 16, "float16": 16,
+            "int8": 32, "uint8": 32, "float8_e4m3fn": 32,
+            "float8_e5m2": 32}
+_LANE = 128
+_DEFAULT_VMEM_BUDGET = 16 * 1024 * 1024        # bytes/core (TPU v4/v5)
+
+
+@dataclass
+class _Site:
+    call: ast.Call
+    mod: ModuleInfo
+    scope: Optional[FuncInfo]
+    env: Dict[str, object]
+    local_assigns: Dict[str, ast.expr]
+
+
+class PallasLint:
+    def __init__(self, project: Project,
+                 vmem_budget: int = _DEFAULT_VMEM_BUDGET):
+        self.project = project
+        self.vmem_budget = vmem_budget
+        self.findings: List[Finding] = []
+
+    def run(self) -> List[Finding]:
+        for mod in self.project.modules.values():
+            module_env = self._module_env(mod)
+            seen: set = set()
+            for fi in mod.functions.values():
+                env = dict(module_env)
+                for name, default in fi.param_defaults().items():
+                    v = const_eval(default, env)
+                    if v is not None:
+                        env[name] = v
+                assigns = self._scope_assigns(fi, env)
+                for node in ast.walk(fi.node):
+                    if isinstance(node, ast.Call) \
+                            and dotted_name(node.func) in _PALLAS_NAMES \
+                            and id(node) not in seen:
+                        seen.add(id(node))
+                        self._check_site(_Site(node, mod, fi, env, assigns))
+            for node in ast.walk(mod.tree):
+                if isinstance(node, ast.Call) \
+                        and dotted_name(node.func) in _PALLAS_NAMES \
+                        and id(node) not in seen:
+                    seen.add(id(node))
+                    self._check_site(_Site(node, mod, None,
+                                           dict(module_env), {}))
+        self.findings.sort(key=lambda f: (f.path, f.line, f.code))
+        return self.findings
+
+    # ------------------------------------------------------------------- env
+    def _module_env(self, mod: ModuleInfo) -> Dict[str, object]:
+        env: Dict[str, object] = {}
+        for node in mod.tree.body:
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                v = const_eval(node.value, env)
+                if v is not None:
+                    env[node.targets[0].id] = v
+        return env
+
+    def _scope_assigns(self, fi: FuncInfo,
+                       env: Dict[str, object]) -> Dict[str, ast.expr]:
+        """Single-assignment locals in the scope chain (name -> RHS), with
+        const-evaluatable ones also folded into ``env``."""
+        out: Dict[str, ast.expr] = {}
+        counts: Dict[str, int] = {}
+        s: Optional[FuncInfo] = fi
+        while s is not None:
+            for node in ast.walk(s.node):
+                if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                        and isinstance(node.targets[0], ast.Name):
+                    name = node.targets[0].id
+                    counts[name] = counts.get(name, 0) + 1
+                    out.setdefault(name, node.value)
+            s = s.parent
+        for name, rhs in out.items():
+            if counts.get(name, 0) == 1 and name not in env:
+                v = const_eval(rhs, env)
+                if v is not None:
+                    env[name] = v
+        return {n: e for n, e in out.items() if counts.get(n, 0) == 1}
+
+    # ------------------------------------------------------------- the site
+    def _check_site(self, site: _Site) -> None:
+        call, kw = site.call, call_keywords(site.call)
+        nsp = 0
+        grid_expr: Optional[ast.expr] = None
+        spec_kw: Dict[str, ast.expr] = kw
+        gs = kw.get("grid_spec")
+        if gs is not None and isinstance(gs, ast.Call) \
+                and (dotted_name(gs.func) or "").endswith(
+                    "PrefetchScalarGridSpec"):
+            gkw = call_keywords(gs)
+            # P305 — conflicting direct kwargs alongside a grid spec
+            overlap = [k for k in ("grid", "in_specs", "out_specs",
+                                   "scratch_shapes") if k in kw]
+            if overlap:
+                self._emit(site, call, "P305",
+                           "grid_spec= combined with direct "
+                           f"{'/'.join(overlap)} kwarg(s)")
+            n = const_eval(gkw.get("num_scalar_prefetch"), site.env)
+            if "num_scalar_prefetch" in gkw and (not isinstance(n, int)
+                                                 or n < 0):
+                self._emit(site, gs, "P305",
+                           "num_scalar_prefetch is not a non-negative "
+                           "int constant")
+                n = None
+            nsp = n if isinstance(n, int) else 0
+            if "grid" not in gkw:
+                self._emit(site, gs, "P305",
+                           "PrefetchScalarGridSpec without a grid")
+            grid_expr = gkw.get("grid")
+            spec_kw = gkw
+        else:
+            grid_expr = kw.get("grid")
+
+        grid_len = self._grid_len(grid_expr, site)
+        in_specs = spec_kw.get("in_specs")
+        out_specs = spec_kw.get("out_specs")
+        scratch = spec_kw.get("scratch_shapes")
+        out_dtype = self._out_dtype(kw.get("out_shape"))
+
+        # ---- P301: every resolvable index map must take grid + scalars
+        if grid_len is not None:
+            want = grid_len + nsp
+            for spec in self._blockspecs(in_specs) \
+                    + self._blockspecs(out_specs):
+                for fn, arity in self._index_maps(spec, site):
+                    if arity != want:
+                        self._emit(site, spec, "P301",
+                                   f"index map `{fn}` takes {arity} args; "
+                                   f"grid has {grid_len} dim(s) + {nsp} "
+                                   "scalar-prefetch operand(s) = "
+                                   f"{want} expected")
+
+        # ---- P303: tile alignment of every resolvable block shape
+        for spec in self._blockspecs(in_specs):
+            self._check_tile(site, spec, self._block_dims(spec, site), None)
+        for spec in self._blockspecs(out_specs):
+            self._check_tile(site, spec, self._block_dims(spec, site),
+                             out_dtype)
+        for vm in self._vmem_calls(scratch):
+            dims = const_eval(vm.args[0] if vm.args else None, site.env)
+            tok = dtype_token(vm.args[1]) if len(vm.args) > 1 else None
+            if isinstance(dims, tuple):
+                self._check_tile(site, vm, list(dims), tok)
+
+        # ---- P302: ref count, only when everything is statically sized
+        self._check_param_count(site, nsp, in_specs, scratch,
+                                kw.get("out_shape"), out_specs)
+
+        # ---- P304: resolvable VMEM footprint vs budget
+        self._check_vmem(site, in_specs, out_specs, scratch, out_dtype)
+
+    # ------------------------------------------------------------ resolution
+    def _grid_len(self, grid_expr: Optional[ast.expr],
+                  site: _Site) -> Optional[int]:
+        if isinstance(grid_expr, ast.Name):
+            grid_expr = site.local_assigns.get(grid_expr.id, grid_expr)
+        if isinstance(grid_expr, ast.Tuple):
+            return len(grid_expr.elts)
+        v = const_eval(grid_expr, site.env)
+        if isinstance(v, tuple):
+            return len(v)
+        if isinstance(v, int):
+            return 1
+        return None
+
+    def _blockspecs(self, expr: Optional[ast.expr]) -> List[ast.Call]:
+        if expr is None:
+            return []
+        return [n for n in ast.walk(expr)
+                if isinstance(n, ast.Call)
+                and (dotted_name(n.func) or "").endswith("BlockSpec")]
+
+    def _vmem_calls(self, expr: Optional[ast.expr]) -> List[ast.Call]:
+        if expr is None:
+            return []
+        return [n for n in ast.walk(expr)
+                if isinstance(n, ast.Call)
+                and (dotted_name(n.func) or "").endswith("VMEM")]
+
+    def _index_maps(self, spec: ast.Call,
+                    site: _Site) -> List[Tuple[str, int]]:
+        expr = None
+        if len(spec.args) > 1:
+            expr = spec.args[1]
+        else:
+            expr = call_keywords(spec).get("index_map")
+        if expr is None:
+            return []
+        out: List[Tuple[str, int]] = []
+        if isinstance(expr, ast.Lambda):
+            out.append(("<lambda>", len(expr.args.args)))
+        elif isinstance(expr, ast.Name):
+            cands = self.project.resolve_name(expr.id, site.mod, site.scope)
+            if not cands:
+                cands = self._tuple_unpacked(expr.id, site)
+            for fi in cands:
+                out.append((fi.qualname, len(fi.positional_params())))
+        return out
+
+    def _tuple_unpacked(self, name: str, site: _Site) -> List[FuncInfo]:
+        """Resolve ``x_map, w_map, o_map = _scalar_maps()`` bindings: find
+        the builder, take the lambda candidates at the matching position."""
+        s = site.scope
+        while s is not None:
+            for node in ast.walk(s.node):
+                if not (isinstance(node, ast.Assign)
+                        and len(node.targets) == 1
+                        and isinstance(node.targets[0], ast.Tuple)
+                        and isinstance(node.value, ast.Call)):
+                    continue
+                names = [e.id if isinstance(e, ast.Name) else None
+                         for e in node.targets[0].elts]
+                if name not in names:
+                    continue
+                idx = names.index(name)
+                targets: List[FuncInfo] = []
+                if isinstance(node.value.func, ast.Name):
+                    targets = self.project.resolve_name(
+                        node.value.func.id, site.mod, s)
+                for t in targets:
+                    rets = self.project.returned_functions(t)
+                    if idx < len(rets):
+                        return rets[idx]
+            s = s.parent
+        return []
+
+    def _block_dims(self, spec: ast.Call,
+                    site: _Site) -> List[Optional[object]]:
+        shape = spec.args[0] if spec.args \
+            else call_keywords(spec).get("block_shape")
+        if isinstance(shape, ast.Tuple):
+            return [const_eval(e, site.env) for e in shape.elts]
+        v = const_eval(shape, site.env)
+        if isinstance(v, tuple):
+            return list(v)
+        return []
+
+    def _out_dtype(self, out_shape: Optional[ast.expr]) -> Optional[str]:
+        if out_shape is None:
+            return None
+        for n in ast.walk(out_shape):
+            if isinstance(n, ast.Call) \
+                    and (dotted_name(n.func) or "").endswith(
+                        "ShapeDtypeStruct"):
+                dt = (n.args[1] if len(n.args) > 1
+                      else call_keywords(n).get("dtype"))
+                if dt is not None:
+                    return dtype_token(dt)
+        return None
+
+    # ---------------------------------------------------------------- checks
+    def _check_tile(self, site: _Site, node: ast.AST,
+                    dims: Sequence[Optional[object]],
+                    dtype: Optional[str]) -> None:
+        if len(dims) < 1:
+            return
+        sublane = _SUBLANE.get(dtype or "float32", 8)
+        last = dims[-1]
+        if isinstance(last, int) and last != 1 and last % _LANE:
+            self._emit(site, node, "P303",
+                       f"block last dim {last} not a multiple of {_LANE} "
+                       f"(dtype {dtype or 'float32'})")
+        if len(dims) >= 2:
+            sub = dims[-2]
+            if isinstance(sub, int) and sub != 1 and sub % sublane:
+                self._emit(site, node, "P303",
+                           f"block second-to-last dim {sub} not a multiple "
+                           f"of {sublane} (dtype {dtype or 'float32'})")
+
+    def _count(self, expr: Optional[ast.expr],
+               env: Dict[str, object]) -> Optional[int]:
+        """Static element count of a spec list: literal list, or
+        ``[x] * k`` with constant k.  None = not statically sized."""
+        if expr is None:
+            return 0
+        if isinstance(expr, ast.List):
+            return len(expr.elts)
+        if isinstance(expr, ast.BinOp) and isinstance(expr.op, ast.Mult):
+            left = self._count(expr.left, env)
+            k = const_eval(expr.right, env)
+            if left is not None and isinstance(k, int):
+                return left * k
+        if isinstance(expr, ast.Call) \
+                and (dotted_name(expr.func) or "").endswith("BlockSpec"):
+            return 1
+        return None
+
+    def _check_param_count(self, site: _Site, nsp: int,
+                           in_specs: Optional[ast.expr],
+                           scratch: Optional[ast.expr],
+                           out_shape: Optional[ast.expr],
+                           out_specs: Optional[ast.expr]) -> None:
+        n_in = self._count(in_specs, site.env)
+        n_scratch = self._count(scratch, site.env) if scratch is not None \
+            else 0
+        n_out = self._n_out(out_shape, out_specs, site)
+        kernel = self._kernel_params(site)
+        if None in (n_in, n_scratch, n_out) or kernel is None:
+            return
+        name, n_params = kernel
+        want = nsp + n_in + n_out + n_scratch
+        if n_params != want:
+            self._emit(site, site.call, "P302",
+                       f"kernel `{name}` takes {n_params} positional "
+                       f"ref(s); {nsp} scalar + {n_in} in + {n_out} out + "
+                       f"{n_scratch} scratch = {want} expected")
+
+    def _n_out(self, out_shape: Optional[ast.expr],
+               out_specs: Optional[ast.expr],
+               site: _Site) -> Optional[int]:
+        if isinstance(out_shape, (ast.List, ast.Tuple)):
+            return len(out_shape.elts)
+        if isinstance(out_shape, ast.Call) \
+                and (dotted_name(out_shape.func) or "").endswith(
+                    "ShapeDtypeStruct"):
+            return 1
+        if out_specs is not None:
+            return self._count(out_specs, site.env)
+        return None
+
+    def _kernel_params(self, site: _Site) -> Optional[Tuple[str, int]]:
+        """Resolve the kernel arg (name / lambda / functools.partial) to
+        (display name, unbound positional-param count)."""
+        if not site.call.args:
+            return None
+        expr: ast.expr = site.call.args[0]
+        if isinstance(expr, ast.Name) and expr.id in site.local_assigns:
+            cands = self.project.resolve_name(expr.id, site.mod, site.scope)
+            if not cands:
+                expr = site.local_assigns[expr.id]
+        bound_pos = 0
+        bound_kw: set = set()
+        if isinstance(expr, ast.Call) \
+                and dotted_name(expr.func) in _PARTIAL_NAMES and expr.args:
+            bound_pos = len(expr.args) - 1
+            bound_kw = {k.arg for k in expr.keywords if k.arg}
+            expr = expr.args[0]
+        if isinstance(expr, ast.Lambda):
+            return ("<lambda>", len(expr.args.args) - bound_pos)
+        if isinstance(expr, ast.Name):
+            cands = self.project.resolve_name(expr.id, site.mod, site.scope)
+            if len(cands) == 1:
+                fi = cands[0]
+                pos = [p for p in fi.positional_params()
+                       if p not in bound_kw]
+                return (fi.qualname, len(pos) - bound_pos)
+        return None
+
+    def _check_vmem(self, site: _Site, in_specs: Optional[ast.expr],
+                    out_specs: Optional[ast.expr],
+                    scratch: Optional[ast.expr],
+                    out_dtype: Optional[str]) -> None:
+        total = 0
+        for spec in self._blockspecs(in_specs):
+            total += self._footprint(self._block_dims(spec, site), "float32")
+        for spec in self._blockspecs(out_specs):
+            total += self._footprint(self._block_dims(spec, site),
+                                     out_dtype or "float32")
+        scratch_bytes = 0
+        for vm in self._vmem_calls(scratch):
+            dims = const_eval(vm.args[0] if vm.args else None, site.env)
+            tok = dtype_token(vm.args[1]) if len(vm.args) > 1 else None
+            if isinstance(dims, tuple):
+                scratch_bytes += self._footprint(list(dims),
+                                                 tok or "float32")
+        # `[VMEM(...)] * k` replicates the footprint k times
+        if scratch is not None and isinstance(scratch, ast.BinOp) \
+                and isinstance(scratch.op, ast.Mult):
+            k = const_eval(scratch.right, site.env)
+            if isinstance(k, int) and k > 1:
+                scratch_bytes *= k
+        total += scratch_bytes
+        if total > self.vmem_budget:
+            self._emit(site, site.call, "P304",
+                       f"resolvable VMEM footprint {total / 2**20:.1f} MiB "
+                       f"exceeds the {self.vmem_budget / 2**20:.0f} MiB "
+                       "budget")
+
+    def _footprint(self, dims: Sequence[Optional[object]],
+                   dtype: Optional[str]) -> int:
+        if not dims or not all(isinstance(d, int) for d in dims):
+            return 0
+        n = 1
+        for d in dims:
+            n *= int(d)                      # type: ignore[arg-type]
+        return n * (dtype_bytes(dtype) or 4)
+
+    def _emit(self, site: _Site, node: ast.AST, code: str,
+              message: str) -> None:
+        line = getattr(node, "lineno", site.call.lineno)
+        self.findings.append(Finding(site.mod.rel, line, code, message))
+
+
+def run(project: Project, vmem_budget: int = _DEFAULT_VMEM_BUDGET
+        ) -> List[Finding]:
+    """Entry point used by the driver: all Pallas-contract findings."""
+    return PallasLint(project, vmem_budget=vmem_budget).run()

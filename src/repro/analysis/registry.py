@@ -1,0 +1,119 @@
+"""Entry-point registry: where traced-ness starts, and what is known static.
+
+The tracer lint discovers most entry points syntactically (``jax.jit``
+call/decorator sites, ``pl.pallas_call`` kernels, callbacks handed to
+``jax.lax`` control flow).  The registry supplements that discovery with
+*annotations* the source cannot express:
+
+* ``KNOWN_ENTRY_POINTS`` — hot-path functions that must be analyzed even
+  when no jit site in the scanned roots reaches them syntactically (e.g. a
+  proposer implementation only ever invoked through the ``Proposer``
+  protocol).  Each names its statically-passed params; everything else is
+  seeded traced.
+* ``ALWAYS_STATIC_PARAMS`` — parameter names that are Python-static by
+  repo-wide convention whenever traced-ness is *inferred* (``self``,
+  ``cfg`` …).  Call-site flow still wins where a call site is visible.
+* ``STATIC_RESULT_ATTRS`` / ``STATIC_RESULT_CALLS`` — attribute reads and
+  calls whose result is static even on a traced operand (``x.shape``,
+  ``len(x)``), so ``int(x.shape[0])`` never false-positives as a coercion.
+
+Extending the registry (docs/analysis.md): add a :class:`KnownEntry` with
+the module-path suffix, the function qualname and its static params —
+nothing else; the dataflow takes it from there.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import FrozenSet, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class KnownEntry:
+    """One registered analysis root.
+
+    ``module`` is a repo-relative path *suffix* (so the registry is stable
+    under repo relocation), ``qualname`` the function's dotted name inside
+    the module, ``static`` the params NOT seeded as traced.
+    """
+    module: str
+    qualname: str
+    static: Tuple[str, ...] = ()
+
+
+#: Hot-path roots beyond what jit-site discovery reaches syntactically:
+#: the SDEngine round/admission bodies reach these through protocol
+#: dispatch (``proposer.*``) or method indirection (``target.*``); listing
+#: them keeps the lint exhaustive even if an intermediate call becomes
+#: unresolvable.
+KNOWN_ENTRY_POINTS: Tuple[KnownEntry, ...] = (
+    # target model surface (models/model.py) — reached from every round
+    KnownEntry("models/model.py", "Model.prefill",
+               static=("self", "collect")),
+    KnownEntry("models/model.py", "Model.prefill_with_hidden",
+               static=("self", "collect")),
+    KnownEntry("models/model.py", "Model.extend",
+               static=("self", "collect")),
+    KnownEntry("models/model.py", "Model.extend_with_hidden",
+               static=("self", "collect")),
+    KnownEntry("models/model.py", "Model.extend_with_prefetch",
+               static=("self", "collect")),
+    KnownEntry("models/model.py", "Model.commit",
+               static=("self", "collected")),
+    KnownEntry("models/model.py", "merge_cache_rows"),
+    KnownEntry("models/model.py", "scatter_cache_rows",
+               static=("n_prompt",)),
+    # proposer implementations (protocol-dispatched from SDEngine stages)
+    KnownEntry("core/proposer.py", "ModelProposer.propose",
+               static=("self", "gamma")),
+    KnownEntry("core/proposer.py", "ModelProposer.commit",
+               static=("self",)),
+    KnownEntry("core/proposer.py", "NoneProposer.propose",
+               static=("self", "gamma")),
+    KnownEntry("core/eagle.py", "EagleProposer.propose",
+               static=("self", "gamma")),
+    KnownEntry("core/eagle.py", "EagleProposer.commit",
+               static=("self",)),
+    KnownEntry("core/prefetch.py", "PrefetchProposer.propose",
+               static=("self", "gamma")),
+    # moe / attention forwards (reached through layer dispatch)
+    KnownEntry("models/moe.py", "moe_forward",
+               static=("cfg", "dispatch", "return_metrics")),
+    KnownEntry("models/moe.py", "warm_experts", static=("cfg",)),
+    KnownEntry("models/attention.py", "attention_forward",
+               static=("cfg",)),
+    # batched rejection sampling (the REJECT stage) — temperature is a
+    # Python float by contract (the greedy branch is a trace-time choice)
+    KnownEntry("core/rejection.py", "rejection_sample",
+               static=("temperature",)),
+    KnownEntry("core/rejection.py", "sample_from",
+               static=("temperature",)),
+    KnownEntry("core/rejection.py", "probs_from_logits",
+               static=("temperature",)),
+)
+
+#: Param names treated static when traced-ness must be inferred (registry
+#: roots and protocol-dispatched methods).  Where an actual call site is
+#: visible, flow from the site overrides this list.
+ALWAYS_STATIC_PARAMS: FrozenSet[str] = frozenset({
+    "self", "cls", "cfg", "config", "tcfg", "dcfg", "target_cfg",
+})
+
+#: Attribute reads that are static even on a traced value.
+STATIC_RESULT_ATTRS: FrozenSet[str] = frozenset({
+    "shape", "dtype", "ndim", "size", "aval", "sharding",
+})
+
+#: Calls whose result is static regardless of traced arguments.
+STATIC_RESULT_CALLS: FrozenSet[str] = frozenset({
+    "len", "isinstance", "issubclass", "hasattr", "getattr", "type",
+    "callable", "id", "repr", "range",
+})
+
+
+def lookup_entry(module_rel: str, qualname: str) -> Optional[KnownEntry]:
+    """Find the registry entry for ``qualname`` in the module whose
+    repo-relative path ends with the entry's ``module`` suffix."""
+    for e in KNOWN_ENTRY_POINTS:
+        if module_rel.endswith(e.module) and e.qualname == qualname:
+            return e
+    return None

@@ -1,0 +1,114 @@
+"""Runtime retrace guard: count XLA compilations across a code region.
+
+The static passes prove the *code* cannot leak tracers; this module proves
+the *runtime* does not recompile.  ``compile_guard()`` counts backend
+compilations via ``jax.monitoring`` duration events
+(``/jax/core/compile/backend_compile_duration`` fires exactly once per
+XLA compile, including jit cache misses and Pallas kernel builds), so
+tier-1 tests can assert zero recompiles across steady-state
+ContinuousScheduler rounds::
+
+    with compile_guard() as guard:
+        run_more_rounds(...)          # same shapes as warmup
+    assert guard.count == 0
+
+``jax.monitoring`` has no listener-removal API, so one module-level
+listener feeds a global counter and each guard snapshots it on
+enter/exit; guards nest safely.  On backends whose jax build does not
+emit compile events, :func:`compilation_events_available` returns False —
+the ``compile_guard`` pytest marker (tests/conftest.py) skips those tests
+instead of letting vacuous ``count == 0`` assertions pass.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Iterator, Optional
+
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+_lock = threading.Lock()
+_compile_count = 0
+_listener_installed = False
+_events_available: Optional[bool] = None
+
+
+def _on_event_duration(event: str, duration: float, **kwargs) -> None:
+    global _compile_count
+    if event == _COMPILE_EVENT:
+        with _lock:
+            _compile_count += 1
+
+
+def _install_listener() -> None:
+    global _listener_installed
+    if _listener_installed:
+        return
+    from jax import monitoring
+    monitoring.register_event_duration_secs_listener(_on_event_duration)
+    _listener_installed = True
+
+
+def compile_count() -> int:
+    """Total XLA compilations observed since the listener was installed."""
+    with _lock:
+        return _compile_count
+
+
+class CompileGuard:
+    """Handle yielded by :func:`compile_guard`.
+
+    ``count`` is live while the region runs and frozen at exit, so it can
+    be inspected both inside and after the ``with`` block.
+    """
+
+    def __init__(self) -> None:
+        self._start = 0
+        self._frozen: Optional[int] = None
+
+    @property
+    def count(self) -> int:
+        if self._frozen is not None:
+            return self._frozen
+        return compile_count() - self._start
+
+
+@contextlib.contextmanager
+def compile_guard() -> Iterator[CompileGuard]:
+    """Count XLA compilations inside the ``with`` region.
+
+    Installs the module-level monitoring listener on first use (never
+    removed — jax.monitoring has no unregister API) and snapshots the
+    global counter around the region.  Nesting is fine: each guard owns
+    its own snapshot.
+    """
+    _install_listener()
+    guard = CompileGuard()
+    guard._start = compile_count()
+    try:
+        yield guard
+    finally:
+        guard._frozen = compile_count() - guard._start
+
+
+def compilation_events_available() -> bool:
+    """True when this jax build emits per-compile monitoring events.
+
+    Probes by jitting a fresh (never-cached) function and checking the
+    counter moved.  Result is cached; the probe costs one tiny compile.
+    """
+    global _events_available
+    if _events_available is not None:
+        return _events_available
+    try:
+        import jax
+        import jax.numpy as jnp
+        _install_listener()
+        before = compile_count()
+        # a fresh closure constant => guaranteed cache miss
+        probe = jax.jit(lambda x: x * jnp.float32(1.2345) + 6789.0)
+        probe(jnp.zeros((3,), jnp.float32)).block_until_ready()
+        _events_available = compile_count() > before
+    except Exception:                            # pragma: no cover
+        _events_available = False
+    return _events_available

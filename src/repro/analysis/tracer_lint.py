@@ -1,0 +1,692 @@
+"""Tracer-safety lint: traced-ness dataflow from jit / Pallas entry points.
+
+Walks every function reachable from a ``jax.jit`` / ``pl.pallas_call``
+site (plus the registry's known entry points) and flags the classic
+tracer leaks that either crash at trace time or — worse — silently bake a
+traced value into the compiled program and force retraces:
+
+========  ===========================================================
+ T101     Python ``if`` (or ternary / comprehension filter) on a traced
+          value — the branch is resolved at trace time.
+ T102     Python ``while`` on a traced value.
+ T103     ``int()``/``float()``/``bool()`` coercion of a traced value.
+ T104     host sync: ``.item()``/``.tolist()``/``np.asarray`` on a tracer.
+ T105     f-string / ``str.format`` / logging interpolation of a tracer.
+ T106     mutation of captured Python state (closure list, ``self``
+          attribute, global) inside a jitted body — runs once at trace
+          time, not per call.
+ T107     ``assert`` on a traced value.
+ T108     ``range()`` bound by a traced value (loop unrolls or crashes).
+========  ===========================================================
+
+The traced-ness model (docs/analysis.md): entry-point params are traced
+unless declared in ``static_argnames``/``static_argnums`` (or bound by a
+``functools.partial``); traced-ness propagates through assignments,
+arithmetic, subscripts and calls; ``.shape``/``.dtype``/``len()``/
+``is None`` and friends are static sinks.  Calls that resolve to project
+functions are analyzed interprocedurally with the call site's traced
+arguments; protocol-dispatched method calls resolve by method name across
+every project class (candidate set).  Mutating a *traced* ref
+(``acc_ref[...] = ...`` in a Pallas kernel) is the supported idiom and is
+never flagged — T106 fires only for non-traced captured state.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, FrozenSet, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis._astutil import (FuncInfo, ModuleInfo, Project,
+                                     assigned_names, call_keywords,
+                                     const_eval, dotted_name)
+from repro.analysis.findings import Finding
+from repro.analysis.registry import (ALWAYS_STATIC_PARAMS,
+                                     KNOWN_ENTRY_POINTS, STATIC_RESULT_ATTRS,
+                                     STATIC_RESULT_CALLS, lookup_entry)
+
+_JIT_NAMES = ("jax.jit", "jit", "api.jit")
+_PALLAS_NAMES = ("pl.pallas_call", "pallas_call", "pallas.pallas_call")
+_PARTIAL_NAMES = ("functools.partial", "partial")
+_MUTATORS = frozenset({
+    "append", "extend", "add", "insert", "update", "pop", "popleft",
+    "remove", "clear", "setdefault", "appendleft", "discard", "write",
+})
+_LOG_METHODS = frozenset({"debug", "info", "warning", "error", "exception",
+                          "critical", "log"})
+_MAX_DEPTH = 16
+_MAX_CANDIDATES = 10
+_MAX_ANALYSES = 6000
+
+
+class TracerLint:
+    """One run of the tracer-safety pass over a :class:`Project`."""
+
+    def __init__(self, project: Project):
+        self.project = project
+        self.findings: Set[Finding] = set()
+        self._memo: Dict[Tuple, bool] = {}
+        self._active: Set[Tuple] = set()
+        self._n_analyses = 0
+
+    # ---------------------------------------------------------------- driver
+    def run(self) -> List[Finding]:
+        for mod in self.project.modules.values():
+            self._discover_module(mod)
+        for entry in KNOWN_ENTRY_POINTS:
+            for mod in self.project.modules.values():
+                if not mod.rel.endswith(entry.module):
+                    continue
+                fi = mod.functions.get(entry.qualname)
+                if fi is not None:
+                    self._analyze_entry(fi, static=entry.static)
+        return sorted(self.findings, key=lambda f: (f.path, f.line, f.code))
+
+    # ------------------------------------------------------- site discovery
+    def _discover_module(self, mod: ModuleInfo) -> None:
+        """Visit every node once, attributed to its innermost scope (so a
+        ``kernel = functools.partial(...)`` local resolves from the right
+        function, not from module level)."""
+        scopes: List[Tuple[Optional[FuncInfo], List[ast.AST]]] = [
+            (None, list(mod.tree.body))]
+        scopes += [(fi, list(fi.body())) for fi in mod.functions.values()]
+        for scope, roots in scopes:
+            for node in _own_walk(roots):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    self._discover_def(node, mod, scope)
+                elif isinstance(node, ast.Call):
+                    self._discover_call(node, mod, scope)
+
+    def _discover_def(self, node: ast.AST, mod: ModuleInfo,
+                      scope: Optional[FuncInfo]) -> None:
+        fi = self._func_info_for(node, mod, scope)
+        if fi is None:
+            return
+        for dec in node.decorator_list:
+            if dotted_name(dec) in _JIT_NAMES:
+                self._analyze_entry(fi, static=())
+            elif isinstance(dec, ast.Call):
+                if dotted_name(dec.func) in _JIT_NAMES:
+                    self._analyze_entry(fi, static=self._jit_statics(dec, fi))
+                elif dotted_name(dec.func) in _PARTIAL_NAMES and dec.args \
+                        and dotted_name(dec.args[0]) in _JIT_NAMES:
+                    self._analyze_entry(fi, static=self._jit_statics(dec, fi))
+
+    def _discover_call(self, call: ast.Call, mod: ModuleInfo,
+                       scope: Optional[FuncInfo]) -> None:
+        name = dotted_name(call.func)
+        if name in _JIT_NAMES and call.args:
+            statics: Tuple[str, ...] = ()
+            for fi, bound in self._resolve_funcexpr(call.args[0], mod, scope):
+                self._analyze_entry(
+                    fi, static=self._jit_statics(call, fi) + tuple(bound))
+        elif name in _PALLAS_NAMES and call.args:
+            for fi, bound in self._resolve_funcexpr(call.args[0], mod, scope):
+                # kernel refs (scalar + block + out + scratch) are traced;
+                # partial-bound tile/config kwargs are static
+                self._analyze_entry(fi, static=tuple(bound))
+
+    def _jit_statics(self, call: ast.Call, fi: FuncInfo) -> Tuple[str, ...]:
+        kw = call_keywords(call)
+        out: List[str] = []
+        names = const_eval(kw.get("static_argnames"), {})
+        if isinstance(names, str):
+            out.append(names)
+        elif isinstance(names, tuple):
+            out.extend(str(n) for n in names)
+        nums = const_eval(kw.get("static_argnums"), {})
+        if isinstance(nums, int):
+            nums = (nums,)
+        if isinstance(nums, tuple):
+            pos = fi.positional_params()
+            for i in nums:
+                if isinstance(i, int) and 0 <= i < len(pos):
+                    out.append(pos[i])
+        return tuple(out)
+
+    def _func_info_for(self, node: ast.AST, mod: ModuleInfo,
+                       scope: Optional[FuncInfo]) -> Optional[FuncInfo]:
+        pool = (scope.local_funcs.values() if scope is not None
+                else mod.top_funcs.values())
+        for cands in pool:
+            for fi in cands:
+                if fi.node is node:
+                    return fi
+        for fi in mod.functions.values():
+            if fi.node is node:
+                return fi
+        return None
+
+    def _resolve_funcexpr(self, expr: ast.expr, mod: ModuleInfo,
+                          scope: Optional[FuncInfo]
+                          ) -> List[Tuple[FuncInfo, Tuple[str, ...]]]:
+        """Function candidates for an expression, with partial-bound
+        param names (treated static)."""
+        if isinstance(expr, ast.Lambda):
+            return [(FuncInfo(expr, mod, "<lambda>", scope), ())]
+        if isinstance(expr, ast.Name):
+            cands = self.project.resolve_name(expr.id, mod, scope)
+            if not cands:
+                cands = self._resolve_local_assign(expr.id, mod, scope)
+                return cands
+            return [(c, ()) for c in cands]
+        if isinstance(expr, ast.Call):
+            name = dotted_name(expr.func)
+            if name in _PARTIAL_NAMES and expr.args:
+                inner = self._resolve_funcexpr(expr.args[0], mod, scope)
+                out = []
+                for fi, bound in inner:
+                    extra = [kw.arg for kw in expr.keywords if kw.arg]
+                    pos = fi.positional_params()
+                    extra += pos[: len(expr.args) - 1]
+                    out.append((fi, bound + tuple(extra)))
+                return out
+            # a call returning functions (builder idiom)
+            targets = []
+            if isinstance(expr.func, ast.Name):
+                targets = self.project.resolve_name(expr.func.id, mod, scope)
+            elif isinstance(expr.func, ast.Attribute):
+                targets = self.project.resolve_attr_call(
+                    expr.func.value, expr.func.attr, mod)
+            out = []
+            for t in targets[:_MAX_CANDIDATES]:
+                for pos_cands in self.project.returned_functions(t):
+                    for c in pos_cands:
+                        out.append((c, ()))
+            return out
+        if isinstance(expr, ast.Attribute):
+            cands = self.project.resolve_attr_call(expr.value, expr.attr, mod)
+            return [(c, ()) for c in cands[:_MAX_CANDIDATES]]
+        return []
+
+    def _resolve_local_assign(self, name: str, mod: ModuleInfo,
+                              scope: Optional[FuncInfo]
+                              ) -> List[Tuple[FuncInfo, Tuple[str, ...]]]:
+        """Follow ``name = functools.partial(...)`` / ``name = other`` /
+        tuple-unpack-from-builder assignments in the enclosing scopes."""
+        out: List[Tuple[FuncInfo, Tuple[str, ...]]] = []
+        s = scope
+        while s is not None and not out:
+            for node in ast.walk(s.node):
+                if not isinstance(node, ast.Assign):
+                    continue
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name) and tgt.id == name:
+                        out.extend(self._resolve_funcexpr(node.value, mod, s))
+                    elif isinstance(tgt, ast.Tuple):
+                        names = [e.id if isinstance(e, ast.Name) else None
+                                 for e in tgt.elts]
+                        if name in names and isinstance(node.value, ast.Call):
+                            idx = names.index(name)
+                            for fi, _ in self._resolve_funcexpr(
+                                    node.value, mod, s):
+                                out.append((fi, ()))
+                            # tuple-unpack from a builder: pick position
+                            cands = self._builder_position(node.value, mod, s,
+                                                           idx)
+                            if cands:
+                                out = [(c, ()) for c in cands]
+            s = s.parent
+        return out
+
+    def _builder_position(self, call: ast.expr, mod: ModuleInfo,
+                          scope: Optional[FuncInfo], idx: int
+                          ) -> List[FuncInfo]:
+        if not isinstance(call, ast.Call):
+            return []
+        targets: List[FuncInfo] = []
+        if isinstance(call.func, ast.Name):
+            targets = self.project.resolve_name(call.func.id, mod, scope)
+        elif isinstance(call.func, ast.Attribute):
+            targets = self.project.resolve_attr_call(
+                call.func.value, call.func.attr, mod)
+        out: List[FuncInfo] = []
+        for t in targets[:_MAX_CANDIDATES]:
+            rets = self.project.returned_functions(t)
+            if idx < len(rets):
+                out.extend(rets[idx])
+        return out
+
+    # --------------------------------------------------------- analysis core
+    def _analyze_entry(self, fi: FuncInfo, static: Sequence[str]) -> None:
+        statics = set(static) | ALWAYS_STATIC_PARAMS
+        reg = lookup_entry(fi.module.rel, fi.qualname)
+        if reg is not None:
+            statics |= set(reg.static)
+        traced = frozenset(p for p in fi.params() if p not in statics)
+        self._analyze(fi, traced, {}, 0)
+
+    def _analyze(self, fi: FuncInfo, traced: FrozenSet[str],
+                 closure: Dict[str, bool], depth: int) -> bool:
+        """Run the dataflow over one function; returns whether its return
+        value is traced.  Memoized on (function, traced params, traced
+        closure names)."""
+        key = (id(fi.node), traced,
+               frozenset(k for k, v in closure.items() if v))
+        if key in self._memo:
+            return self._memo[key]
+        if key in self._active or depth > _MAX_DEPTH \
+                or self._n_analyses > _MAX_ANALYSES:
+            return bool(traced)               # recursion/limit: best guess
+        self._active.add(key)
+        self._n_analyses += 1
+        walker = _Walker(self, fi, traced, closure, depth)
+        result = walker.walk()
+        self._active.discard(key)
+        self._memo[key] = result
+        return result
+
+    def emit(self, fi: FuncInfo, node: ast.AST, code: str,
+             message: str) -> None:
+        line = getattr(node, "lineno", fi.line)
+        self.findings.add(Finding(fi.module.rel, line, code, message))
+
+
+class _Walker:
+    """Single-function traced-ness dataflow + violation detection."""
+
+    def __init__(self, lint: TracerLint, fi: FuncInfo,
+                 traced_params: FrozenSet[str], closure: Dict[str, bool],
+                 depth: int):
+        self.lint = lint
+        self.fi = fi
+        self.closure = closure
+        self.depth = depth
+        self.bound: Set[str] = set(fi.params())
+        self._collect_bound(fi.body())
+        self.traced: Set[str] = set(traced_params)
+        self.mutable_free: Set[str] = set()      # global/nonlocal decls
+        self.returns_traced = False
+
+    # -------------------------------------------------------------- binding
+    def _collect_bound(self, body: Sequence[ast.stmt]) -> None:
+        for stmt in body:
+            for node in ast.walk(stmt):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.Lambda)) and node is not stmt:
+                    continue
+                if isinstance(node, ast.Assign):
+                    for t in node.targets:
+                        self.bound.update(assigned_names(t))
+                elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                    self.bound.update(assigned_names(node.target))
+                elif isinstance(node, ast.For):
+                    self.bound.update(assigned_names(node.target))
+                elif isinstance(node, ast.With):
+                    for item in node.items:
+                        if item.optional_vars is not None:
+                            self.bound.update(
+                                assigned_names(item.optional_vars))
+                elif isinstance(node, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)):
+                    self.bound.add(node.name)
+                elif isinstance(node, ast.comprehension):
+                    self.bound.update(assigned_names(node.target))
+
+    def _snapshot_closure(self) -> Dict[str, bool]:
+        env = dict(self.closure)
+        for name in self.bound:
+            env[name] = name in self.traced
+        return env
+
+    # ----------------------------------------------------------- statements
+    def walk(self) -> bool:
+        self._visit_body(self.fi.body())
+        return self.returns_traced
+
+    def _visit_body(self, body: Sequence[ast.stmt]) -> None:
+        for stmt in body:
+            self._visit(stmt)
+
+    def _visit(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, ast.Assign):
+            t = self.is_traced(stmt.value)
+            for tgt in stmt.targets:
+                self._bind(tgt, t)
+        elif isinstance(stmt, ast.AnnAssign):
+            t = self.is_traced(stmt.value) if stmt.value is not None else False
+            self._bind(stmt.target, t)
+        elif isinstance(stmt, ast.AugAssign):
+            t = self.is_traced(stmt.value)
+            if isinstance(stmt.target, ast.Name):
+                was = stmt.target.id in self.traced
+                self._bind(stmt.target, t or was)
+            else:
+                self._bind(stmt.target, t)
+        elif isinstance(stmt, ast.If):
+            if self.is_traced(stmt.test):
+                self._emit(stmt, "T101",
+                           "Python `if` on traced value "
+                           f"`{_src(stmt.test)}`")
+            self._visit_body(stmt.body)
+            self._visit_body(stmt.orelse)
+        elif isinstance(stmt, ast.While):
+            if self.is_traced(stmt.test):
+                self._emit(stmt, "T102",
+                           "Python `while` on traced value "
+                           f"`{_src(stmt.test)}`")
+            for _ in range(2):                  # fixpoint-lite
+                self._visit_body(stmt.body)
+            self._visit_body(stmt.orelse)
+        elif isinstance(stmt, ast.For):
+            it = self.is_traced(stmt.iter)
+            self._bind(stmt.target, it)
+            for _ in range(2):
+                self._visit_body(stmt.body)
+            self._visit_body(stmt.orelse)
+        elif isinstance(stmt, ast.Return):
+            if stmt.value is not None and self.is_traced(stmt.value):
+                self.returns_traced = True
+        elif isinstance(stmt, ast.Expr):
+            self.is_traced(stmt.value)
+        elif isinstance(stmt, ast.Assert):
+            if self.is_traced(stmt.test):
+                self._emit(stmt, "T107",
+                           f"assert on traced value `{_src(stmt.test)}`")
+            if stmt.msg is not None:
+                self.is_traced(stmt.msg)
+        elif isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            fi = self.lint._func_info_for(stmt, self.fi.module, self.fi)
+            for dec in stmt.decorator_list:
+                self.is_traced(dec)
+            if stmt.decorator_list and fi is not None:
+                # decorated nested def (pl.when idiom): runs at trace time
+                self.lint._analyze(fi, frozenset(), self._snapshot_closure(),
+                                   self.depth + 1)
+        elif isinstance(stmt, (ast.Global, ast.Nonlocal)):
+            self.mutable_free.update(stmt.names)
+        elif isinstance(stmt, ast.With):
+            for item in stmt.items:
+                self.is_traced(item.context_expr)
+                if item.optional_vars is not None:
+                    self._bind(item.optional_vars, False)
+            self._visit_body(stmt.body)
+        elif isinstance(stmt, ast.Try):
+            self._visit_body(stmt.body)
+            for h in stmt.handlers:
+                self._visit_body(h.body)
+            self._visit_body(stmt.orelse)
+            self._visit_body(stmt.finalbody)
+        elif isinstance(stmt, ast.Raise):
+            if stmt.exc is not None:
+                self.is_traced(stmt.exc)
+
+    def _bind(self, target: ast.expr, traced: bool) -> None:
+        if isinstance(target, ast.Name):
+            if traced:
+                self.traced.add(target.id)
+            else:
+                self.traced.discard(target.id)
+            return
+        if isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._bind(e, traced)
+            return
+        if isinstance(target, ast.Starred):
+            self._bind(target.value, traced)
+            return
+        # subscript / attribute store: mutation — flag when the base is
+        # captured non-traced Python state (T106); traced refs are fine
+        base = _base_name(target)
+        if base is not None and self._is_free_nontraced(base):
+            self._emit(target, "T106",
+                       f"mutation of captured `{_src(target)}` inside a "
+                       "jitted body (runs at trace time, not per call)")
+        if isinstance(target, (ast.Subscript, ast.Attribute)):
+            self.is_traced(target.value)
+
+    def _is_free_nontraced(self, name: str) -> bool:
+        if name in self.traced:
+            return False
+        if name in self.mutable_free:
+            return True
+        if name in self.bound:
+            return False
+        return not self.closure.get(name, False)
+
+    # ---------------------------------------------------------- expressions
+    def is_traced(self, expr: Optional[ast.expr]) -> bool:
+        if expr is None:
+            return False
+        if isinstance(expr, ast.Constant):
+            return False
+        if isinstance(expr, ast.Name):
+            if expr.id in self.traced:
+                return True
+            if expr.id in self.bound:
+                return False
+            return self.closure.get(expr.id, False)
+        if isinstance(expr, ast.Attribute):
+            base = self.is_traced(expr.value)
+            if expr.attr in STATIC_RESULT_ATTRS:
+                return False
+            return base
+        if isinstance(expr, ast.Subscript):
+            return self.is_traced(expr.value) or self.is_traced(expr.slice)
+        if isinstance(expr, ast.Slice):
+            return any(self.is_traced(e)
+                       for e in (expr.lower, expr.upper, expr.step))
+        if isinstance(expr, ast.BinOp):
+            return self.is_traced(expr.left) | self.is_traced(expr.right)
+        if isinstance(expr, ast.UnaryOp):
+            return self.is_traced(expr.operand)
+        if isinstance(expr, ast.BoolOp):
+            return any(self.is_traced(v) for v in expr.values)
+        if isinstance(expr, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in expr.ops):
+                self.is_traced(expr.left)
+                return False
+            if all(isinstance(op, (ast.In, ast.NotIn)) for op in expr.ops) \
+                    and isinstance(expr.left, ast.Constant) \
+                    and isinstance(expr.left.value, str):
+                return False                   # `"key" in pytree_dict`
+            return self.is_traced(expr.left) or any(
+                self.is_traced(c) for c in expr.comparators)
+        if isinstance(expr, ast.Call):
+            return self._handle_call(expr)
+        if isinstance(expr, ast.IfExp):
+            if self.is_traced(expr.test):
+                self._emit(expr, "T101",
+                           "conditional expression on traced value "
+                           f"`{_src(expr.test)}`")
+            return self.is_traced(expr.body) or self.is_traced(expr.orelse)
+        if isinstance(expr, (ast.Tuple, ast.List, ast.Set)):
+            return any(self.is_traced(e) for e in expr.elts)
+        if isinstance(expr, ast.Dict):
+            return any(self.is_traced(v) for v in expr.values) or any(
+                self.is_traced(k) for k in expr.keys if k is not None)
+        if isinstance(expr, ast.JoinedStr):
+            for v in expr.values:
+                if isinstance(v, ast.FormattedValue) \
+                        and self.is_traced(v.value):
+                    self._emit(v, "T105",
+                               "f-string interpolation of traced value "
+                               f"`{_src(v.value)}`")
+            return False
+        if isinstance(expr, ast.Starred):
+            return self.is_traced(expr.value)
+        if isinstance(expr, ast.Lambda):
+            return False
+        if isinstance(expr, (ast.ListComp, ast.SetComp, ast.GeneratorExp,
+                             ast.DictComp)):
+            return self._handle_comp(expr)
+        if isinstance(expr, ast.FormattedValue):
+            return self.is_traced(expr.value)
+        return False
+
+    def _handle_comp(self, expr) -> bool:
+        it_traced = False
+        for gen in expr.generators:
+            gt = self.is_traced(gen.iter)
+            it_traced |= gt
+            self._bind(gen.target, gt)
+            for cond in gen.ifs:
+                if self.is_traced(cond):
+                    self._emit(cond, "T101",
+                               "comprehension filter on traced value "
+                               f"`{_src(cond)}`")
+        if isinstance(expr, ast.DictComp):
+            return (self.is_traced(expr.key) or self.is_traced(expr.value)
+                    or it_traced)
+        return self.is_traced(expr.elt) or it_traced
+
+    # ---------------------------------------------------------------- calls
+    def _handle_call(self, call: ast.Call) -> bool:
+        name = dotted_name(call.func) or ""
+        arg_traced = [self.is_traced(a) for a in call.args]
+        kw_traced = {kw.arg: self.is_traced(kw.value)
+                     for kw in call.keywords}
+        any_arg = any(arg_traced) or any(kw_traced.values())
+
+        # ---- direct violation patterns
+        if name in ("int", "float", "bool", "complex") and any_arg:
+            self._emit(call, "T103",
+                       f"{name}() coercion of traced value "
+                       f"`{_src(call.args[0])}`")
+            return False
+        if name in ("np.asarray", "np.array", "numpy.asarray",
+                    "numpy.array", "onp.asarray", "onp.array") and any_arg:
+            self._emit(call, "T104",
+                       "np.asarray() host sync of traced value "
+                       f"`{_src(call.args[0])}`")
+            return True
+        if name == "print" and any_arg:
+            self._emit(call, "T105",
+                       "print() of traced value inside a jitted body")
+            return False
+        if name == "range" and any_arg:
+            self._emit(call, "T108",
+                       "range() bound by traced value "
+                       f"`{_src(call.args[0])}`")
+            return False
+        if isinstance(call.func, ast.Attribute):
+            recv_traced = self.is_traced(call.func.value)
+            attr = call.func.attr
+            if attr in ("item", "tolist") and recv_traced:
+                self._emit(call, "T104",
+                           f".{attr}() host sync of traced value "
+                           f"`{_src(call.func.value)}`")
+                return False
+            if attr == "format" and any_arg:
+                self._emit(call, "T105",
+                           "str.format interpolation of a traced value")
+                return False
+            if attr in _LOG_METHODS and any_arg \
+                    and _base_name(call.func) in ("logging", "logger",
+                                                  "log", "LOG"):
+                self._emit(call, "T105",
+                           "logging interpolation of a traced value")
+                return False
+            if attr in _MUTATORS \
+                    and attr not in self.lint.project.methods_by_name:
+                # a project class defining `attr` (e.g. Model.extend) means
+                # this is a method call, not a list/set/dict mutation
+                base = _base_name(call.func)
+                if base is not None and self._is_free_nontraced(base):
+                    self._emit(call, "T106",
+                               f"mutation of captured "
+                               f"`{_src(call.func.value)}.{attr}(...)` "
+                               "inside a jitted body (trace-time side "
+                               "effect)")
+                return recv_traced or any_arg
+
+        if name in STATIC_RESULT_CALLS:
+            return False
+
+        # ---- interprocedural: resolve and analyze callees
+        resolved = self._resolve_and_recurse(call, arg_traced, kw_traced)
+        # ---- callbacks: function-valued args handed to control flow /
+        # vmap get analyzed conservatively (all params traced,
+        # partial-bound kwargs static).  partial/jit/pallas_call args are
+        # NOT callbacks here: partial exprs are analyzed where *used* (so
+        # their bound kwargs stay static) and jit/pallas sites are entry
+        # points with their own static handling in discovery.
+        if name not in _PARTIAL_NAMES and name not in _JIT_NAMES \
+                and name not in _PALLAS_NAMES:
+            for a in list(call.args) + [kw.value for kw in call.keywords]:
+                self._analyze_callback(a)
+        if resolved is not None:
+            return resolved
+        recv = (self.is_traced(call.func.value)
+                if isinstance(call.func, ast.Attribute) else False)
+        return any_arg or recv
+
+    def _resolve_and_recurse(self, call: ast.Call,
+                             arg_traced: List[bool],
+                             kw_traced: Dict[Optional[str], bool]
+                             ) -> Optional[bool]:
+        cands: List[FuncInfo] = []
+        method = False
+        if isinstance(call.func, ast.Name):
+            cands = self.lint.project.resolve_name(
+                call.func.id, self.fi.module, self.fi)
+        elif isinstance(call.func, ast.Attribute):
+            cands = self.lint.project.resolve_attr_call(
+                call.func.value, call.func.attr, self.fi.module)
+            method = True
+        if not cands:
+            return None
+        result = False
+        for fi in cands[:_MAX_CANDIDATES]:
+            params = fi.params()
+            if method and params[:1] == ["self"]:
+                params = params[1:]
+            traced = set()
+            for i, t in enumerate(arg_traced):
+                if t and i < len(params):
+                    traced.add(params[i])
+            for k, t in kw_traced.items():
+                if t and k in params:
+                    traced.add(k)
+            closure = (self._snapshot_closure()
+                       if fi.module is self.fi.module else {})
+            result |= self.lint._analyze(fi, frozenset(traced), closure,
+                                         self.depth + 1)
+        return result
+
+    def _analyze_callback(self, expr: ast.expr) -> None:
+        if isinstance(expr, (ast.Name, ast.Lambda)) \
+                or (isinstance(expr, ast.Call)
+                    and dotted_name(expr.func) in _PARTIAL_NAMES):
+            for fi, bound in self.lint._resolve_funcexpr(
+                    expr, self.fi.module, self.fi):
+                traced = frozenset(p for p in fi.params() if p not in bound
+                                   and p not in ALWAYS_STATIC_PARAMS)
+                closure = (self._snapshot_closure()
+                           if fi.module is self.fi.module else {})
+                self.lint._analyze(fi, traced, closure, self.depth + 1)
+
+    def _emit(self, node: ast.AST, code: str, message: str) -> None:
+        self.lint.emit(self.fi, node, code, message)
+
+
+def _own_walk(roots: Sequence[ast.AST]):
+    """Walk nodes without descending into nested function/lambda bodies
+    (those belong to the inner scope and are walked separately)."""
+    stack: List[ast.AST] = list(roots)
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _base_name(expr: ast.expr) -> Optional[str]:
+    while isinstance(expr, (ast.Attribute, ast.Subscript)):
+        expr = expr.value
+    if isinstance(expr, ast.Name):
+        return expr.id
+    return None
+
+
+def _src(expr: ast.AST) -> str:
+    try:
+        text = ast.unparse(expr)
+    except Exception:                            # pragma: no cover
+        return "<expr>"
+    return text if len(text) <= 40 else text[:37] + "..."
+
+
+def run(project: Project) -> List[Finding]:
+    """Entry point used by the driver: all tracer-safety findings."""
+    return TracerLint(project).run()

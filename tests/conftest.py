@@ -9,3 +9,14 @@ import pytest
 @pytest.fixture(autouse=True)
 def _seed_numpy():
     np.random.seed(0)
+
+
+def pytest_runtest_setup(item):
+    # compile_guard tests assert on XLA compile counts; on jax builds that
+    # emit no monitoring events the counter stays at 0 and every assertion
+    # would pass vacuously — skip loudly instead
+    if "compile_guard" in item.keywords:
+        from repro.analysis import compilation_events_available
+        if not compilation_events_available():
+            pytest.skip("jax.monitoring compilation events unavailable "
+                        "on this backend")

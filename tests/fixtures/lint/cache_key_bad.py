@@ -1,0 +1,36 @@
+"""Seeded jit-cache-key violations; test_analysis asserts the codes.
+
+Editing this file moves line numbers — update tests/test_analysis.py.
+"""
+import jax
+
+
+class Engine:
+    def __init__(self):
+        self._fn_cache = {}
+        self.weights = [1.0, 2.0]
+
+    def build(self, b, t, extra):        # K201 (extra) @ line 13
+        fn = self._fn_cache.get((b,))
+        if fn is None:
+            def inner(x, flag):
+                if flag:                 # K202 (flag) @ line 17
+                    x = x * 2
+                return x * b * t * extra
+
+            fn = jax.jit(inner, static_argnames=("nope",))  # K203 @ line 21
+            self._fn_cache[(b, t)] = fn  # K205 @ line 22
+        return fn
+
+    def build2(self, b):
+        fn = self._fn_cache.get(b)
+        if fn is None:
+            for w in self.weights:
+                pass
+
+            def inner2(x):               # K204 (captures w) @ line 31
+                return x * w
+
+            fn = jax.jit(inner2)
+            self._fn_cache[b] = fn
+        return fn

@@ -1,0 +1,52 @@
+"""Tracer-SAFE idioms the analyzer must NOT flag (false-positive guard).
+
+Every pattern here appears in the real serving stack: static ``.shape``
+reads, ``is None`` checks, string-key pytree membership, range() over a
+static bound, ref-mutation inside a Pallas-style nested def, and a
+correctly-keyed compiled-fn cache.
+"""
+import jax
+import jax.numpy as jnp
+
+
+def safe(x, n):
+    b = int(x.shape[0])                  # .shape is static — no T103
+    if n > 2:                            # n is static_argnames — no T101
+        x = x + 1.0
+    if x is None:                        # identity compare — no T101
+        return jnp.zeros((n,))
+    mask = jnp.where(x > 0, x, 0.0)
+    for i in range(b):                   # static range — no T108
+        mask = mask + i
+    return mask
+
+
+fn = jax.jit(safe, static_argnames=("n",))
+
+
+def outer(x):
+    acc = {"v": x}
+
+    def step():
+        acc["v"] = acc["v"] * 2.0        # traced base — no T106
+
+    step()
+    return acc["v"]
+
+
+fn2 = jax.jit(outer)
+
+
+class Cache:
+    def __init__(self):
+        self._c = {}
+
+    def build(self, m):
+        fn = self._c.get(m)
+        if fn is None:
+            def inner(x):
+                return x * m
+
+            fn = jax.jit(inner)
+            self._c[m] = fn              # key covers every builder param
+        return fn

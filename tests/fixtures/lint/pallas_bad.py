@@ -1,0 +1,38 @@
+"""Seeded Pallas kernel-contract violations; test_analysis asserts codes.
+
+Editing this file moves line numbers — update tests/test_analysis.py.
+"""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, o_ref, acc_ref):
+    o_ref[...] = x_ref[...]
+
+
+def bad_call(x):
+    return pl.pallas_call(
+        _kernel,
+        grid=(4, 4),
+        in_specs=[pl.BlockSpec((7, 100), lambda i: (i, 0))],  # P301+P303 @ 19
+        out_specs=pl.BlockSpec((8, 128), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((64, 512), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((4096, 4096), jnp.float32)],  # P304
+    )(x)
+
+
+def bad_spec_call(x, lens):
+    return pl.pallas_call(                     # P302 + P305 (overlap) @ 26
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(4,),
+            in_specs=[pl.BlockSpec((8, 128), lambda i, l: (i, 0))],
+            out_specs=pl.BlockSpec((8, 128), lambda i, l: (i, 0)),
+            scratch_shapes=[pltpu.VMEM((8, 128), jnp.float32)],
+        ),
+        grid=(4,),
+        out_shape=jax.ShapeDtypeStruct((32, 128), jnp.float32),
+    )(lens, x)

@@ -1,0 +1,31 @@
+"""Seeded tracer-safety violations; test_analysis asserts codes AND lines.
+
+Editing this file moves line numbers — update tests/test_analysis.py.
+"""
+import jax
+
+
+def leaky(x, n):
+    if x > 0:                            # T101 @ line 9
+        x = x + 1
+    while x < n:                         # T102 @ line 11
+        x = x + 1
+    k = int(x)                           # T103 @ line 13
+    v = x.item()                         # T104 @ line 14
+    s = f"value={x}"                     # T105 @ line 15
+    assert x >= 0                        # T107 @ line 16
+    for i in range(x):                   # T108 @ line 17
+        k = k + i
+    return x + k + v + len(s)
+
+
+log = []
+
+
+def mutator(x):
+    log.append(x)                        # T106 @ line 26
+    return x * 2
+
+
+fn = jax.jit(leaky)
+fn2 = jax.jit(mutator)

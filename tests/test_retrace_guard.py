@@ -1,0 +1,114 @@
+"""Runtime retrace-freedom: the compile guard proves the zero-retrace
+discipline at the XLA level, not just via the engine's own trace logs.
+
+The static analyzer (repro.analysis) shows the *code* cannot leak
+tracers; these tests show the *runtime* stops compiling once warm:
+steady-state rounds, occupancy churn, same-bucket admissions and whole
+repeated continuous streams compile nothing, and a genuinely new
+admission bucket compiles exactly one program.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import compile_guard
+from repro.configs.base import ModelConfig
+from repro.core.proposer import ModelProposer
+from repro.core.spec_decode import SDEngine
+from repro.models.model import Model
+from repro.serving.engine import ServingEngine
+
+pytestmark = [pytest.mark.tier1, pytest.mark.compile_guard]
+
+TCFG = ModelConfig("rg-moe", "moe", 2, 128, 4, 2, 256, 512, num_experts=4,
+                   num_experts_per_tok=2, dtype="float32")
+DCFG = ModelConfig("rg-draft", "dense", 2, 64, 2, 2, 128, 512,
+                   dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def models():
+    t, d = Model(TCFG), Model(DCFG)
+    return t, d, t.init(jax.random.PRNGKey(0)), d.init(jax.random.PRNGKey(1))
+
+
+@pytest.fixture()
+def session(models):
+    t, d, pt, pd = models
+    eng = SDEngine(t, ModelProposer(t, d), gamma=2)
+    prompts = jnp.asarray(np.tile(np.arange(3, 9), (4, 1)))
+    state = eng.start(pt, pd, prompts, max_seq=64)
+    return eng, state
+
+
+def test_steady_state_rounds_never_recompile(session):
+    eng, state = session
+    for _ in range(2):                            # warmup builds the round
+        state, _ = eng.round(state)
+    traces = len(eng.trace_log)
+    with compile_guard() as guard:
+        for _ in range(5):
+            state, _ = eng.round(state)
+    assert guard.count == 0
+    assert len(eng.trace_log) == traces           # and no silent retrace
+
+
+def test_occupancy_churn_is_data_not_shape(session):
+    """Flipping the active mask between rounds (slot retire/refill) must
+    reuse the one compiled round — active rows are data."""
+    eng, state = session
+    state, _ = eng.round(state)                   # warmup, all active
+    masks = ([1, 1, 0, 0], [1, 0, 1, 1], [0, 1, 0, 1])
+    with compile_guard() as guard:
+        for m in masks:
+            state, _ = eng.round(state, active=np.asarray(m, bool))
+    assert guard.count == 0
+
+
+def test_admissions_within_bucket_never_recompile(session):
+    eng, state = session
+    prompts = jnp.asarray(np.tile(np.arange(3, 9), (1, 1)))   # R=1 bucket
+    lengths = np.array([6])
+    state = eng.admit_rows(state, prompts, lengths, np.array([1]))  # warm
+    with compile_guard() as guard:
+        for row in (2, 3, 0):                     # refills: rows are data
+            state = eng.admit_rows(state, prompts, lengths, np.array([row]))
+    assert guard.count == 0
+
+
+def test_new_row_bucket_compiles_exactly_once(session):
+    eng, state = session
+    one = jnp.asarray(np.tile(np.arange(3, 9), (1, 1)))
+    state = eng.admit_rows(state, one, np.array([6]), np.array([1]))
+    admits = len(eng.admit_trace_log)
+    two = jnp.asarray(np.tile(np.arange(3, 9), (2, 1)))       # new R bucket
+    with compile_guard() as guard:
+        state = eng.admit_rows(state, two, np.array([6, 6]),
+                               np.array([0, 1]))
+    assert len(eng.admit_trace_log) == admits + 1  # one new jit signature
+    assert guard.count == 1                        # exactly one XLA program
+    # and the freshly-built bucket is itself steady from the first reuse
+    with compile_guard() as guard2:
+        state = eng.admit_rows(state, two, np.array([6, 6]),
+                               np.array([2, 3]))
+    assert guard2.count == 0
+
+
+def test_continuous_stream_steady_state(models):
+    """A second identical-shape request stream through the SAME serving
+    engine (ContinuousScheduler; mixed budgets, admissions inside one
+    prompt bucket) compiles nothing: the warm stream covered every
+    (round, admission) signature."""
+    t, d, pt, pd = models
+    eng = ServingEngine(t, d, pt, pd, max_batch=2, gamma=2, force_sd=True,
+                        scheduler="continuous")
+    for m in (3, 7, 5):
+        eng.submit(np.arange(3, 9), max_new_tokens=m)
+    eng.run()                                     # warm stream
+    with compile_guard() as guard:
+        for m in (4, 6, 5):
+            eng.submit(np.arange(3, 9), max_new_tokens=m)
+        eng.run()
+    assert guard.count == 0
+    assert eng.session_constructions == {"model": 1}
