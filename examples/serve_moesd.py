@@ -102,6 +102,8 @@ def main():
           f"{te['target_efficiency']:.2f} (CPU wall-clock)")
     print(f"tuner's final alpha estimate: {tuner.alpha:.2f}")
     for kind, s in eng.session_stats().items():
+        if kind == "resilience":
+            continue              # fault counters (empty on healthy waves)
         print(f"session[{kind}]: constructed {s['constructions']}x for "
               f"{len(eng.reports)} waves, gammas compiled "
               f"{s['gammas_compiled']}, {len(s['traces'])} round traces")

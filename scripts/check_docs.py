@@ -77,12 +77,18 @@ DOCUMENTED_API = [
                                  "ContinuousScheduler.run_stream",
                                  "SlotState", "StepReport",
                                  "submit_poisson"]),
+    ("repro.serving.faults", ["logits_finite", "poison_cache_row",
+                              "FaultInjector", "FaultInjector.poisson",
+                              "FaultInjector.page_service",
+                              "ResilienceConfig", "Fault"]),
     ("repro.models.model", ["merge_cache_rows", "scatter_cache_rows",
                             "PageAllocator", "grow_cache_pages",
-                            "grow_cache_seq", "Model.init_cache"]),
+                            "grow_cache_seq", "Model.init_cache",
+                            "PageAllocator.reserve", "PageAllocator.release",
+                            "PageAllocator.assert_no_leaks"]),
     ("repro.core.analytics", ["occupancy_timeline",
                               "predicted_decay_speedup",
-                              "admission_work"]),
+                              "admission_work", "fault_recovery_summary"]),
     ("repro.kernels.gmm.ops", ["gmm", "gmm_legacy", "moe_ffn_gmm",
                                "expert_capacity"]),
     ("repro.models.moe", ["moe_forward", "warm_experts", "PrefetchPlan"]),

@@ -23,4 +23,9 @@ timeout 300 python -m repro.launch.serve --arch qwen2-57b-a14b --reduced \
   --requests 4 --max-batch 2 --max-new 6 --gamma 2 --mixed-max-new 4,6 \
   --scheduler continuous --arrival-rate 1.0 --no-autotune \
   --prefill-chunk 4 --kv-layout paged --page-size 16
+# fault-injection smoke: a seeded injector stream (page exhaustion +
+# preemption/requeue, NaN quarantine, slow round, admission retry) must
+# complete with the expected finish_reasons, zero leaked pages, and a
+# zero-compile replay on the warm engine (docs/faults.md)
+timeout 300 python -m repro.serving.faults
 exec timeout "${CI_TIMEOUT:-600}" python -m pytest -q -m tier1 "$@"

@@ -81,6 +81,9 @@ KNOWN_ENTRY_POINTS: Tuple[KnownEntry, ...] = (
     KnownEntry("models/moe.py", "warm_experts", static=("cfg",)),
     KnownEntry("models/attention.py", "attention_forward",
                static=("cfg",)),
+    # numerical sentinel (serving/faults.py) — runs inside the jitted
+    # verify stage on the raw logits every round
+    KnownEntry("serving/faults.py", "logits_finite"),
     # batched rejection sampling (the REJECT stage) — temperature is a
     # Python float by contract (the greedy branch is a trace-time choice)
     KnownEntry("core/rejection.py", "rejection_sample",

@@ -153,3 +153,53 @@ def predicted_decay_speedup(live, gammas, speedup_fn, committed=None):
     return {"per_round": per_round,
             "mean": float(per_round.mean()),
             "token_weighted": float((per_round * w).sum())}
+
+
+def fault_recovery_summary(steps):
+    """Fault/recovery accounting over one continuous stream's StepReports.
+
+    Pure-numpy reduction of the resilience fields the scheduler threads
+    through ``StepReport`` (serving/scheduler.py): totals per disruption
+    kind, the fraction of rounds disrupted, and the RECOVERY LATENCY of
+    every preemption — the number of rounds from a ``preempted > 0``
+    boundary until the next boundary that re-admits a requeued request
+    (an ``admitted > 0`` round after it).  Benchmarks plot its mean
+    against the injected fault rate (benchmarks/fault_sweep.py); a stream
+    whose preemptions never re-admit reports latency ``inf`` — visible,
+    not silently dropped.
+
+    Parameters
+    ----------
+    steps : sequence of StepReport
+        One stream's per-round reports, in round order.
+
+    Returns
+    -------
+    dict
+        ``{"rounds", "preempted", "faults", "timeouts", "deferred",
+        "disrupted_rounds", "disrupted_fraction",
+        "recovery_latency_rounds": [..], "mean_recovery_latency"}``.
+    """
+    pre = np.asarray([s.preempted for s in steps], np.int64)
+    fau = np.asarray([s.faults for s in steps], np.int64)
+    tim = np.asarray([s.timeouts for s in steps], np.int64)
+    def_ = np.asarray([s.deferred for s in steps], np.int64)
+    adm = np.asarray([s.admitted for s in steps], np.int64)
+    n = len(pre)
+    disrupted = (pre > 0) | (fau > 0) | (tim > 0) | (def_ > 0)
+    latencies = []
+    for i in np.nonzero(pre > 0)[0]:
+        after = np.nonzero(adm[i + 1:] > 0)[0]
+        latencies.append(float(after[0] + 1) if after.size else float("inf"))
+    return {
+        "rounds": int(n),
+        "preempted": int(pre.sum()),
+        "faults": int(fau.sum()),
+        "timeouts": int(tim.sum()),
+        "deferred": int(def_.sum()),
+        "disrupted_rounds": int(disrupted.sum()),
+        "disrupted_fraction": float(disrupted.sum() / max(n, 1)),
+        "recovery_latency_rounds": latencies,
+        "mean_recovery_latency": (float(np.mean(latencies))
+                                  if latencies else 0.0),
+    }

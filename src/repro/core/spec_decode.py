@@ -91,6 +91,7 @@ from repro.core.proposer import Proposer, make_proposer
 from repro.core.rejection import probs_from_logits, rejection_sample, sample_from
 from repro.models.model import Model
 from repro.models.moe import warm_experts as moe_warm_experts
+from repro.serving.faults import logits_finite
 
 
 def _device_cast(x, np_dtype):
@@ -199,7 +200,11 @@ class RoundResult:
     tokens per sequence (g <= gamma); ``pf`` the prefetch hit/actual/
     predicted counts (prefetch-aware proposers, else None);
     ``phase_times`` the propose/verify/reject/warm wall times (timed
-    rounds only, else None).
+    rounds only, else None).  ``finite`` (B,) is the numerical
+    sentinel's verdict on this round's raw verify logits
+    (serving/faults.logits_finite): a False row committed NOTHING this
+    round (quarantined inside ``finalize``) and should be retired by the
+    caller with ``finish_reason="numerical_fault"``.
     """
     committed: np.ndarray
     n_commit: np.ndarray
@@ -209,6 +214,7 @@ class RoundResult:
     pf: Optional[Dict[str, int]]
     round_time: float
     phase_times: Optional[Dict[str, float]] = None
+    finite: Optional[np.ndarray] = None
 
 
 @dataclass
@@ -295,6 +301,9 @@ class SDEngine:
         def propose(params, p_state, last_token, k_prop):
             return proposer.propose(params, p_state, last_token, gamma, k_prop)
 
+        # the numerical sentinel reads RAW verify logits: the greedy
+        # probs_from_logits branch is one_hot(argmax), and argmax of an
+        # all-NaN row returns a valid index — probabilities hide faults
         if pf_aware:
             def verify(params_t, t_cache, last_token, drafts, plan):
                 verify_tokens = jnp.concatenate([last_token[:, None], drafts],
@@ -303,7 +312,8 @@ class SDEngine:
                     params_t, verify_tokens, t_cache, plan, collect=True)
                 if not proposer.needs_hidden:
                     hidden = None
-                return probs_from_logits(logits, temp), hidden, pend, pf
+                return (probs_from_logits(logits, temp), hidden, pend, pf,
+                        logits_finite(logits))
         else:
             def verify(params_t, t_cache, last_token, drafts):
                 verify_tokens = jnp.concatenate([last_token[:, None], drafts],
@@ -315,18 +325,23 @@ class SDEngine:
                     logits, pend = target.extend(params_t, verify_tokens,
                                                  t_cache, collect=True)
                     hidden = None
-                return probs_from_logits(logits, temp), hidden, pend, None
+                return (probs_from_logits(logits, temp), hidden, pend, None,
+                        logits_finite(logits))
 
         def finalize(params, pend, p_state, base_len, p_dist, q_dist, drafts,
-                     hidden, last_token, active, k_rej):
+                     hidden, last_token, active, finite, k_rej):
             B, g = drafts.shape
             n_accept, next_token, _ = rejection_sample(
                 p_dist, q_dist, drafts, k_rej, temp)
             # inactive (retired) rows commit nothing: lengths stay frozen
             # and last_token is carried over, so the row is shape-stable
-            # padding until admit() refills it
-            n_accept = jnp.where(active, n_accept, 0)
-            n_commit = jnp.where(active, n_accept + 1, 0)
+            # padding until admit() refills it.  Non-finite rows are
+            # quarantined the same way — zero commits keep the fault out
+            # of the caches and out of co-batched rows' bookkeeping; the
+            # scheduler reads RoundResult.finite and retires them.
+            ok = jnp.logical_and(active, finite)
+            n_accept = jnp.where(ok, n_accept, 0)
+            n_commit = jnp.where(ok, n_accept + 1, 0)
             t_cache = target.commit(pend, n_commit, collected=True)
             verify_tokens = jnp.concatenate([last_token[:, None], drafts], 1)
             p_state = proposer.commit(
@@ -338,7 +353,7 @@ class SDEngine:
                 [drafts, jnp.zeros((B, 1), drafts.dtype)], 1)
             committed = jnp.where(slot < n_accept[:, None], drafts_pad,
                                   next_token[:, None])          # (B, g+1)
-            new_last = jnp.where(active, next_token, last_token)
+            new_last = jnp.where(ok, next_token, last_token)
             return (t_cache, p_state, new_last, committed, n_commit, n_accept)
 
         return propose, verify, finalize
@@ -365,12 +380,12 @@ class SDEngine:
                 base_len = t_cache["lengths"]
                 drafts, q_dist, p_work = propose(params, p_state, last_token,
                                                  k_prop)
-                p_dist, hidden, pend, pf = verify(params["target"], t_cache,
-                                                  last_token, drafts)
+                p_dist, hidden, pend, pf, finite = verify(
+                    params["target"], t_cache, last_token, drafts)
                 out = finalize(params, pend, p_work, base_len, p_dist,
                                q_dist, drafts, hidden, last_token, active,
-                               k_rej)
-                return out + (pf,)
+                               finite, k_rej)
+                return out + (finite, pf)
 
             fn = jax.jit(round_fn)
             self._round_cache[gamma] = fn
@@ -557,11 +572,11 @@ class SDEngine:
                     phases["warm"] = time.perf_counter() - t0
             t0 = time.perf_counter()
             if pf_aware:
-                p_dist, hidden, pend, pf = j_verify(
+                p_dist, hidden, pend, pf, finite = j_verify(
                     params["target"], t_cache, last_token, drafts,
                     p_work["plan"])
             else:
-                p_dist, hidden, pend, pf = j_verify(
+                p_dist, hidden, pend, pf, finite = j_verify(
                     params["target"], t_cache, last_token, drafts)
             if timed:
                 jax.block_until_ready(p_dist)
@@ -569,15 +584,15 @@ class SDEngine:
             t0 = time.perf_counter()
             (t_cache, p_state, last_token, committed, n_commit, n_acc) = \
                 j_fin(params, pend, p_work, base_len, p_dist, q_dist,
-                      drafts, hidden, last_token, active, k_rej)
+                      drafts, hidden, last_token, active, finite, k_rej)
             if timed:
                 jax.block_until_ready(committed)
                 phases["reject"] = time.perf_counter() - t0
         else:
             fn = self._round_fn(gamma)
             (t_cache, p_state, last_token, committed, n_commit, n_acc,
-             pf) = fn(params, state.t_cache, state.p_state, state.last_token,
-                      active, k_prop, k_rej)
+             finite, pf) = fn(params, state.t_cache, state.p_state,
+                              state.last_token, active, k_prop, k_rej)
         committed = np.asarray(committed)            # device sync
         n_commit_np = np.asarray(n_commit)
         round_time = time.perf_counter() - t_round
@@ -591,7 +606,8 @@ class SDEngine:
             committed=committed, n_commit=n_commit_np,
             n_accept=np.asarray(n_acc), width=committed.shape[1] - 1,
             gamma=gamma, pf=pf_counts, round_time=round_time,
-            phase_times=phases if timed else None)
+            phase_times=phases if timed else None,
+            finite=np.asarray(finite))
         return new_state, result
 
     # -------------------------------------------------------------- admission
@@ -986,6 +1002,16 @@ class SDEngine:
             key, k_round = jax.random.split(key)
             state, res = self.round(state, gamma=gamma, key=k_round,
                                     timed=timed)
+            if res.finite is not None and not bool(np.all(res.finite)):
+                # Wave mode has no quarantine path: a permanently
+                # non-finite row commits nothing every round and the
+                # min()-driven loop would never terminate.  Fail loudly;
+                # the continuous scheduler is the layer that degrades
+                # gracefully (finish_reason="numerical_fault").
+                bad = np.where(~np.asarray(res.finite))[0].tolist()
+                raise RuntimeError(
+                    f"non-finite verify logits in wave-mode rows {bad}; "
+                    "use the continuous scheduler for quarantine")
             for b in range(B):
                 n = int(res.n_commit[b])
                 w = min(n, out.shape[1] - n_out[b])

@@ -91,6 +91,20 @@ def main():
                          "with on-demand growth (continuous mode)")
     ap.add_argument("--page-size", type=int, default=64,
                     help="positions per KV page with --kv-layout paged")
+    ap.add_argument("--round-deadline-s", type=float, default=None,
+                    help="resilience: per-round wall-clock deadline; "
+                         "slower rounds count toward the degradation "
+                         "ladder (docs/faults.md)")
+    ap.add_argument("--max-rounds-per-request", type=int, default=None,
+                    help="resilience: per-request round budget "
+                         "(finish_reason='timeout' past it)")
+    ap.add_argument("--free-page-watermark", type=float, default=0.0,
+                    help="resilience: defer admissions that would leave "
+                         "the paged pool's free fraction below this")
+    ap.add_argument("--max-pool-pages", type=int, default=None,
+                    help="resilience: hard cap on paged pool growth; at "
+                         "the cap page pressure preempts the youngest "
+                         "slot (vLLM-style recompute requeue)")
     ap.add_argument("--timed", action="store_true",
                     help="record per-phase propose/verify/reject timings")
     ap.add_argument("--no-autotune", action="store_true")
@@ -130,6 +144,12 @@ def main():
     proposer_opts = {}
     if args.proposer == "prefetch" and args.prefetch_top_m is not None:
         proposer_opts["top_m"] = args.prefetch_top_m
+    from repro.serving.faults import ResilienceConfig
+    resilience = ResilienceConfig(
+        round_deadline_s=args.round_deadline_s,
+        max_rounds_per_request=args.max_rounds_per_request,
+        free_page_watermark=args.free_page_watermark,
+        max_pool_pages=args.max_pool_pages)
     eng = ServingEngine(target, draft, params_t, params_d,
                         max_batch=args.max_batch, tuner=tuner,
                         gamma=args.gamma, temperature=args.temperature,
@@ -138,7 +158,8 @@ def main():
                         scheduler=args.scheduler, eos_id=args.eos_id,
                         admit_mode=args.admit_mode,
                         prefill_chunk=args.prefill_chunk,
-                        kv_layout=args.kv_layout, page_size=args.page_size)
+                        kv_layout=args.kv_layout, page_size=args.page_size,
+                        resilience=resilience)
 
     pb = prompt_batch(cfg.vocab_size, args.requests, kind=args.kind,
                       seed=args.seed)
@@ -184,6 +205,11 @@ def main():
                   f"prefill rows, {sum(s.admit_tokens for s in r.steps)} "
                   f"row-tokens ({args.admit_mode})")
     for kind, s in eng.session_stats().items():
+        if kind == "resilience":
+            if s:                 # fault/preemption/recovery counters
+                print("resilience:", " ".join(f"{k}={v}"
+                                              for k, v in sorted(s.items())))
+            continue
         print(f"session[{kind}]: constructed {s['constructions']}x, "
               f"gammas compiled {s['gammas_compiled']}, "
               f"{len(s['traces'])} round traces, "

@@ -190,6 +190,7 @@ class PageAllocator:
         self.max_pages = int(max_pages)
         self.free: List[int] = list(range(1, self.pool_pages))
         self.owned: Dict[int, List[int]] = {}
+        self.reserved: List[int] = []
         self.table = np.zeros((batch, self.max_pages), np.int32)
 
     def pages_for(self, n_positions: int) -> int:
@@ -214,9 +215,80 @@ class PageAllocator:
         self.table[row, :need] = pages
 
     def free_row(self, row: int) -> None:
-        """Return ``row``'s pages to the pool; its table goes to trash."""
-        self.free.extend(self.owned.pop(row, []))
+        """Return ``row``'s pages to the pool; its table goes to trash.
+
+        Freeing a row that owns nothing is a no-op (retired filler rows
+        never allocated), but a page that is ALREADY free — ownership
+        bookkeeping corrupted somewhere — raises instead of silently
+        double-crediting the free list."""
+        pages = self.owned.pop(row, [])
+        dup = set(pages) & set(self.free)
+        if dup:
+            raise ValueError(
+                f"double free: row {row} pages {sorted(dup)} are already "
+                "in the free list — page ownership is corrupted")
+        self.free.extend(pages)
         self.table[row, :] = 0
+
+    def free_fraction(self) -> float:
+        """Fraction of allocatable pages (trash page excluded) currently
+        free — the quantity admission watermarks compare against."""
+        return len(self.free) / max(self.pool_pages - 1, 1)
+
+    def reserve(self, n: int) -> List[int]:
+        """Withdraw ``n`` pages from the free list without assigning them
+        to any row (fault injection / headroom holds).  Reserved pages
+        are real pressure: ``can_alloc``/``alloc`` cannot see them until
+        :meth:`release` returns them."""
+        if n > len(self.free):
+            raise ValueError(f"cannot reserve {n} pages ({len(self.free)} "
+                             "free)")
+        pages = [self.free.pop() for _ in range(n)]
+        self.reserved.extend(pages)
+        return pages
+
+    def release(self, pages: List[int]) -> None:
+        """Return pages taken by :meth:`reserve`.  Releasing a page that
+        was never reserved — or releasing twice — raises: that is a
+        double free in the making."""
+        for p in pages:
+            if p not in self.reserved:
+                raise ValueError(f"release of page {p} that is not "
+                                 "reserved (double release?)")
+            self.reserved.remove(p)
+            if p in self.free:
+                raise ValueError(f"double free: page {p} already in the "
+                                 "free list")
+            self.free.append(p)
+
+    def assert_no_leaks(self) -> None:
+        """End-of-stream invariant: every page is back in the free list.
+
+        After a stream's final ``_free_retired`` (and the fault
+        injector's ``release_all``) no row may own pages, no reservation
+        may be outstanding, the free list must hold exactly
+        ``pool_pages - 1`` pages (all but trash page 0), and every table
+        entry must point at trash.  Raises ``RuntimeError`` listing every
+        violated condition — leaked pages are how long-running serving
+        pools die slowly."""
+        import numpy as np
+        problems = []
+        if self.owned:
+            problems.append(f"rows still own pages: {sorted(self.owned)}")
+        if self.reserved:
+            problems.append(f"outstanding reservations: "
+                            f"{sorted(self.reserved)}")
+        if len(self.free) != self.pool_pages - 1:
+            problems.append(f"free list has {len(self.free)} pages, "
+                            f"expected {self.pool_pages - 1}")
+        if len(set(self.free)) != len(self.free):
+            problems.append("free list contains duplicates")
+        if self.table.any():
+            rows = sorted(set(np.nonzero(self.table)[0].tolist()))
+            problems.append(f"table rows still mapped: {rows}")
+        if problems:
+            raise RuntimeError("PageAllocator leak check failed: "
+                               + "; ".join(problems))
 
     def grown_geometry(self, n_positions: int) -> Tuple[int, int]:
         """(pool_pages, max_pages) after pow2 growth that fits an

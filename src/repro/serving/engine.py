@@ -69,8 +69,17 @@ class Request:
     submitted_at: float = field(default_factory=time.perf_counter)
     finished_at: Optional[float] = None
     sampling: Optional[SamplingParams] = None
-    finish_reason: Optional[str] = None  # "length" | "eos" | "rejected"
+    # "length" | "eos" | "rejected" | "numerical_fault" | "timeout" |
+    # "admit_failed" | "aborted"  (docs/faults.md has the full table)
+    finish_reason: Optional[str] = None
     arrival_round: int = 0               # continuous mode: visible from here
+    # ---- resilience traceability (continuous mode; docs/faults.md) ----
+    preempt_count: int = 0               # times page pressure evicted us
+    requeue_round: Optional[int] = None  # round of the LAST preemption
+    readmit_round: Optional[int] = None  # round of the last re-admission
+    resume_tokens: Optional[List[int]] = None  # committed tokens to replay
+    rounds_used: int = 0                 # decode rounds spent on this slot
+    admit_attempts: int = 0              # transient admission failures seen
 
 
 def finish_output(tokens: np.ndarray, eos_id: Optional[int]):
@@ -101,6 +110,14 @@ class WaveReport:
     moe_dispatch: str = "onehot"          # target's decode dispatch mode
     scheduler: str = "wave"               # "wave" | "continuous"
     steps: Optional[list] = None          # continuous: per-round StepReports
+    # continuous-mode resilience accounting: committed tokens belonging to
+    # requests that did NOT finish cleanly ("rejected"/"timeout"/
+    # "numerical_fault"/"admit_failed"/"aborted") or that were discarded by
+    # a preempt-and-requeue.  Excluded from ``tokens_out`` so tokens/sec
+    # reflects only useful delivered work; never double-counts a requeued
+    # request's recomputed prefix.
+    tokens_discarded: int = 0
+    finish_reasons: Optional[Dict[str, int]] = None  # reason -> count
 
     @property
     def tokens_per_second(self) -> float:
@@ -174,6 +191,8 @@ class ServingEngine:
         page_size: int = 64,                # paged: positions per KV page
         prefill_chunk: Optional[int] = None,  # continuous: chunked prefill
         admit_mode: str = "sliced",         # "sliced" | "full" (legacy)
+        resilience=None,                    # Optional[ResilienceConfig]
+        fault_injector=None,                # Optional[FaultInjector] (tests)
     ):
         if scheduler not in ("wave", "continuous"):
             raise ValueError(f"scheduler must be 'wave' or 'continuous', "
@@ -225,6 +244,21 @@ class ServingEngine:
         self.page_size = page_size
         self.prefill_chunk = prefill_chunk
         self.admit_mode = admit_mode
+        if resilience is None:
+            from repro.serving.faults import ResilienceConfig
+            resilience = ResilienceConfig()
+        if (resilience.round_deadline_s is not None
+                or resilience.max_rounds_per_request is not None
+                or fault_injector is not None) and scheduler != "continuous":
+            raise ValueError(
+                "resilience deadlines and fault injection are continuous-"
+                "scheduler features (wave mode has no per-round requeue "
+                "path); use scheduler='continuous'")
+        self.resilience = resilience
+        self.fault_injector = fault_injector
+        # fault/preemption/recovery counters, filled by the continuous
+        # scheduler and surfaced via session_stats()["resilience"]
+        self.fault_counters: Dict[str, int] = {}
         self.queue: Deque[Request] = deque()
         self.done: Dict[int, Request] = {}
         self.reports: List[WaveReport] = []
@@ -346,8 +380,14 @@ class ServingEngine:
                 Session-lifetime expert-warmup aggregates ``{"hits",
                 "actual", "predicted", "rounds", "hit_rate"}`` summed over
                 all waves (all zero unless the kind is prefetch-aware).
+
+            Plus ONE reserved non-kind entry, ``"resilience"``: the
+            continuous scheduler's fault/preemption/recovery counters
+            (``preemptions``, ``requeues``, ``numerical_faults``,
+            ``slow_rounds``, ``timeouts``, ``admit_deferred``, ... —
+            docs/faults.md).  Empty dict for wave mode / healthy streams.
         """
-        out = {}
+        out = {"resilience": dict(self.fault_counters)}
         for kind, sess in self._sessions.items():
             totals = dict(sess.prefetch_totals)
             totals["hit_rate"] = totals["hits"] / max(totals["actual"], 1)

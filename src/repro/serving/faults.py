@@ -1,0 +1,361 @@
+"""Fault taxonomy, numerical sentinel and deterministic fault injection.
+
+The serving stack's resilience layer (docs/faults.md) is only trustworthy
+if every degraded path is exercised in CI, and degraded paths are — by
+definition — hard to reach from a healthy stream.  This module closes
+that gap with three pieces:
+
+  * ``logits_finite`` — the jitted per-row NUMERICAL SENTINEL the verify
+    stage runs on its raw logits every round (core/spec_decode.py).  It
+    must see the logits BEFORE ``probs_from_logits``: the greedy branch
+    is a one-hot argmax, and argmax of an all-NaN row returns a perfectly
+    valid index — probabilities hide the fault, raw logits cannot.
+  * ``poison_cache_row`` / ``FaultInjector`` — a seeded, scripted
+    injector the continuous scheduler consults at fixed hook points
+    (page pressure, NaN KV, slow rounds, admission failure), so fault
+    handling is tested with DETERMINISTIC replays rather than luck.
+  * ``ResilienceConfig`` — the knobs of the degradation ladder
+    (watermarks, deadlines, budgets, retry/backoff, AR cooldown, safe
+    stop) consumed by ``serving/scheduler.ContinuousScheduler``.
+
+Run ``python -m repro.serving.faults`` for the CI smoke lane: a seeded
+injector stream (page exhaustion + NaN row + slow round) must complete
+with the expected finish_reasons, zero leaked pages, and — replayed on
+the same warm engine — zero XLA compiles under the compile guard.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import _PAGED_LEAF_PAIRS
+
+
+def logits_finite(logits: jnp.ndarray) -> jnp.ndarray:
+    """Per-row finite check on raw verify logits: (B, W, V) → (B,) bool.
+
+    The numerical sentinel of the SD round (core/spec_decode.py): a row
+    is healthy iff EVERY logit it produced this round is finite.  Runs
+    inside the jitted verify stage — one fused reduction, no host sync —
+    and must be evaluated on the raw logits, not on probabilities: the
+    greedy ``probs_from_logits`` path is ``one_hot(argmax)``, and argmax
+    over an all-NaN row still returns a valid index, silently laundering
+    the fault into a legal-looking token.
+    """
+    return jnp.all(jnp.isfinite(logits),
+                   axis=tuple(range(1, logits.ndim)))
+
+
+def poison_cache_row(t_cache: dict, row: int) -> dict:
+    """Return a copy of a target cache with one row's KV set to NaN.
+
+    Fault-injection helper (never on the serving path): NaN-poisons every
+    float leaf of pool row ``row`` so the NEXT verify pass over that row
+    produces non-finite logits — the realistic presentation of a corrupted
+    KV page or an overflowed activation.  Dense leaves (batch on axis 1)
+    poison the whole row; paged leaves poison the physical pages the
+    row's block table currently owns (trash page 0 excluded), so only
+    positions attributable to this row are touched.  Co-batched rows are
+    unaffected: attention masks by position with ``jnp.where`` and MoE
+    routing is per-token, so the NaN cannot leak across rows — exactly
+    the isolation property the quarantine test pins.
+    """
+    pages = t_cache.get("pages")
+    pids = np.zeros((0,), np.int64)
+    if pages is not None:
+        trow = np.asarray(pages["table"])[row]
+        pids = np.unique(trow[trow > 0])
+    paged_keys = {k for k, _ in _PAGED_LEAF_PAIRS}
+    layers = []
+    for slot in t_cache["layers"]:
+        out = {}
+        for k, leaf in slot.items():
+            if not jnp.issubdtype(leaf.dtype, jnp.floating):
+                out[k] = leaf
+            elif k in paged_keys:
+                out[k] = (leaf.at[:, jnp.asarray(pids)].set(jnp.nan)
+                          if pids.size else leaf)
+            else:
+                out[k] = leaf.at[:, row].set(jnp.nan)
+        layers.append(out)
+    return dict(t_cache, layers=layers)
+
+
+@dataclass
+class ResilienceConfig:
+    """Knobs of the continuous scheduler's degradation ladder.
+
+    All defaults are permissive: a default-constructed config changes
+    NOTHING about a healthy stream (no watermark, no deadline, no
+    budgets), so resilience is pay-for-what-you-configure.
+
+    ``round_deadline_s``
+        Per-round wall-clock deadline; a slower round counts as faulty
+        toward the ladder (it is not killed — JAX dispatches are not
+        interruptible — but repeated slow rounds escalate).
+    ``max_rounds_per_request``
+        Per-request round budget; a request still live after this many
+        decode rounds finishes with ``finish_reason="timeout"``.
+    ``free_page_watermark``
+        Admission backpressure: defer an admission that would leave the
+        paged pool's free fraction below this (unless the pool is idle,
+        where deferring could deadlock).  Headroom protects in-flight
+        growth; pair with ``max_pool_pages``.
+    ``max_pool_pages``
+        Hard cap on physical page-pool growth.  Once reached, page
+        pressure is resolved by PREEMPTION (youngest non-protected slot
+        is requeued, vLLM-style recompute) instead of growth.
+    ``admit_retries`` / ``admit_backoff_rounds``
+        Bounded retry for transient admission failures: attempt ``i``
+        requeues the request ``backoff * 2**(i-1)`` rounds out; past the
+        budget it finishes ``admit_failed``.
+    ``faulty_rounds_to_ar`` / ``faulty_rounds_to_stop``
+        The ladder: this many CONSECUTIVE faulty rounds (numerical fault,
+        deadline overrun, or acceptance collapse) force gamma=0 AR
+        rounds; this many force a stream-level safe stop (everything
+        in flight finishes ``aborted`` rather than hanging).
+    ``collapse_alpha``
+        Acceptance-collapse detector: an SD round whose empirical
+        acceptance falls below this counts as faulty (0 disables).
+    ``stall_rounds``
+        Watchdog: this many consecutive no-progress rounds (nothing
+        committed, admitted, or advanced while work is queued) trigger
+        the safe stop — the backstop against admission deadlock.
+    """
+    round_deadline_s: Optional[float] = None
+    max_rounds_per_request: Optional[int] = None
+    free_page_watermark: float = 0.0
+    max_pool_pages: Optional[int] = None
+    admit_retries: int = 3
+    admit_backoff_rounds: int = 1
+    faulty_rounds_to_ar: int = 2
+    faulty_rounds_to_stop: int = 8
+    collapse_alpha: float = 0.0
+    stall_rounds: int = 512
+
+
+@dataclass(frozen=True)
+class Fault:
+    """One scripted fault: ``kind`` fires at decode round ``round``.
+
+    Kinds (the taxonomy in docs/faults.md):
+
+    ``"nan_row"``
+        NaN-poison the KV of pool row ``row`` (default: first active
+        row) before the round decodes → the sentinel quarantines it.
+    ``"page_exhaustion"``
+        Reserve ``pages`` free pages (default: all of them) from the
+        ``PageAllocator`` for ``hold_rounds`` rounds → admissions see
+        real page pressure (watermark deferral / preemption).
+    ``"slow_round"``
+        Sleep ``delay_s`` inside the round's wall-clock window → the
+        round watchdog sees a deadline overrun.
+    ``"admit_fail"``
+        Every admission attempted this round fails transiently → the
+        retry-with-backoff path requeues it.
+    """
+    round: int
+    kind: str
+    row: Optional[int] = None
+    pages: Optional[int] = None
+    hold_rounds: int = 1
+    delay_s: float = 0.0
+
+    KINDS = ("nan_row", "page_exhaustion", "slow_round", "admit_fail")
+
+    def __post_init__(self):
+        if self.kind not in self.KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"one of {self.KINDS}")
+
+
+class FaultInjector:
+    """Seeded, deterministic fault script for one continuous stream.
+
+    The scheduler consults the injector at fixed hook points each round
+    (``page_service`` → ``admission_fails`` → ``nan_rows`` →
+    ``slow_delay``); faults fire exactly at their scripted round, so a
+    fault stream REPLAYS byte-identically — the property every test in
+    tests/test_faults.py and the CI smoke lane rely on.  ``injected``
+    counts fires per kind; an injector is single-use per stream (held
+    pages carry state), build a fresh one per run.
+    """
+
+    def __init__(self, faults=(), *, seed: int = 0):
+        self.faults: Tuple[Fault, ...] = tuple(
+            sorted(faults, key=lambda f: (f.round, f.kind)))
+        self.seed = seed
+        self.injected: Dict[str, int] = {k: 0 for k in Fault.KINDS}
+        self._held: List[Tuple[int, List[int]]] = []   # (release_round, pages)
+
+    @classmethod
+    def poisson(cls, rate: float, n_rounds: int, *, seed: int = 0,
+                kinds: Tuple[str, ...] = ("nan_row", "page_exhaustion")
+                ) -> "FaultInjector":
+        """Build a scripted injector from a Bernoulli(rate)-per-round
+        draw — the benchmark's fault-rate knob.  The script is derived
+        ONCE from the seed (faults at fixed rounds), so two injectors
+        with the same arguments replay identically."""
+        rng = np.random.default_rng(seed)
+        faults = []
+        for r in range(n_rounds):
+            if rng.random() < rate:
+                kind = str(rng.choice(kinds))
+                faults.append(Fault(round=r, kind=kind, hold_rounds=2))
+        return cls(faults, seed=seed)
+
+    def _due(self, round_idx: int, kind: str) -> List[Fault]:
+        return [f for f in self.faults
+                if f.round == round_idx and f.kind == kind]
+
+    # ------------------------------------------------------------- hooks
+    def page_service(self, round_idx: int, alloc) -> None:
+        """Round-start hook: release expired page holds, then apply the
+        holds scripted for this round (reserving real pages from the
+        allocator's free list, so exhaustion is indistinguishable from
+        organic pressure).  Holds are finite by construction — a
+        scripted exhaustion can stall a stream, never deadlock it."""
+        still = []
+        for release_at, pages in self._held:
+            if round_idx >= release_at:
+                alloc.release(pages)
+            else:
+                still.append((release_at, pages))
+        self._held = still
+        for f in self._due(round_idx, "page_exhaustion"):
+            n = len(alloc.free) if f.pages is None \
+                else min(f.pages, len(alloc.free))
+            if n:
+                self._held.append((round_idx + max(f.hold_rounds, 1),
+                                   alloc.reserve(n)))
+                self.injected["page_exhaustion"] += 1
+
+    def release_all(self, alloc) -> None:
+        """End-of-stream hook: return every still-held page so the
+        zero-leak invariant can be asserted unconditionally."""
+        for _, pages in self._held:
+            alloc.release(pages)
+        self._held = []
+
+    def admission_fails(self, round_idx: int) -> bool:
+        """True iff admissions this round are scripted to fail
+        transiently (exercises retry-with-backoff)."""
+        due = self._due(round_idx, "admit_fail")
+        if due:
+            self.injected["admit_fail"] += len(due)
+        return bool(due)
+
+    def nan_rows(self, round_idx: int) -> List[Fault]:
+        """The NaN-poison faults scripted for this round (the scheduler
+        resolves ``row=None`` to the first active row and applies
+        :func:`poison_cache_row`)."""
+        due = self._due(round_idx, "nan_row")
+        self.injected["nan_row"] += len(due)
+        return due
+
+    def slow_delay(self, round_idx: int) -> float:
+        """Seconds of scripted stall inside this round's wall-clock
+        window (0.0 on healthy rounds)."""
+        total = sum(f.delay_s for f in self._due(round_idx, "slow_round"))
+        if total:
+            self.injected["slow_round"] += 1
+        return total
+
+
+# --------------------------------------------------------------------------
+# CI smoke lane: seeded fault stream + zero-compile replay
+# --------------------------------------------------------------------------
+
+def _smoke_injector() -> FaultInjector:
+    return FaultInjector([
+        Fault(round=2, kind="page_exhaustion", hold_rounds=3),
+        Fault(round=6, kind="nan_row"),
+        Fault(round=7, kind="slow_round", delay_s=0.03),
+        Fault(round=1, kind="admit_fail"),
+    ], seed=0)
+
+
+def _smoke_engine():
+    import jax
+    from repro.configs.base import ModelConfig
+    from repro.models.model import Model
+    from repro.serving.engine import ServingEngine
+    tcfg = ModelConfig("fault-moe", "moe", 2, 128, 4, 2, 256, 512,
+                       num_experts=4, num_experts_per_tok=2,
+                       dtype="float32")
+    dcfg = ModelConfig("fault-draft", "dense", 2, 64, 2, 2, 128, 512,
+                       dtype="float32")
+    t, d = Model(tcfg), Model(dcfg)
+    pt, pd = t.init(jax.random.PRNGKey(0)), d.init(jax.random.PRNGKey(1))
+    # ladder thresholds far above what the script can reach: warmup rounds
+    # pay compile time (deadline overruns), and an AR handoff mid-warmup
+    # would give warmup and replay different commit schedules — the replay
+    # must retrace nothing, so both runs must take identical round shapes
+    return ServingEngine(
+        t, d, pt, pd, max_batch=3, gamma=2, force_sd=True,
+        scheduler="continuous", kv_layout="paged", page_size=8,
+        resilience=ResilienceConfig(round_deadline_s=0.02,
+                                    max_pool_pages=16,
+                                    faulty_rounds_to_ar=64,
+                                    faulty_rounds_to_stop=128))
+
+
+def _smoke_submit(eng):
+    # budgets long enough that slots are still live when the round-6 NaN
+    # and round-7 slow faults fire, even if every draft is accepted
+    eng.submit(np.arange(3, 9), max_new_tokens=24)
+    eng.submit(np.arange(4, 10), max_new_tokens=16, arrival_round=0)
+    eng.submit(np.arange(5, 11), max_new_tokens=16, arrival_round=1)
+    eng.submit(np.arange(6, 12), max_new_tokens=12, arrival_round=4)
+
+
+def _smoke_stream(eng):
+    eng.fault_injector = _smoke_injector()
+    _smoke_submit(eng)
+    reports = eng.run()
+    reasons = sorted(r.finish_reason for r in eng.done.values())
+    assert "numerical_fault" in reasons, reasons
+    assert all(rr in ("length", "eos", "numerical_fault")
+               for rr in reasons), reasons
+    assert eng.fault_injector.injected["page_exhaustion"] >= 1
+    assert eng.fault_injector.injected["slow_round"] >= 1
+    assert eng.fault_counters["slow_rounds"] >= 1, eng.fault_counters
+    assert eng.fault_counters["preemptions"] >= 1, eng.fault_counters
+    assert eng.fault_counters["requeues"] >= 1, eng.fault_counters
+    eng.done.clear()
+    return reports
+
+
+def main() -> int:
+    """Fault-injection smoke: the scripted stream completes with the
+    expected finish_reasons and zero leaked pages, and a REPLAY on the
+    same warm engine performs zero XLA compiles (the fault paths are
+    data, not shapes)."""
+    from repro.analysis import compilation_events_available, compile_guard
+    eng = _smoke_engine()
+    _smoke_stream(eng)                       # warmup: pays every compile
+    eng._slot_scheduler._alloc.assert_no_leaks()
+    if compilation_events_available():
+        with compile_guard() as guard:
+            _smoke_stream(eng)
+        if guard.count:
+            raise SystemExit(
+                f"fault smoke: replay compiled {guard.count}x; fault "
+                "handling must be data, not shapes")
+        print("fault smoke: OK (expected finish_reasons, zero leaked "
+              "pages, zero replay compiles)")
+    else:
+        _smoke_stream(eng)
+        print("fault smoke: OK (expected finish_reasons, zero leaked "
+              "pages; compile telemetry unavailable)")
+    eng._slot_scheduler._alloc.assert_no_leaks()
+    counters = dict(eng.fault_counters)
+    print(f"fault smoke counters: {counters}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -78,6 +78,27 @@ def submit_poisson(engine: "ServingEngine", prompts, lengths, *,
 
     Returns the submitted uids in arrival order.
     """
+    rate = float(rate)
+    if not np.isfinite(rate) or rate < 0:
+        raise ValueError(
+            f"arrival rate must be a finite value >= 0, got {rate!r} "
+            "(rate=0 submits the whole workload at round 0; a positive "
+            "rate is mean arrivals per decode round)")
+    if len(lengths) == 0:
+        raise ValueError("submit_poisson: empty workload (no lengths)")
+    if len(prompts) < len(lengths):
+        raise ValueError(
+            f"submit_poisson: {len(prompts)} prompts for {len(lengths)} "
+            "lengths — every length needs a prompt row")
+    if not max_new_choices:
+        raise ValueError("submit_poisson: max_new_choices must be "
+                         "non-empty")
+    for i in range(len(lengths)):
+        if int(lengths[i]) < 1:
+            raise ValueError(
+                f"submit_poisson: prompt {i} is empty (length "
+                f"{int(lengths[i])}); prefill needs >= 1 token — drop it "
+                "from the workload instead")
     rng = np.random.default_rng(seed)
     t, uids = 0.0, []
     for i in range(len(lengths)):
@@ -97,13 +118,16 @@ class SlotState:
     ``active`` rows advance in SD rounds; inactive rows are shape-stable
     padding awaiting admission.  ``tokens`` accumulates the request's
     generated ids (the admission prefill's sampled token first), ``n_out``
-    counts them against the request's ``max_new_tokens``.
+    counts them against the request's ``max_new_tokens``.  ``admit_seq``
+    is the stream-global admission sequence number — preemption picks its
+    victim by it (youngest admitted, oldest protected).
     """
     index: int
     request: Optional["Request"] = None
     active: bool = False
     n_out: int = 0
     tokens: List[int] = field(default_factory=list)
+    admit_seq: int = -1
 
 
 @dataclass
@@ -117,6 +141,12 @@ class StepReport:
     are the rows and row-tokens the boundary's admission prefills actually
     processed (chunked-prefill chunk steps included) — the work the sliced
     path keeps ∝ what was admitted.
+
+    Resilience fields (docs/faults.md; all zero on a healthy round):
+    ``preempted`` slots evicted for page pressure at this boundary,
+    ``faults`` rows quarantined by the numerical sentinel, ``timeouts``
+    requests retired over their round budget, ``deferred`` admissions
+    pushed back by watermark backpressure or transient admission failure.
     """
     round_index: int
     live: int
@@ -128,6 +158,10 @@ class StepReport:
     round_time: float
     admit_rows: int = 0
     admit_tokens: int = 0
+    preempted: int = 0
+    faults: int = 0
+    timeouts: int = 0
+    deferred: int = 0
 
 
 @dataclass
@@ -155,15 +189,50 @@ class ContinuousScheduler:
         self.engine = engine
         self.pool = slots if slots is not None else engine.max_batch
         self._alloc: Optional[PageAllocator] = None
+        self._admit_seq = 0                  # stream-global admission order
+        self._hiwater: dict = {}             # uid -> max tokens ever committed
+        self._consec_faulty = 0
+        self._consec_stall = 0
+        self._forced_ar = False
 
     # ------------------------------------------------------------- admission
-    def _admissible(self, round_idx: int) -> bool:
+    def _pop_admissible(self, round_idx: int) -> Optional["Request"]:
+        """Pop the first queued request visible at this round.
+
+        Scans past non-admissible entries instead of head-checking: retry
+        backoff and preemption requeue push ``arrival_round`` into the
+        future, and a deferred request at the head must not block
+        admissible work behind it."""
         q = self.engine.queue
-        return bool(q) and q[0].arrival_round <= round_idx
+        for i, r in enumerate(q):
+            if r.arrival_round <= round_idx:
+                del q[i]
+                return r
+        return None
+
+    def _has_admissible(self, round_idx: int) -> bool:
+        return any(r.arrival_round <= round_idx for r in self.engine.queue)
 
     def _need(self, r: "Request") -> int:
-        """Cache positions request ``r`` can touch over its lifetime."""
+        """Cache positions request ``r`` can touch over its lifetime.
+
+        Re-admission after preemption needs no extra margin: the resumed
+        tokens it recompute-prefills count against the same
+        ``max_new_tokens`` budget they were first committed under."""
         return len(r.prompt) + r.max_new_tokens + self._g_max + 2
+
+    def _admit_toks(self, r: "Request") -> np.ndarray:
+        """The tokens a (re-)admission prefills: the prompt, plus — after
+        a preemption — the already-committed tokens, so the recompute
+        prefill reconstructs the row's KV exactly where it left off."""
+        if r.resume_tokens:
+            return np.concatenate([np.asarray(r.prompt, np.int32),
+                                   np.asarray(r.resume_tokens, np.int32)])
+        return np.asarray(r.prompt, np.int32)
+
+    def _count(self, name: str, n: int = 1) -> None:
+        c = self.engine.fault_counters
+        c[name] = c.get(name, 0) + n
 
     def _bucket(self, n: int) -> int:
         return _pow2_at_least(n) if self.engine.bucket_batches else n
@@ -211,37 +280,141 @@ class ContinuousScheduler:
                      table=jnp.asarray(self._alloc.table))
         return dc_replace(state, t_cache=dict(state.t_cache, pages=pages))
 
-    def _ensure_capacity(self, sess, state: SessionState, r: "Request",
-                         chunking: List["_Chunking"]) -> SessionState:
-        """Paged: make the session able to hold ``r`` — grow the logical
-        capacity and/or the physical pool (pow2) if it cannot.  In-flight
-        chunked admissions' compact caches are padded along, so their
-        final scatter still matches the grown session."""
+    def _grow(self, sess, state: SessionState, pool_pages: int,
+              max_pages: int, chunking: List["_Chunking"]) -> SessionState:
+        """Adopt a grown paged geometry: pad the session's page pool /
+        logical capacity, mirror it in the allocator, and pad in-flight
+        chunked admissions' compact caches so their final scatter still
+        matches the grown session."""
         from repro.models.model import grow_cache_seq
-        need = self._need(r)
         alloc = self._alloc
-        if need > state.max_seq or not alloc.can_alloc(need):
-            pool_pages, max_pages = alloc.grown_geometry(need)
-            new_cap = max_pages * alloc.page_size
-            state = sess.grow_session(state, new_cap,
-                                      pool_pages=pool_pages,
-                                      max_pages=max_pages)
-            alloc.grow(pool_pages, max_pages)
-            state = self._sync_table(state)
-            for c in chunking:
-                if c.pa.t_cache is not None:
-                    c.pa = dc_replace(c.pa, t_cache=grow_cache_seq(
-                        c.pa.t_cache, self.engine.target.cfg, new_cap))
+        new_cap = max_pages * alloc.page_size
+        state = sess.grow_session(state, new_cap, pool_pages=pool_pages,
+                                  max_pages=max_pages)
+        alloc.grow(pool_pages, max_pages)
+        state = self._sync_table(state)
+        for c in chunking:
+            if c.pa.t_cache is not None:
+                c.pa = dc_replace(c.pa, t_cache=grow_cache_seq(
+                    c.pa.t_cache, self.engine.target.cfg, new_cap))
         return state
 
-    def _reject(self, r: "Request") -> None:
-        """Refuse one request without killing the stream (dense layout:
-        the cache was sized at stream start and cannot hold it)."""
-        r.output = np.zeros((0,), np.int32)
-        r.finish_reason = "rejected"
+    def _headroom_ok(self, need_pages: int, live: int) -> bool:
+        """Watermark backpressure check: would admitting ``need_pages``
+        leave the pool's free fraction above the configured watermark?
+        Always true on an idle pool — deferring the only admissible work
+        for headroom's sake would deadlock the stream."""
+        wm = self.engine.resilience.free_page_watermark
+        if wm <= 0 or live == 0:
+            return True
+        alloc = self._alloc
+        left = len(alloc.free) - need_pages
+        return left / max(alloc.pool_pages - 1, 1) >= wm
+
+    def _preempt_victim(self, slots: List[SlotState],
+                        incoming: "Request") -> Optional[SlotState]:
+        """The youngest non-protected active slot, or None.
+
+        Protected: the OLDEST admitted slot (head-of-line work always
+        completes, so page pressure cannot livelock the stream), and the
+        whole pool when the incoming request has itself been preempted —
+        an already-requeued request waits for organic frees instead of
+        starting an eviction cycle."""
+        if incoming.preempt_count > 0:
+            return None
+        cands = [s for s in slots if s.active and s.request is not None]
+        if len(cands) < 2:
+            return None
+        cands.sort(key=lambda s: s.admit_seq)
+        return cands[-1]
+
+    def _preempt(self, slot: SlotState, round_idx: int) -> None:
+        """Evict one active slot under page pressure (vLLM-style
+        recompute preemption): its pages return to the pool, the request
+        requeues with its committed tokens saved in ``resume_tokens`` so
+        re-admission recompute-prefills ``prompt + committed`` — no
+        progress is lost, only recomputed."""
+        r = slot.request
+        r.resume_tokens = list(slot.tokens)
+        r.preempt_count += 1
+        r.requeue_round = round_idx
+        r.arrival_round = round_idx + 1      # not re-admissible this round
+        self._hiwater[r.uid] = max(self._hiwater.get(r.uid, 0),
+                                   len(slot.tokens))
+        slot.request = None
+        slot.active = False
+        slot.tokens = []
+        self._alloc.free_row(slot.index)     # table row -> trash page 0
+        self._table_dirty = True
+        self.engine.queue.append(r)
+        self._count("preemptions")
+        self._round_preempted += 1
+
+    def _make_room(self, sess, state: SessionState, r: "Request",
+                   chunking: List["_Chunking"], round_idx: int, live: int,
+                   slots: List[SlotState]
+                   ) -> Tuple[SessionState, str]:
+        """Make the paged pool able to admit ``r``; returns a verdict.
+
+        ``"ok"``         — pages are available (caller allocs).
+        ``"defer"``      — transient pressure (watermark, or exhaustion
+                           with no preemptible victim); requeue and retry.
+        ``"impossible"`` — the request cannot fit even a fully-drained
+                           pool at ``max_pool_pages``; reject it.
+
+        Resolution order under pressure: GROW (pow2, the cheap path) while
+        ``max_pool_pages`` allows, then PREEMPT the youngest non-protected
+        slot, then defer.  The loop terminates: every iteration either
+        grows the pool (bounded by the cap) or frees a victim's pages
+        (bounded by the active slot count).
+        """
+        alloc = self._alloc
+        cap = self.engine.resilience.max_pool_pages
+        need = self._need(r)
+        need_pages = alloc.pages_for(need)
+        if cap is not None and need_pages > cap - 1:
+            return state, "impossible"
+        while True:
+            if need > state.max_seq or not alloc.can_alloc(need):
+                pool_pages, max_pages = alloc.grown_geometry(need)
+                if cap is not None and pool_pages > cap:
+                    victim = self._preempt_victim(slots, r)
+                    if victim is None:
+                        return state, "defer"
+                    self._preempt(victim, round_idx)
+                    continue
+                state = self._grow(sess, state, pool_pages, max_pages,
+                                   chunking)
+                continue
+            if not self._headroom_ok(need_pages, live):
+                pool_pages = alloc.pool_pages * 2
+                if cap is not None and pool_pages > cap:
+                    return state, "defer"    # watermark backpressure
+                state = self._grow(sess, state, pool_pages,
+                                   alloc.max_pages, chunking)
+                continue
+            return state, "ok"
+
+    def _finish_request(self, r: "Request", reason: str) -> None:
+        """Finish a request that holds no slot (rejected / admit_failed /
+        aborted from the queue).  A preempted request aborted before
+        re-admission keeps its recoverable prefix as partial output."""
+        if r.finish_reason is not None:
+            raise RuntimeError(
+                f"request {r.uid} already finished "
+                f"{r.finish_reason!r}; refusing to overwrite with "
+                f"{reason!r} — every request finishes exactly once")
+        r.output = np.asarray(list(r.resume_tokens or []), np.int32)
+        r.finish_reason = reason
         r.finished_at = time.perf_counter()
         self.engine.done[r.uid] = r
         self._finished.append(r)
+
+    def _reject(self, r: "Request") -> None:
+        """Refuse one request without killing the stream (dense layout:
+        the cache was sized at stream start and cannot hold it; paged:
+        it cannot fit even a drained pool at ``max_pool_pages``)."""
+        self._finish_request(r, "rejected")
 
     def _admit_batch(self, sess, state: SessionState,
                      batch_in: List[Tuple[SlotState, "Request"]]
@@ -259,7 +432,8 @@ class ContinuousScheduler:
         call actually dispatched.
         """
         eng = self.engine
-        t_new = max(len(r.prompt) for _, r in batch_in)
+        seqs = [self._admit_toks(r) for _, r in batch_in]
+        t_new = max(len(t) for t in seqs)
         Tp = self._bucket(t_new)
         key = eng._next_key()                 # one fresh key per admission
         if eng.admit_mode == "full":
@@ -267,9 +441,9 @@ class ContinuousScheduler:
             toks = np.full((B, Tp), PAD, np.int32)
             lengths = np.ones((B,), np.int32)
             mask = np.zeros((B,), bool)
-            for s, r in batch_in:
-                toks[s.index, : len(r.prompt)] = r.prompt
-                lengths[s.index] = len(r.prompt)
+            for (s, _), t in zip(batch_in, seqs):
+                toks[s.index, : len(t)] = t
+                lengths[s.index] = len(t)
                 mask[s.index] = True
             state = sess.admit(state, toks, lengths, mask, key=key)
             return state, B, B * Tp
@@ -279,9 +453,10 @@ class ContinuousScheduler:
         rows = np.zeros((R,), np.int32)
         valid = np.zeros((R,), bool)
         for i in range(R):
-            s, r = batch_in[i % len(batch_in)]     # pad lanes replicate
-            toks[i, : len(r.prompt)] = r.prompt
-            lengths[i] = len(r.prompt)
+            s, _ = batch_in[i % len(batch_in)]     # pad lanes replicate
+            t = seqs[i % len(batch_in)]
+            toks[i, : len(t)] = t
+            lengths[i] = len(t)
             rows[i] = s.index
             valid[i] = i < len(batch_in)
         state = sess.admit_rows(state, toks, lengths, rows, valid=valid,
@@ -313,6 +488,16 @@ class ContinuousScheduler:
 
     def _finish(self, slot: SlotState, reason: str) -> None:
         r = slot.request
+        if r.finish_reason is not None:
+            raise RuntimeError(
+                f"request {r.uid} already finished {r.finish_reason!r}; "
+                f"refusing to overwrite with {reason!r} — every request "
+                "finishes exactly once")
+        if len(slot.tokens) < self._hiwater.get(r.uid, 0):
+            raise RuntimeError(
+                f"request {r.uid} finishing with {len(slot.tokens)} "
+                f"tokens < high-water {self._hiwater[r.uid]} — committed "
+                "tokens went BACKWARD across a requeue")
         r.output = np.asarray(slot.tokens, np.int32)
         r.finish_reason = reason
         r.finished_at = time.perf_counter()
@@ -381,13 +566,26 @@ class ContinuousScheduler:
         self._finished: List["Request"] = []
         self._retired_rows: List[int] = []
         chunking: List[_Chunking] = []
+        rescfg = eng.resilience
+        inj = eng.fault_injector
+        self._consec_faulty = 0              # ladder state is per-stream
+        self._consec_stall = 0
+        self._forced_ar = False
         used_sd_any = False
+        aborted = False
         first_gamma: Optional[int] = None
         round_idx = 0
         t_start = time.perf_counter()
         while True:
             admit_credited, landed, n_retired = 0, [], 0
-            admit_rows_n, admit_tokens = 0, 0
+            admit_rows_n, admit_tokens, deferred_n = 0, 0, 0
+            faults_n, timeouts_n = 0, 0
+            self._round_preempted = 0
+            self._table_dirty = False
+            had_admissible = self._has_admissible(round_idx)
+            if inj is not None and self._alloc is not None:
+                # scripted page holds: release expired, apply due ones
+                inj.page_service(round_idx, self._alloc)
             # ---- advance chunked admissions: one chunk per round boundary
             for c in list(chunking):
                 R, C = c.pa.prompts.shape[0], c.pa.chunk
@@ -401,34 +599,67 @@ class ContinuousScheduler:
                     c.pa = pa
             # ---- admit: one sliced prefill covers every refill this round
             # (slots whose chunked admission just landed activate below —
-            # reserve them so the refill loop can't double-admit the row)
-            reserved = {c.slot.index for c in chunking} \
+            # reserve them so the refill loop can't double-admit the row;
+            # a preemption inside _make_room frees its victim's slot, so
+            # the free set is recomputed every iteration)
+            claimed = {c.slot.index for c in chunking} \
                 | {s.index for s, _ in landed}
-            free = [s for s in slots
-                    if not s.active and s.index not in reserved]
             batch_in: List[Tuple[SlotState, "Request"]] = []
-            table_dirty = False
-            while free and self._admissible(round_idx):
-                r = eng.queue.popleft()
-                if not paged and self._need(r) > max_seq:
-                    self._reject(r)
-                    continue
-                if paged:
-                    state = self._ensure_capacity(sess, state, r, chunking)
-                    self._alloc.alloc(free[0].index, self._need(r))
-                    table_dirty = True
-                s = free.pop(0)
-                if eng.prefill_chunk and len(r.prompt) > eng.prefill_chunk:
-                    chunking.append(_Chunking(s, r, sess.begin_admit_chunked(
-                        np.asarray(r.prompt)[None, :],
-                        np.array([len(r.prompt)], np.int32),
-                        np.array([s.index], np.int32),
-                        chunk=eng.prefill_chunk, key=eng._next_key())))
-                    continue
-                batch_in.append((s, r))
-            if table_dirty:
-                # one table upload covers every page assignment this round
-                # (nothing reads it before the admission prefill below)
+            live_now = sum(1 for s in slots if s.active)
+            if inj is not None and inj.admission_fails(round_idx):
+                # scripted transient admission failure: bounded
+                # retry-with-backoff for everything admissible this round
+                deferred_n += self._defer_admissible(round_idx)
+            else:
+                while True:
+                    free = [s for s in slots
+                            if not s.active and s.index not in claimed]
+                    if not free:
+                        break
+                    r = self._pop_admissible(round_idx)
+                    if r is None:
+                        break
+                    if not paged and self._need(r) > max_seq:
+                        self._reject(r)
+                        continue
+                    if paged:
+                        state, verdict = self._make_room(
+                            sess, state, r, chunking, round_idx, live_now,
+                            slots)
+                        if verdict == "impossible":
+                            self._reject(r)
+                            continue
+                        if verdict == "defer":
+                            # backpressure applies to the whole boundary
+                            r.arrival_round = round_idx + 1
+                            eng.queue.append(r)
+                            deferred_n += 1
+                            self._count("admit_deferred")
+                            break
+                        free = [s for s in slots
+                                if not s.active and s.index not in claimed]
+                        self._alloc.alloc(free[0].index, self._need(r))
+                        self._table_dirty = True
+                    s = free[0]
+                    claimed.add(s.index)
+                    s.admit_seq = self._admit_seq
+                    self._admit_seq += 1
+                    toks = self._admit_toks(r)
+                    if eng.prefill_chunk and len(toks) > eng.prefill_chunk:
+                        chunking.append(_Chunking(
+                            s, r, sess.begin_admit_chunked(
+                                toks[None, :],
+                                np.array([len(toks)], np.int32),
+                                np.array([s.index], np.int32),
+                                chunk=eng.prefill_chunk,
+                                key=eng._next_key())))
+                        continue
+                    batch_in.append((s, r))
+            if self._table_dirty:
+                # one table upload covers every page assignment AND every
+                # preemption this round: a freed victim's row must point
+                # at trash page 0 before the next decode, or its frozen
+                # lane would write into pages the pool has re-issued
                 state = self._sync_table(state)
             if batch_in:
                 state, rows_n, toks_n = self._admit_batch(sess, state,
@@ -440,7 +671,16 @@ class ContinuousScheduler:
                 first = np.asarray(state.last_token)
                 for s, r in landed:
                     s.request, s.active = r, True
-                    s.n_out, s.tokens = 0, []
+                    resume = list(r.resume_tokens or [])
+                    # a re-admission resumes the committed stream: the
+                    # recompute prefill already holds these tokens' KV,
+                    # and crediting them AGAIN would double-count across
+                    # the requeue — preload, don't re-append
+                    s.n_out, s.tokens = len(resume), resume
+                    if resume:
+                        r.readmit_round = round_idx
+                        r.resume_tokens = None
+                        self._count("requeues")
                     # the admission prefill's sample is the first token
                     admit_credited += self._append(s, [int(first[s.index])])
             n_retired = sum(1 for s, r in landed if not s.active)
@@ -455,9 +695,16 @@ class ContinuousScheduler:
                     steps.append(StepReport(round_idx, 0, 0, False,
                                             admit_credited, len(landed),
                                             n_retired, 0.0, admit_rows_n,
-                                            admit_tokens))
+                                            admit_tokens,
+                                            preempted=self._round_preempted,
+                                            deferred=deferred_n))
                 self._free_retired()
                 if not eng.queue and not chunking:
+                    break
+                if self._note_stall(had_admissible,
+                                    landed or admit_rows_n or n_retired):
+                    aborted = True
+                    self._abort(slots, chunking)
                     break
                 round_idx += 1                  # idle: awaiting arrivals
                 continue
@@ -470,6 +717,11 @@ class ContinuousScheduler:
             if eng.force_sd is not None:
                 use_sd = eng.force_sd
             if kind == "none":
+                use_sd = False
+            if self._forced_ar:
+                # degradation ladder rung 1: repeated faulty rounds force
+                # plain AR (gamma=0 in the SAME session) until a healthy
+                # round clears the cooldown — overrides even force_sd
                 use_sd = False
             if not use_sd:
                 gamma = 0                       # in-session SD→AR handoff
@@ -485,10 +737,37 @@ class ContinuousScheduler:
                 first_gamma = gamma
             used_sd_any |= use_sd
 
+            # ---- scripted pre-round faults (testing only; inj is None in
+            # production streams)
+            t_r0 = time.perf_counter()
+            if inj is not None:
+                from repro.serving.faults import poison_cache_row
+                for f in inj.nan_rows(round_idx):
+                    row = f.row if f.row is not None else next(
+                        (s.index for s in slots if s.active), None)
+                    if row is not None:
+                        state = dc_replace(state, t_cache=poison_cache_row(
+                            state.t_cache, row))
+                delay = inj.slow_delay(round_idx)
+                if delay:
+                    time.sleep(delay)
+
             # ---- one SD round over the pool, retired rows masked out
             state, res = sess.round(state, gamma=gamma, key=eng._next_key(),
                                     active=jnp.asarray(active_mask),
                                     timed=eng.timed)
+            round_wall = time.perf_counter() - t_r0
+
+            # ---- numerical sentinel: quarantine non-finite rows before
+            # crediting (their n_commit is already forced to 0 in-round,
+            # so co-batched slots are untouched)
+            if res.finite is not None and not bool(np.all(res.finite)):
+                for s in slots:
+                    if s.active and not bool(res.finite[s.index]):
+                        self._count("numerical_faults")
+                        self._finish(s, "numerical_fault")
+                        faults_n += 1
+                        n_retired += 1
             credited = 0
             for s in slots:
                 if not s.active:
@@ -497,31 +776,162 @@ class ContinuousScheduler:
                 credited += self._append(s, list(res.committed[s.index, :n]))
                 if not s.active:
                     n_retired += 1
+            # ---- per-request round budgets
+            for s in slots:
+                if not s.active:
+                    continue
+                s.request.rounds_used += 1
+                if (rescfg.max_rounds_per_request is not None
+                        and s.request.rounds_used
+                        >= rescfg.max_rounds_per_request):
+                    self._count("timeouts")
+                    self._finish(s, "timeout")
+                    timeouts_n += 1
+                    n_retired += 1
             self._free_retired()
 
             # live-weighted accounting: retired rows' masked lanes commit
             # nothing, so sigma/alpha describe the work actually requested
             stats.absorb_round(res, live)
-            if use_sd and eng.tuner is not None and res.width and live:
-                eng.tuner.update_alpha(
-                    float(res.n_accept.sum()) / (res.width * live))
+            alpha_round = (float(res.n_accept.sum()) / (res.width * live)
+                           if (use_sd and res.width and live) else None)
+            if alpha_round is not None and eng.tuner is not None:
+                eng.tuner.update_alpha(alpha_round)
             steps.append(StepReport(round_idx, live, gamma, use_sd,
                                     admit_credited + credited,
                                     len(landed), n_retired,
                                     res.round_time, admit_rows_n,
-                                    admit_tokens))
+                                    admit_tokens,
+                                    preempted=self._round_preempted,
+                                    faults=faults_n, timeouts=timeouts_n,
+                                    deferred=deferred_n))
+
+            # ---- degradation ladder: consecutive faulty rounds escalate
+            # healthy → forced AR → stream-level safe stop
+            slow = (rescfg.round_deadline_s is not None
+                    and round_wall > rescfg.round_deadline_s)
+            if slow:
+                self._count("slow_rounds")
+            collapsed = (rescfg.collapse_alpha > 0
+                         and alpha_round is not None
+                         and alpha_round < rescfg.collapse_alpha)
+            if faults_n or slow or collapsed:
+                self._consec_faulty += 1
+                if (not self._forced_ar and self._consec_faulty
+                        >= rescfg.faulty_rounds_to_ar):
+                    self._forced_ar = True
+                    self._count("ar_handoffs")
+                if self._consec_faulty >= rescfg.faulty_rounds_to_stop:
+                    aborted = True
+                    self._abort(slots, chunking)
+                    break
+            else:
+                self._consec_faulty = 0
+                self._forced_ar = False
+            if self._note_stall(had_admissible,
+                                admit_credited + credited or landed
+                                or n_retired or admit_rows_n):
+                aborted = True
+                self._abort(slots, chunking)
+                break
             round_idx += 1
 
+        if inj is not None and self._alloc is not None:
+            inj.release_all(self._alloc)
+        self._check_invariants()
         sess.accumulate_prefetch_totals(stats)
         wall = time.perf_counter() - t_start
-        n_tokens = sum(len(r.output) for r in self._finished)
+        clean = ("length", "eos")
+        n_tokens = sum(len(r.output) for r in self._finished
+                       if r.finish_reason in clean)
+        discarded = sum(len(r.output) for r in self._finished
+                        if r.finish_reason not in clean)
+        reasons: dict = {}
+        for r in self._finished:
+            reasons[r.finish_reason] = reasons.get(r.finish_reason, 0) + 1
+        if aborted:
+            self._count("aborts")
         return WaveReport(
             batch=len(self._finished),
             gamma=first_gamma if first_gamma is not None else 0,
             used_sd=used_sd_any, stats=stats, wall_time=wall,
             tokens_out=n_tokens, proposer=kind, bucket=self.pool,
             moe_dispatch=eng.moe_dispatch, scheduler="continuous",
-            steps=steps)
+            steps=steps, tokens_discarded=discarded,
+            finish_reasons=reasons)
+
+    # ------------------------------------------------------------ resilience
+    def _defer_admissible(self, round_idx: int) -> int:
+        """Bounded retry-with-backoff for a transiently failing admission
+        round: attempt ``i`` pushes a request ``backoff * 2**(i-1)``
+        rounds out; past ``admit_retries`` it finishes ``admit_failed``."""
+        eng = self.engine
+        rescfg = eng.resilience
+        deferred = 0
+        while True:
+            r = self._pop_admissible(round_idx)
+            if r is None:
+                return deferred
+            r.admit_attempts += 1
+            if r.admit_attempts > rescfg.admit_retries:
+                self._count("admit_failures")
+                self._finish_request(r, "admit_failed")
+                continue
+            backoff = max(1, rescfg.admit_backoff_rounds
+                          * 2 ** (r.admit_attempts - 1))
+            r.arrival_round = round_idx + backoff
+            eng.queue.append(r)
+            self._count("admit_retries")
+            deferred += 1
+
+    def _note_stall(self, had_admissible: bool, progress) -> bool:
+        """Stall watchdog: count consecutive rounds where admissible work
+        existed but NOTHING landed, committed, or retired (an admission
+        deadlock — e.g. page pressure with no growable/preemptible way
+        out).  Returns True once the configured budget is exhausted."""
+        if had_admissible and not progress:
+            self._consec_stall += 1
+        else:
+            self._consec_stall = 0
+        if self._consec_stall >= self.engine.resilience.stall_rounds:
+            self._count("stalls")
+            return True
+        return False
+
+    def _abort(self, slots: List[SlotState],
+               chunking: List[_Chunking]) -> None:
+        """Stream-level safe stop (ladder rung 2 / stall watchdog): every
+        in-flight and queued request finishes ``aborted`` — partial
+        output preserved — and every page returns to the pool, so the
+        engine object stays serviceable for the next stream."""
+        for c in list(chunking):
+            if self._alloc is not None:
+                self._alloc.free_row(c.slot.index)
+            self._finish_request(c.request, "aborted")
+        chunking.clear()
+        for s in slots:
+            if s.active:
+                self._finish(s, "aborted")
+        while self.engine.queue:
+            self._finish_request(self.engine.queue.popleft(), "aborted")
+        self._free_retired()
+
+    def _check_invariants(self) -> None:
+        """End-of-stream invariant check (cheap, always on): every request
+        that entered the stream left with exactly ONE finish_reason (the
+        overwrite guards in ``_finish``/``_finish_request`` enforce
+        uniqueness; this checks presence), committed token counts are
+        monotonic across requeues (``_finish`` checks against the
+        high-water marks), and — paged — no page leaked: after the final
+        ``_free_retired`` and the injector's ``release_all`` the
+        allocator must be exactly as full as it started."""
+        for r in self._finished:
+            if r.finish_reason is None:
+                raise RuntimeError(
+                    f"request {r.uid} left the stream without a "
+                    "finish_reason")
+        if self._alloc is not None:
+            self._alloc.assert_no_leaks()
 
     def _free_retired(self) -> None:
         """Return retired rows' pages to the pool (paged layout)."""

@@ -316,3 +316,55 @@ def test_scatter_cache_rows_matches_merge(models):
         for k in lm:
             np.testing.assert_allclose(np.asarray(lm[k]),
                                        np.asarray(ls[k]), rtol=0, atol=0)
+
+
+# ------------------------------------------------------- exhaustion edges
+def test_watermark_backpressure_defers_then_admits(models):
+    """free_page_watermark defers an admission that would drain the pool
+    below the watermark while other slots are live, admits it once the
+    pool idles (watermark never deadlocks an idle pool), and leaks no
+    pages — greedy outputs byte-identical to an unthrottled stream."""
+    from repro.serving.faults import ResilienceConfig
+    t, d, pt, pd = models
+
+    def run(watermarked):
+        res = ResilienceConfig(free_page_watermark=0.5,
+                               max_pool_pages=8) if watermarked else None
+        eng = _engine(t, d, pt, pd, kv_layout="paged", page_size=8,
+                      resilience=res)
+        ua = eng.submit(np.arange(3, 9), max_new_tokens=16)
+        ub = eng.submit(np.arange(4, 10), max_new_tokens=8,
+                        arrival_round=1)
+        eng.run()
+        return eng, (ua, ub)
+
+    ref, (ra, rb) = run(watermarked=False)
+    eng, (ua, ub) = run(watermarked=True)
+    # B's 3 pages would leave 0 of 7 free (< 0.5) while A is live: defer
+    assert eng.fault_counters["admit_deferred"] >= 1
+    for u_ref, u in ((ra, ua), (rb, ub)):
+        assert eng.done[u].finish_reason == "length"
+        np.testing.assert_array_equal(eng.done[u].output,
+                                      ref.done[u_ref].output)
+    # B landed strictly after A retired (the pool idled first)
+    assert eng.done[ub].readmit_round is None  # deferral, not preemption
+    eng._slot_scheduler._alloc.assert_no_leaks()
+
+
+def test_oversize_request_at_pool_cap_rejected(models):
+    """A request that cannot fit even a fully-drained pool at
+    max_pool_pages is rejected (finish_reason="rejected"), not deferred
+    forever; co-streamed work completes and no page leaks."""
+    from repro.serving.faults import ResilienceConfig
+    t, d, pt, pd = models
+    eng = _engine(t, d, pt, pd, kv_layout="paged", page_size=8,
+                  resilience=ResilienceConfig(max_pool_pages=8))
+    ua = eng.submit(np.arange(3, 9), max_new_tokens=8)
+    # 6 + 64 + margin ≈ 10 pages > cap-1 = 7 allocatable: impossible
+    ub = eng.submit(np.arange(3, 9), max_new_tokens=64, arrival_round=1)
+    eng.run()
+    assert eng.done[ub].finish_reason == "rejected"
+    assert len(eng.done[ub].output) == 0
+    assert eng.done[ua].finish_reason == "length"
+    assert len(eng.done[ua].output) == 8
+    eng._slot_scheduler._alloc.assert_no_leaks()

@@ -1,0 +1,265 @@
+"""Resilience layer: preemption/requeue, sentinels, watchdog, injection.
+
+The contracts this PR adds on top of the continuous scheduler
+(docs/faults.md):
+
+  * page-pressure preemption is RECOVERABLE — the preempted request
+    requeues with its committed tokens, recompute-prefills
+    ``prompt + committed`` on re-admission, and finishes with greedy
+    tokens byte-identical to an uninjected stream,
+  * the numerical sentinel QUARANTINES — a NaN row finishes
+    ``numerical_fault`` without perturbing co-batched slots' tokens,
+  * the degradation ladder ESCALATES — repeated faulty rounds force AR
+    and then a stream-level safe stop that aborts cleanly (every request
+    gets exactly one finish_reason, zero pages leak),
+  * accounting stays HONEST — tokens of requests that did not finish
+    cleanly are excluded from tokens/sec, and a requeue never
+    double-counts,
+  * fault injection is DETERMINISTIC — seeded scripts replay exactly.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.analytics import fault_recovery_summary
+from repro.models.model import Model, PageAllocator
+from repro.serving.engine import ServingEngine
+from repro.serving.faults import Fault, FaultInjector, ResilienceConfig
+from repro.serving.scheduler import StepReport, submit_poisson
+
+pytestmark = pytest.mark.tier1
+
+TCFG = ModelConfig("ft-moe", "moe", 2, 128, 4, 2, 256, 512, num_experts=4,
+                   num_experts_per_tok=2, dtype="float32")
+DCFG = ModelConfig("ft-draft", "dense", 2, 64, 2, 2, 128, 512,
+                   dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def models():
+    t, d = Model(TCFG), Model(DCFG)
+    return t, d, t.init(jax.random.PRNGKey(0)), d.init(jax.random.PRNGKey(1))
+
+
+def _engine(t, d, pt, pd, **kw):
+    kw.setdefault("max_batch", 3)
+    kw.setdefault("gamma", 2)
+    kw.setdefault("force_sd", True)
+    kw.setdefault("scheduler", "continuous")
+    return ServingEngine(t, d, pt, pd, **kw)
+
+
+# ------------------------------------------------------ allocator edge cases
+def test_allocator_exhaustion_and_reserve_edges():
+    """Growth request at max_pages, watermark arithmetic, double-free and
+    double-release detection — the host-side page bookkeeping the
+    preemption path leans on."""
+    a = PageAllocator(2, 8, 4, 4)            # 3 allocatable pages
+    assert a.free_fraction() == 1.0
+    a.alloc(0, 16)                           # 2 pages
+    assert not a.can_alloc(17)               # 3 pages > 1 free
+    assert a.free_fraction() == pytest.approx(1 / 3)
+    # growth geometry past the free list stays pow2 and fits the request
+    pool, maxp = a.grown_geometry(17)
+    assert pool >= 8 and maxp >= 4
+    # reserve() is real pressure: alloc cannot see reserved pages
+    held = a.reserve(1)
+    assert not a.can_alloc(8)
+    with pytest.raises(ValueError, match="reserve"):
+        a.reserve(1)                         # nothing left to reserve
+    with pytest.raises(ValueError, match="not.*reserved|reserved"):
+        a.release([99])                      # never-reserved page
+    a.release(held)
+    with pytest.raises(ValueError, match="not.*reserved"):
+        a.release(held)                      # second release = double free
+    a.free_row(0)
+    a.assert_no_leaks()                      # clean end state: no leaks
+    # leak check fires while a row still owns pages
+    a.alloc(1, 8)
+    with pytest.raises(RuntimeError, match="own pages"):
+        a.assert_no_leaks()
+    # double-free detection: a page both owned and free is corruption
+    a.free.append(a.owned[1][0])
+    with pytest.raises(ValueError, match="double free"):
+        a.free_row(1)
+
+
+def test_injector_determinism_and_validation():
+    """Same seed → identical scripted fault rounds; unknown kinds fail."""
+    a = FaultInjector.poisson(0.5, 20, seed=7)
+    b = FaultInjector.poisson(0.5, 20, seed=7)
+    assert a.faults == b.faults
+    c = FaultInjector.poisson(0.5, 20, seed=8)
+    assert a.faults != c.faults              # seed actually matters
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Fault(round=0, kind="meteor_strike")
+
+
+def test_submit_poisson_validation(models):
+    t, d, pt, pd = models
+    eng = _engine(t, d, pt, pd)
+    prompts = np.arange(12).reshape(2, 6) + 3
+    with pytest.raises(ValueError, match="rate"):
+        submit_poisson(eng, prompts, [6, 6], rate=-1.0)
+    with pytest.raises(ValueError, match="empty workload"):
+        submit_poisson(eng, prompts, [], rate=1.0)
+    with pytest.raises(ValueError, match="prompt 1 is empty"):
+        submit_poisson(eng, prompts, [6, 0], rate=1.0)
+    with pytest.raises(ValueError, match="max_new_choices"):
+        submit_poisson(eng, prompts, [6, 6], rate=1.0, max_new_choices=())
+    assert not eng.queue                     # nothing half-submitted
+
+
+# --------------------------------------------------- preemption and requeue
+def test_preemption_requeues_byte_identical(models):
+    """Page pressure at the pool cap preempts the youngest slot; the
+    requeued request recompute-prefills prompt+committed and finishes
+    with byte-identical greedy tokens — and zero pages leak."""
+    t, d, pt, pd = models
+
+    def run(capped):
+        res = ResilienceConfig(max_pool_pages=8) if capped else None
+        eng = _engine(t, d, pt, pd, kv_layout="paged", page_size=8,
+                      resilience=res)
+        ua = eng.submit(np.arange(3, 9), max_new_tokens=16)
+        ub = eng.submit(np.arange(4, 10), max_new_tokens=8, arrival_round=1)
+        uc = eng.submit(np.arange(5, 11), max_new_tokens=8, arrival_round=2)
+        eng.run()
+        return eng, (ua, ub, uc)
+
+    ref, (ra, rb, rc) = run(capped=False)
+    eng, (ua, ub, uc) = run(capped=True)
+    # pool sized for A alone (4 pages of 7); B admits into the remainder;
+    # C's arrival cannot grow past the cap → B (youngest) is preempted
+    assert eng.fault_counters["preemptions"] >= 1
+    assert eng.fault_counters["requeues"] >= 1
+    b = eng.done[ub]
+    assert b.preempt_count == 1
+    assert b.requeue_round is not None
+    assert b.readmit_round is not None and b.readmit_round > b.requeue_round
+    for u_ref, u in ((ra, ua), (rb, ub), (rc, uc)):
+        assert eng.done[u].finish_reason in ("length", "eos")
+        np.testing.assert_array_equal(eng.done[u].output,
+                                      ref.done[u_ref].output)
+    report = eng.reports[-1]
+    assert report.finish_reasons.get("length", 0) == 3
+    assert sum(s.preempted for s in report.steps) >= 1
+    eng._slot_scheduler._alloc.assert_no_leaks()
+
+
+# ------------------------------------------------------ numerical sentinel
+def test_nan_quarantine_isolates_co_batched_rows(models):
+    """A NaN-poisoned row finishes ``numerical_fault``; its co-batched
+    neighbour's greedy tokens are byte-identical to an uninjected run,
+    and the faulted tokens are excluded from tokens_out."""
+    t, d, pt, pd = models
+
+    def run(inject):
+        inj = FaultInjector([Fault(round=2, kind="nan_row", row=0)]) \
+            if inject else None
+        eng = _engine(t, d, pt, pd, max_batch=2, fault_injector=inj)
+        ua = eng.submit(np.arange(3, 9), max_new_tokens=12)
+        ub = eng.submit(np.arange(4, 10), max_new_tokens=12)
+        eng.run()
+        return eng, ua, ub
+
+    ref, ra, rb = run(inject=False)
+    eng, ua, ub = run(inject=True)
+    a, b = eng.done[ua], eng.done[ub]
+    assert a.finish_reason == "numerical_fault"
+    assert len(a.output) < 12                # quarantined mid-stream
+    # the healthy neighbour never saw the fault
+    assert b.finish_reason == "length"
+    np.testing.assert_array_equal(b.output, ref.done[rb].output)
+    # accounting: faulted tokens discarded, not sold as throughput
+    report = eng.reports[-1]
+    assert report.tokens_out == len(b.output)
+    assert report.tokens_discarded == len(a.output)
+    assert sum(s.faults for s in report.steps) == 1
+    assert eng.fault_counters["numerical_faults"] == 1
+
+
+def test_ladder_escalates_to_safe_stop(models):
+    """Consecutive faulty rounds walk the ladder to a stream-level safe
+    stop: in-flight and queued requests finish ``aborted`` — exactly one
+    finish_reason each — instead of hanging."""
+    t, d, pt, pd = models
+    inj = FaultInjector([Fault(round=1, kind="nan_row", row=0),
+                         Fault(round=2, kind="nan_row", row=1)])
+    eng = _engine(t, d, pt, pd, max_batch=2, fault_injector=inj,
+                  resilience=ResilienceConfig(faulty_rounds_to_ar=1,
+                                              faulty_rounds_to_stop=2))
+    for i in range(3):                       # third stays queued (no slot)
+        eng.submit(np.arange(3 + i, 9 + i), max_new_tokens=32)
+    eng.run()
+    reasons = sorted(r.finish_reason for r in eng.done.values())
+    assert reasons == ["aborted", "numerical_fault", "numerical_fault"]
+    assert eng.fault_counters["aborts"] == 1
+    assert eng.fault_counters.get("ar_handoffs", 0) >= 1
+    assert not eng.queue                     # nothing stranded
+
+
+# ------------------------------------------------------- watchdog and retry
+def test_round_budget_timeout(models):
+    """Per-request round budgets retire over-budget slots with
+    ``finish_reason='timeout'`` and keep their tokens out of tokens/sec."""
+    t, d, pt, pd = models
+    eng = _engine(t, d, pt, pd, max_batch=2,
+                  resilience=ResilienceConfig(max_rounds_per_request=1))
+    eng.submit(np.arange(3, 9), max_new_tokens=32)
+    eng.submit(np.arange(4, 10), max_new_tokens=32)
+    eng.run()
+    assert [r.finish_reason for r in eng.done.values()] == \
+        ["timeout", "timeout"]
+    report = eng.reports[-1]
+    assert report.tokens_out == 0
+    assert report.tokens_discarded > 0       # partial work is visible
+    assert eng.fault_counters["timeouts"] == 2
+
+
+def test_admission_retry_backoff_and_exhaustion(models):
+    """Transient admission failures retry with exponential backoff;
+    exceeding the retry budget finishes ``admit_failed``."""
+    t, d, pt, pd = models
+    # fails at round 0 (attempt 1 → retry at 1), 1 (attempt 2 → retry at
+    # 3), 3 (attempt 3 > admit_retries=2 → admit_failed)
+    inj = FaultInjector([Fault(round=r, kind="admit_fail")
+                         for r in (0, 1, 3)])
+    eng = _engine(t, d, pt, pd, fault_injector=inj,
+                  resilience=ResilienceConfig(admit_retries=2))
+    uid = eng.submit(np.arange(3, 9), max_new_tokens=4)
+    eng.run()
+    r = eng.done[uid]
+    assert r.finish_reason == "admit_failed"
+    assert r.admit_attempts == 3
+    assert len(r.output) == 0
+    assert eng.fault_counters["admit_retries"] == 2
+    assert eng.fault_counters["admit_failures"] == 1
+    # a retry budget that survives the same script finishes cleanly
+    inj2 = FaultInjector([Fault(round=0, kind="admit_fail")])
+    eng2 = _engine(t, d, pt, pd, fault_injector=inj2,
+                   resilience=ResilienceConfig(admit_retries=2))
+    uid2 = eng2.submit(np.arange(3, 9), max_new_tokens=4)
+    eng2.run()
+    assert eng2.done[uid2].finish_reason == "length"
+    assert eng2.done[uid2].admit_attempts == 1
+
+
+# ------------------------------------------------------------- accounting
+def test_fault_recovery_summary_reduction():
+    """Pure-numpy recovery-latency reduction over StepReports: the
+    latency of a preemption is rounds until the next re-admission."""
+    mk = lambda i, **kw: StepReport(i, 1, 2, True, 1, kw.pop("admitted", 0),
+                                    0, 0.01, **kw)
+    steps = [mk(0, admitted=2), mk(1, preempted=1), mk(2), mk(3, admitted=1),
+             mk(4, faults=1), mk(5, deferred=2)]
+    s = fault_recovery_summary(steps)
+    assert s["rounds"] == 6 and s["preempted"] == 1 and s["faults"] == 1
+    assert s["deferred"] == 2
+    assert s["recovery_latency_rounds"] == [2.0]
+    assert s["mean_recovery_latency"] == 2.0
+    assert s["disrupted_rounds"] == 3
+    # a preemption that never re-admits is visible, not dropped
+    s2 = fault_recovery_summary([mk(0, preempted=1), mk(1)])
+    assert s2["recovery_latency_rounds"] == [float("inf")]
