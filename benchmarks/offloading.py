@@ -4,7 +4,12 @@ When MoE expert weights are offloaded to host memory (KTransformers-style),
 their load bandwidth drops from HBM (819 GB/s) to PCIe-class DMA; the FFN
 becomes more memory-bound and SD gains a wider, higher window.  Also checks
 the EP observation: more aggregate bandwidth (chips) re-shrinks the
-small-batch SD penalty."""
+small-batch SD penalty.
+
+``run(dry=True)`` evaluates each configuration at two batch points instead
+of the full sweep — a structural smoke (finite, positive speedups; window
+arithmetic) cheap enough for tier-1 tests and CI.
+"""
 from __future__ import annotations
 
 import numpy as np
@@ -15,9 +20,17 @@ from repro.core.analytics import sigma_from_alpha
 from repro.core.simulator import Hardware, Simulator
 
 BATCHES = [1, 2, 4, 8, 16, 32, 64, 128, 256]
+DRY_BATCHES = [1, 8]
 
 
-def run() -> list:
+def run(dry: bool = False) -> list:
+    """Offloading/EP speedup rows; ``dry`` shrinks the batch sweep.
+
+    Every configuration's speedup curve is validated finite and positive
+    before any window arithmetic — a simulator regression (zero bandwidth,
+    overflowed load time) fails HERE with the offending curve instead of
+    surfacing as a nonsense CSV row downstream."""
+    batches = DRY_BATCHES if dry else BATCHES
     rows = []
     target = get_config("qwen2-57b-a14b")
     draft = get_config("qwen2-0.5b")
@@ -27,18 +40,32 @@ def run() -> list:
         ("offload_pcie64", Simulator(expert_offload_bw=64e9)),
         ("offload_pcie16", Simulator(expert_offload_bw=16e9)),
     ):
-        curve = [sim.sd_speedup(target, draft, b, 4, sigma) for b in BATCHES]
+        curve = [sim.sd_speedup(target, draft, b, 4, sigma) for b in batches]
+        if not all(np.isfinite(s) and s > 0 for s in curve):
+            raise RuntimeError(
+                f"offloading: non-finite/non-positive speedup curve for "
+                f"{name}: {curve} — simulator bandwidth/latency terms are "
+                "corrupted")
         i = int(np.argmax(curve))
         thr = curve[i] / np.sqrt(2)
-        win = [b for b, s in zip(BATCHES, curve) if s >= thr]
+        win = [b for b, s in zip(batches, curve) if s >= thr] \
+            or [batches[i]]
         rows.append(csv_row(
             f"offload_{name}", 0.0,
-            f"peak={curve[i]:.2f};peak_B={BATCHES[i]};"
+            f"peak={curve[i]:.2f};peak_B={batches[i]};"
             f"window={min(win)}-{max(win)};B1={curve[0]:.2f}"))
     # EP aggregate-bandwidth observation: 4-chip group recovers small-batch SD
     for chips in (1, 4):
         sim = Simulator(hw=Hardware(num_chips=chips))
         s1 = sim.sd_speedup(target, draft, 1, 4, sigma)
+        if not (np.isfinite(s1) and s1 > 0):
+            raise RuntimeError(
+                f"offloading: non-finite EP speedup at chips={chips}: {s1}")
         rows.append(csv_row(f"offload_ep_chips{chips}_B1", 0.0,
                             f"speedup_B1={s1:.2f}"))
     return rows
+
+
+if __name__ == "__main__":
+    for row in run(dry=True):
+        print(row)

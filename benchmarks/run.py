@@ -21,6 +21,7 @@ MODULES = [
     ("spmoe_prefetch_sweep", "benchmarks.prefetch_sweep"),
     ("continuous_sweep", "benchmarks.continuous_sweep"),
     ("admission_sweep", "benchmarks.admission_sweep"),
+    ("prefix_sweep", "benchmarks.prefix_sweep"),
     ("fault_sweep", "benchmarks.fault_sweep"),
     ("kernels", "benchmarks.kernels"),
 ]

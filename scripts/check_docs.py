@@ -66,6 +66,7 @@ DOCUMENTED_API = [
                                 "SDEngine.begin_admit_chunked",
                                 "SDEngine.admit_chunk",
                                 "SDEngine.grow_session",
+                                "SDEngine.admit_rows_prefix",
                                 "SessionState", "RoundResult",
                                 "PendingAdmission", "generate_ar"]),
     ("repro.serving.engine", ["ServingEngine.step",
@@ -85,16 +86,25 @@ DOCUMENTED_API = [
                             "PageAllocator", "grow_cache_pages",
                             "grow_cache_seq", "Model.init_cache",
                             "PageAllocator.reserve", "PageAllocator.release",
-                            "PageAllocator.assert_no_leaks"]),
+                            "PageAllocator.assert_no_leaks",
+                            "PageAllocator.fork_prefix",
+                            "PageAllocator.extend_row",
+                            "PageAllocator.cow_range",
+                            "PageAllocator.shared_page_count",
+                            "copy_cache_pages"]),
     ("repro.core.analytics", ["occupancy_timeline",
                               "predicted_decay_speedup",
                               "admission_work", "fault_recovery_summary"]),
     ("repro.kernels.gmm.ops", ["gmm", "gmm_legacy", "moe_ffn_gmm",
                                "expert_capacity"]),
+    ("repro.kernels.decode_attention.ops", ["decode_attention",
+                                            "paged_decode_attention"]),
     ("repro.models.moe", ["moe_forward", "warm_experts", "PrefetchPlan"]),
     ("repro.core.perf_model", ["SpeedupModel", "SpeedupModel.target_time",
                                "SpeedupModel.predict_decay",
-                               "SpeedupModel.admission_time"]),
+                               "SpeedupModel.admission_time",
+                               "SpeedupModel.prefix_admission_time",
+                               "SpeedupModel.paged_extend_traffic_time"]),
     ("repro.analysis", ["analyze_paths", "compile_guard", "CompileGuard",
                         "compile_count", "compilation_events_available",
                         "Finding", "Report", "ratchet", "load_baseline",

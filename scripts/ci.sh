@@ -2,7 +2,7 @@
 # Fast CI gate: the tier1 subset (fast, deterministic) with a hard timeout
 # so slow end-to-end decode tests never block iteration.
 #
-#   scripts/ci.sh              # tier1 only, 600s budget
+#   scripts/ci.sh              # tier1 only, 1200s budget
 #   CI_TIMEOUT=300 scripts/ci.sh -k rejection
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -16,6 +16,9 @@ timeout 120 bash scripts/lint.sh
 timeout 120 python scripts/check_docs.py
 # interpret-mode kernel-parity smoke: ragged + fused gmm vs ref.py oracles
 timeout 120 python -m repro.kernels.gmm.ragged
+# paged decode-attention kernel parity: block-table-walking Pallas kernel
+# vs the paged + dense oracles across page sizes / GQA / logit caps
+timeout 120 python -m repro.kernels.decode_attention.decode_attention
 # continuous-serving smoke: slot scheduler end-to-end on a tiny config
 # (Poisson arrivals, mixed budgets, row-sliced + chunked admission into
 # paged KV slots, live re-planning)
@@ -23,9 +26,16 @@ timeout 300 python -m repro.launch.serve --arch qwen2-57b-a14b --reduced \
   --requests 4 --max-batch 2 --max-new 6 --gamma 2 --mixed-max-new 4,6 \
   --scheduler continuous --arrival-rate 1.0 --no-autotune \
   --prefill-chunk 4 --kv-layout paged --page-size 16
+# shared-prefix smoke: every request carries one common system prompt;
+# prefix sharing forks it (refcounted CoW pages) and prefills only tails,
+# with the paged kernel on the decode/verify path
+timeout 300 python -m repro.launch.serve --arch qwen2-57b-a14b --reduced \
+  --requests 4 --max-batch 2 --max-new 4 --gamma 2 \
+  --scheduler continuous --no-autotune --kv-layout paged --page-size 16 \
+  --prefix-sharing --shared-prefix 24 --admission-order pressure
 # fault-injection smoke: a seeded injector stream (page exhaustion +
 # preemption/requeue, NaN quarantine, slow round, admission retry) must
 # complete with the expected finish_reasons, zero leaked pages, and a
 # zero-compile replay on the warm engine (docs/faults.md)
 timeout 300 python -m repro.serving.faults
-exec timeout "${CI_TIMEOUT:-600}" python -m pytest -q -m tier1 "$@"
+exec timeout "${CI_TIMEOUT:-1200}" python -m pytest -q -m tier1 "$@"

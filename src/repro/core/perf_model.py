@@ -138,6 +138,59 @@ class SpeedupModel:
         return self.target_time(t, top_k, num_experts, dispatch=dispatch,
                                 params=params, prefetch_hit_rate=0.0)
 
+    def prefix_admission_time(self, rows, prompt_tokens, shared_tokens,
+                              top_k, num_experts, *,
+                              dispatch: str | None = None,
+                              params: np.ndarray | None = None):
+        """Predicted wall time of one PREFIX-SHARED admission prefill.
+
+        Prefix sharing (serving/scheduler.py, docs/paged_attention.md)
+        forks the common prompt prefix's KV pages from a live sibling, so
+        the target prefills only the unshared tail: the admission
+        processes ``rows * (prompt_tokens - shared_tokens)`` tokens
+        (floored at one — the tail always keeps a token to extend with).
+        Equal to :meth:`admission_time` at ``shared_tokens = 0``; the gap
+        between the two curves is the model-side sharing win
+        ``benchmarks/prefix_sweep.py`` holds against measurement.
+        """
+        tail = np.maximum(np.asarray(prompt_tokens, np.float64)
+                          - np.asarray(shared_tokens, np.float64), 1.0)
+        return self.admission_time(rows, tail, top_k, num_experts,
+                                   dispatch=dispatch, params=params)
+
+    def paged_extend_traffic_time(self, batch, mean_length, max_pages,
+                                  page_size, kv_heads, head_dim, *,
+                                  n_layers: int = 1, dtype_bytes: int = 2,
+                                  mode: str = "kernel"):
+        """Lower-bound HBM time of ONE paged decode/verify attention step.
+
+        ``mode="gather"`` prices the dense ``pool[table]`` fallback: every
+        extend MATERIALIZES the gathered (B, max_pages*page_size) K/V view
+        — read the pages, write the dense copy, read it back inside the
+        attention — so traffic scales with the table WIDTH, growing with
+        every pool growth even when live contexts are short.
+        ``mode="kernel"`` prices the block-table-walking Pallas kernel
+        (kernels/decode_attention): K/V pages stream from the pool exactly
+        once and only pages overlapping the live context are touched, so
+        traffic scales with ``mean_length`` rounded up to a page.  The
+        ratio of the two is the kernel's memory-boundedness headroom at a
+        given occupancy — the quantity ``benchmarks/prefix_sweep.py``
+        reports alongside the measured extend times.
+        """
+        if mode not in ("kernel", "gather"):
+            raise ValueError(f"mode must be 'kernel' or 'gather', "
+                             f"got {mode!r}")
+        B = np.asarray(batch, np.float64)
+        per_pos = 2.0 * kv_heads * head_dim * dtype_bytes    # K + V
+        if mode == "gather":
+            positions = float(max_pages) * float(page_size)
+            passes = 3.0           # pool read + dense write + attend read
+        else:
+            positions = np.ceil(np.asarray(mean_length, np.float64)
+                                / page_size) * page_size
+            passes = 1.0
+        return n_layers * B * positions * per_pos * passes / self.hw.hbm_bw
+
     def compute_speedup(self, p: np.ndarray, batch, gamma, top_k,
                         num_experts, sigma):
         """Alg. 1 line 3 — vectorized over measurement arrays."""

@@ -261,12 +261,16 @@ class SDEngine:
         self._sliced_cache: Dict[Tuple[int, int, int], Callable] = {}
         self._chunk_cache: Dict[Tuple, Callable] = {}
         self._start_cache: Dict[Tuple, Callable] = {}    # session-open prefill
+        self._prefix_cache: Dict[Tuple[int, int, int, int], Callable] = {}
         self.trace_log: List[Tuple[int, int]] = []       # (gamma, B) per trace
         # (T_prompt, rows): full-path entries carry rows == pool, sliced-
         # path entries rows == the admitted-row bucket — the jit-signature
         # contract tests assert on
         self.admit_trace_log: List[Tuple[int, int]] = []
         self.chunk_trace_log: List[Tuple[str, int, int]] = []  # (stage, C, R)
+        # (T_tail, rows) per prefix-admission trace — the shared-prefix
+        # counterpart of admit_trace_log
+        self.prefix_trace_log: List[Tuple[int, int]] = []
         self.growth_log: List[Tuple[int, Optional[int]]] = []
         # session-lifetime expert-prefetch aggregates (prefetch proposers):
         # summed across every generate() call this session served
@@ -804,6 +808,144 @@ class SDEngine:
         t_cache, p_state, last_token = fn(
             state.params, state.t_cache, state.p_state, state.last_token,
             _device_cast(prompts, np.int32), _device_cast(lengths, np.int32),
+            _device_cast(rows, np.int32), _device_cast(valid, bool), key)
+        return replace(state, t_cache=t_cache, p_state=p_state,
+                       last_token=last_token)
+
+    # ------------------------------------------------ prefix-shared admission
+    def _admit_prefix_fn(self, R: int, Tt: int, Tp: int,
+                         max_seq: int) -> Callable:
+        fn = self._prefix_cache.get((R, Tt, Tp, max_seq))
+        if fn is None:
+            target, proposer = self.target, self.proposer
+
+            def prefix_fn(params, t_cache, p_state, last_token, tails,
+                          tail_start, tail_len, prompts, lengths, rows,
+                          valid, key):
+                self.prefix_trace_log.append((Tt, R))  # lint: allow[T106] intentional trace-time counter; tier-1 tests assert on it
+                rows_i = jnp.asarray(rows, jnp.int32)
+                # compact R-row view of the LIVE paged cache: pool leaves
+                # are batch-free (shared physical pages), so only the
+                # block table and lengths need row-slicing.  The tail
+                # extend writes through the sliced table into the rows'
+                # private pages and attends across their shared-prefix
+                # pages in the same forward.
+                compact = {
+                    "layers": t_cache["layers"],
+                    "lengths": tail_start,
+                    "pages": {"table": t_cache["pages"]["table"][rows_i]},
+                }
+                if proposer.needs_hidden:
+                    logits, hidden, pend = target.extend_with_hidden(
+                        params["target"], tails, compact, collect=False)
+                else:
+                    logits, pend = target.extend(params["target"], tails,
+                                                 compact, collect=False)
+                    hidden = None
+                idx = (tail_len - 1)[:, None, None].astype(jnp.int32)
+                last_l = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
+                last_h = (jnp.take_along_axis(hidden, idx, axis=1)[:, 0]
+                          if hidden is not None else None)
+                fresh_p = proposer.init_state(params, prompts, max_seq,
+                                              lengths=lengths,
+                                              last_hidden=last_h)
+                first = sample_from(
+                    probs_from_logits(last_l, self.temperature), key,
+                    self.temperature)
+                B = last_token.shape[0]
+                rows_eff = jnp.where(valid, rows_i, B)
+                # attention slots commit in place (pend carries the
+                # written pools); the live lengths jump straight to the
+                # full prompt length — shared prefix included
+                merged_t = dict(
+                    t_cache, layers=pend["layers"],
+                    lengths=t_cache["lengths"].at[rows_eff].set(
+                        lengths, mode="drop"))
+                merged_p = proposer.scatter_state(p_state, fresh_p, rows_i,
+                                                  valid=valid)
+                merged_last = last_token.at[rows_eff].set(first, mode="drop")
+                return merged_t, merged_p, merged_last
+
+            fn = jax.jit(prefix_fn)
+            self._prefix_cache[(R, Tt, Tp, max_seq)] = fn
+        return fn
+
+    def admit_rows_prefix(self, state: SessionState, tails, tail_start,
+                          tail_len, prompts, lengths, rows, *, valid=None,
+                          key: Optional[jax.Array] = None) -> SessionState:
+        """Prefix-SHARED sliced admission: target-prefill only the tails.
+
+        The page-sharing counterpart of :meth:`admit_rows` for a PAGED
+        session whose allocator already mapped each admitted row's table
+        to a sibling's shared prefix pages (``PageAllocator.fork_prefix``
+        + ``cow_range`` + private ``extend_row`` pages).  The target side
+        prefills ONLY the unshared tail ``tails[i] = prompt[i][tail_start
+        [i]:]`` as an extend at offset ``tail_start`` — the queries attend
+        across the shared prefix KV through the row-sliced block table, so
+        the common prefix is never recomputed.  The proposer still builds
+        its (dense, cheap) state over the full prompt.
+
+        Restriction: every target layer must be full-attention or MLA
+        (pool-backed slots; SWA rings and recurrent states carry per-row
+        dense state a tail extend cannot reconstruct) — callers gate on
+        this and fall back to :meth:`admit_rows`.
+
+        Parameters
+        ----------
+        state : SessionState
+            The live PAGED session.
+        tails : array-like
+            (R, T_tail) unshared prompt tails, zero-padded per lane.
+        tail_start : array-like
+            (R,) shared-prefix length per row (where the tail starts).
+        tail_len : array-like
+            (R,) true tail lengths (``tail_start + tail_len == lengths``).
+        prompts : array-like
+            (R, T_prompt) FULL prompts — consumed by the proposer's fresh
+            state build.
+        lengths : array-like
+            (R,) full prompt lengths.
+        rows : array-like
+            (R,) pool row of each admitted request (DATA, never retraces).
+        valid : array-like, optional
+            (R,) bool; False lanes are padding and scatter nothing.
+        key : jax.Array, optional
+            PRNG key for the admitted rows' first sampled tokens.
+
+        Returns
+        -------
+        SessionState
+            The live session with the admitted rows prefilled (shared
+            prefix + fresh tail) and ready for the next ``round``.
+        """
+        tails = np.asarray(tails)
+        prompts = np.asarray(prompts)
+        R, Tt = tails.shape
+        Tp = prompts.shape[1]
+        if state.t_cache.get("pages") is None:
+            raise ValueError("admit_rows_prefix needs a paged session")
+        bad = [k for k in self.target.cfg.layer_pattern
+               if k not in ("attn", "mla")]
+        if bad:
+            raise ValueError(
+                f"admit_rows_prefix requires pool-backed layers only; "
+                f"target has {sorted(set(bad))} (fall back to admit_rows)")
+        if key is None:
+            if self.temperature > 0.0:
+                raise ValueError(
+                    "admit_rows_prefix() needs a fresh per-call key at "
+                    "temperature>0 (split one per admission)")
+            key = jax.random.PRNGKey(0)
+        valid = (np.ones((R,), bool) if valid is None
+                 else np.asarray(valid, bool))
+        fn = self._admit_prefix_fn(R, Tt, Tp, state.max_seq)
+        t_cache, p_state, last_token = fn(
+            state.params, state.t_cache, state.p_state, state.last_token,
+            _device_cast(tails, np.int32),
+            _device_cast(tail_start, np.int32),
+            _device_cast(tail_len, np.int32),
+            _device_cast(prompts, np.int32),
+            _device_cast(lengths, np.int32),
             _device_cast(rows, np.int32), _device_cast(valid, bool), key)
         return replace(state, t_cache=t_cache, p_state=p_state,
                        last_token=last_token)

@@ -4,7 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_attention.decode_attention import decode_attention_bhtd
+from repro.kernels.decode_attention.decode_attention import (
+    decode_attention_bhtd, paged_decode_attention_bhtd)
 
 INTERPRET = jax.default_backend() != "tpu"
 
@@ -19,7 +20,34 @@ def decode_attention(
     logit_cap: float = 0.0,
     interpret: bool = INTERPRET,
 ) -> jnp.ndarray:
+    """Dense decode/verify attention over a contiguous (B, S) KV cache:
+    the online-softmax Pallas kernel behind the non-paged extend path.
+    Queries sit at absolute positions ``lengths + t`` (causal)."""
     out = decode_attention_bhtd(
         q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
         lengths, scale=scale, logit_cap=logit_cap, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)
+
+
+def paged_decode_attention(
+    q: jnp.ndarray,            # (B, T, Hq, D)
+    k_pages: jnp.ndarray,      # (NP, ps, Hkv, D) physical page pool
+    v_pages: jnp.ndarray,
+    lengths: jnp.ndarray,      # (B,)
+    table: jnp.ndarray,        # (B, MP) logical page -> physical page
+    *,
+    scale: float = 0.0,
+    logit_cap: float = 0.0,
+    interpret: bool = INTERPRET,
+) -> jnp.ndarray:
+    """Block-table-walking decode/verify attention over the paged KV pool.
+
+    Reads K/V pages directly from the pool via scalar-prefetched page
+    indices — no ``pool[table]`` dense gather — and returns (B, T, Hq, D)
+    matching :func:`decode_attention` on the gathered view exactly (same
+    masking contract; positions past ``length + t`` never contribute).
+    """
+    out = paged_decode_attention_bhtd(
+        q.transpose(0, 2, 1, 3), k_pages, v_pages, lengths, table,
+        scale=scale, logit_cap=logit_cap, interpret=interpret)
     return out.transpose(0, 2, 1, 3)

@@ -35,3 +35,29 @@ def decode_attention_ref(
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhts,bhsd->bhtd", p, v.astype(jnp.float32))
     return out.astype(q.dtype)
+
+
+def paged_decode_attention_ref(
+    q: jnp.ndarray,            # (B, Hq, T, D)
+    k_pages: jnp.ndarray,      # (NP, ps, Hkv, D) physical page pool
+    v_pages: jnp.ndarray,
+    lengths: jnp.ndarray,      # (B,)
+    table: jnp.ndarray,        # (B, MP) logical page -> physical page
+    *,
+    scale: float = 0.0,
+    logit_cap: float = 0.0,
+) -> jnp.ndarray:
+    """Oracle for the paged kernel: gather ``pool[table]`` into the dense
+    (B, Hkv, MP*ps, D) view, then delegate to :func:`decode_attention_ref`.
+    Logical positions beyond ``length + T - 1`` are masked there, so trash
+    or stale page contents never reach the softmax."""
+    B, MP = table.shape
+    ps = k_pages.shape[1]
+
+    def view(pool):
+        g = jnp.asarray(pool)[jnp.asarray(table)]           # (B, MP, ps, Hkv, D)
+        return g.reshape((B, MP * ps) + pool.shape[2:]).transpose(0, 2, 1, 3)
+
+    return decode_attention_ref(
+        q, view(k_pages), view(v_pages), lengths,
+        scale=scale, logit_cap=logit_cap)

@@ -91,6 +91,24 @@ def main():
                          "with on-demand growth (continuous mode)")
     ap.add_argument("--page-size", type=int, default=64,
                     help="positions per KV page with --kv-layout paged")
+    ap.add_argument("--paged-attention", default="kernel",
+                    choices=["kernel", "gather"],
+                    help="paged decode/verify attention: the block-table-"
+                         "walking Pallas kernel (default) or the dense "
+                         "pool[table] gather fallback "
+                         "(docs/paged_attention.md)")
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="paged mode: admissions whose prompt shares a "
+                         "page-aligned prefix with a live slot fork its "
+                         "pages (refcounted CoW) and prefill only the tail")
+    ap.add_argument("--admission-order", default="fifo",
+                    choices=["fifo", "pressure"],
+                    help="continuous refill order; pressure picks the "
+                         "smallest-page-footprint admissible request when "
+                         "the paged pool is under pressure")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many common system-prompt tokens to "
+                         "every request (exercises --prefix-sharing)")
     ap.add_argument("--round-deadline-s", type=float, default=None,
                     help="resilience: per-round wall-clock deadline; "
                          "slower rounds count toward the degradation "
@@ -112,7 +130,8 @@ def main():
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
-    target = Model(cfg, moe_dispatch=args.moe_dispatch)
+    target = Model(cfg, moe_dispatch=args.moe_dispatch,
+                   paged_attention=args.paged_attention)
     params_t = target.init(jax.random.PRNGKey(args.seed))
 
     if args.proposer == "eagle":
@@ -159,10 +178,23 @@ def main():
                         admit_mode=args.admit_mode,
                         prefill_chunk=args.prefill_chunk,
                         kv_layout=args.kv_layout, page_size=args.page_size,
+                        prefix_sharing=args.prefix_sharing,
+                        admission_order=args.admission_order,
                         resilience=resilience)
 
     pb = prompt_batch(cfg.vocab_size, args.requests, kind=args.kind,
                       seed=args.seed)
+    if args.shared_prefix > 0:
+        # one common system prompt ahead of every request — the workload
+        # shape prefix sharing is built for
+        rng = np.random.default_rng(args.seed + 17)
+        sys_toks = rng.integers(1, cfg.vocab_size,
+                                size=args.shared_prefix).astype(np.int32)
+        pb["tokens"] = [np.concatenate([sys_toks, np.asarray(
+            pb["tokens"][i][: int(pb["lengths"][i])], np.int32)])
+            for i in range(len(pb["lengths"]))]
+        pb["lengths"] = [int(n) + args.shared_prefix
+                         for n in pb["lengths"]]
     max_new_choices = ([int(x) for x in args.mixed_max_new.split(",")]
                        if args.mixed_max_new else [args.max_new])
     submit_poisson(eng, pb["tokens"], pb["lengths"],
@@ -201,9 +233,11 @@ def main():
                   f"admitted={sum(s.admitted for s in r.steps)} "
                   f"retired={sum(s.retired for s in r.steps)} "
                   f"sd_handoffs={handoffs}")
+            shared = sum(s.shared_tokens for s in r.steps)
             print(f"  admission: {sum(s.admit_rows for s in r.steps)} "
                   f"prefill rows, {sum(s.admit_tokens for s in r.steps)} "
-                  f"row-tokens ({args.admit_mode})")
+                  f"row-tokens ({args.admit_mode})"
+                  + (f", {shared} prefix-shared tokens" if shared else ""))
     for kind, s in eng.session_stats().items():
         if kind == "resilience":
             if s:                 # fault/preemption/recovery counters

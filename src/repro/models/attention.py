@@ -369,6 +369,7 @@ def gqa_forward(
     use_flash: bool = False,
     causal: bool = True,
     page_table: Optional[jnp.ndarray] = None,
+    paged_attention: str = "kernel",
 ) -> Tuple[jnp.ndarray, Optional[dict]]:
     B, T, _ = x.shape
     window = cfg.sliding_window if kind == "swa" else 0
@@ -437,18 +438,26 @@ def gqa_forward(
         k_pos = cache["pos"]
         out = attend(q, cache["k"], cache["v"], positions, k_pos)
     elif "k_pages" in cache:
-        # paged: write the new tokens through the block table, then attend
-        # against the gathered dense view (decode kernel expects contiguous
-        # K/V, so paged decode takes the generic masked path)
+        # paged: write the new tokens through the block table, then attend.
+        # Decode/verify widths (T <= 8) take the block-table-walking Pallas
+        # kernel — KV pages stream straight from the pool, no dense gather;
+        # wider tail-prefill extends (chunked admission) and the explicit
+        # paged_attention="gather" fallback materialize the dense view.
         cache = {
             "k_pages": _paged_write(cache["k_pages"], page_table, positions,
                                     k),
             "v_pages": _paged_write(cache["v_pages"], page_table, positions,
                                     v),
         }
-        k_view, k_pos = _paged_view(cache["k_pages"], page_table)
-        v_view, _ = _paged_view(cache["v_pages"], page_table)
-        out = attend(q, k_view, v_view, positions, k_pos)
+        if paged_attention == "kernel" and causal and T <= 8:
+            from repro.kernels.decode_attention import ops as dec_ops
+            out = dec_ops.paged_decode_attention(
+                q, cache["k_pages"], cache["v_pages"], positions[:, 0],
+                page_table, scale=scale, logit_cap=cap)
+        else:
+            k_view, k_pos = _paged_view(cache["k_pages"], page_table)
+            v_view, _ = _paged_view(cache["v_pages"], page_table)
+            out = attend(q, k_view, v_view, positions, k_pos)
     else:
         cache = {
             "k": cache["k"].at[bidx, positions].set(k),

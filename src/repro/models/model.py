@@ -180,6 +180,15 @@ class PageAllocator:
     change (an input-array swap, never a retrace).  When ``can_alloc``
     says no, ``grown_geometry`` returns the next pow2 (pool_pages,
     max_pages) to rebuild with via :func:`grow_cache_pages`.
+
+    Pages are REFCOUNTED so rows can share a prompt prefix
+    (:meth:`fork_prefix`): a shared page appears in several rows' tables
+    and ``owned`` lists but returns to the free list only when its last
+    reference drops (:meth:`free_row`).  A sharing row that must write
+    into a shared page first detaches it via copy-on-write
+    (:meth:`cow_range`), which hands the caller the (src, dst) physical
+    pairs to copy device-side (:func:`copy_cache_pages`) before any
+    write lands.
     """
 
     def __init__(self, batch: int, page_size: int, pool_pages: int,
@@ -191,6 +200,7 @@ class PageAllocator:
         self.free: List[int] = list(range(1, self.pool_pages))
         self.owned: Dict[int, List[int]] = {}
         self.reserved: List[int] = []
+        self.ref: Dict[int, int] = {}
         self.table = np.zeros((batch, self.max_pages), np.int32)
 
     def pages_for(self, n_positions: int) -> int:
@@ -210,24 +220,114 @@ class PageAllocator:
                 f"cannot allocate {need} pages (free={len(self.free)}, "
                 f"max_pages={self.max_pages}); grow the pool first")
         pages = [self.free.pop() for _ in range(need)]
+        for p in pages:
+            self.ref[p] = 1
         self.owned[row] = pages
         self.table[row, :] = 0
         self.table[row, :need] = pages
 
+    def fork_prefix(self, src: int, dst: int, n_positions: int) -> int:
+        """Share ``src``'s pages covering its first ``n_positions`` with
+        ``dst`` (must own nothing): each shared page's refcount bumps and
+        appears in ``dst``'s table — zero device traffic, the pool is
+        untouched.  ``dst`` must not write inside the shared range without
+        first detaching via :meth:`cow_range`.  Returns the number of
+        pages shared."""
+        need = self.pages_for(n_positions)
+        if dst in self.owned:
+            raise ValueError(f"row {dst} already owns pages; free_row first")
+        src_pages = self.owned.get(src)
+        if src_pages is None or len(src_pages) < need:
+            raise ValueError(
+                f"row {src} owns {0 if src_pages is None else len(src_pages)}"
+                f" pages, cannot share {need}")
+        pages = list(src_pages[:need])
+        for p in pages:
+            self.ref[p] += 1
+        self.owned[dst] = pages
+        self.table[dst, :] = 0
+        self.table[dst, :need] = pages
+        return need
+
+    def extend_row(self, row: int, n_positions: int) -> int:
+        """Grow ``row``'s ownership with private pages until it covers
+        ``n_positions`` total (the fork_prefix companion: shared prefix
+        pages + private tail).  Returns the number of pages added."""
+        if row not in self.owned:
+            raise ValueError(f"row {row} owns no pages; alloc or "
+                             "fork_prefix first")
+        need = self.pages_for(n_positions)
+        have = len(self.owned[row])
+        extra = need - have
+        if extra <= 0:
+            return 0
+        if extra > len(self.free) or need > self.max_pages:
+            raise ValueError(
+                f"cannot extend row {row} by {extra} pages "
+                f"(free={len(self.free)}, max_pages={self.max_pages})")
+        pages = [self.free.pop() for _ in range(extra)]
+        for p in pages:
+            self.ref[p] = 1
+        self.owned[row].extend(pages)
+        self.table[row, have:need] = pages
+        return extra
+
+    def cow_range(self, row: int, start: int, end: int) -> List[Tuple[int, int]]:
+        """Detach every SHARED page of ``row`` covering logical positions
+        [start, end): each gets a fresh private physical page swapped into
+        the row's table/ownership (old refcount drops).  Returns the
+        (src, dst) physical pairs; the caller MUST device-copy src→dst
+        across all paged leaves (:func:`copy_cache_pages`) before writing,
+        or the row loses its shared-prefix content.  Pages already private
+        (ref == 1) are left alone."""
+        pages = self.owned.get(row, [])
+        pairs: List[Tuple[int, int]] = []
+        lp0 = int(start) // self.page_size
+        lp1 = min(-(-int(end) // self.page_size), len(pages))
+        for lp in range(max(lp0, 0), lp1):
+            p = pages[lp]
+            if self.ref[p] > 1:
+                if not self.free:
+                    raise ValueError(
+                        f"cow_range: no free page to detach page {p} of "
+                        f"row {row}; grow the pool first")
+                fresh = self.free.pop()
+                self.ref[p] -= 1
+                self.ref[fresh] = 1
+                pages[lp] = fresh
+                self.table[row, lp] = fresh
+                pairs.append((p, fresh))
+        return pairs
+
+    def shared_page_count(self) -> int:
+        """Number of physical pages currently referenced by more than one
+        row — the pool-side prefix-sharing win ``assert_no_leaks`` and the
+        serving stats report."""
+        return sum(1 for c in self.ref.values() if c > 1)
+
     def free_row(self, row: int) -> None:
-        """Return ``row``'s pages to the pool; its table goes to trash.
+        """Drop ``row``'s references; pages return to the pool only at
+        refcount zero.  Its table goes to trash.
 
         Freeing a row that owns nothing is a no-op (retired filler rows
-        never allocated), but a page that is ALREADY free — ownership
-        bookkeeping corrupted somewhere — raises instead of silently
-        double-crediting the free list."""
+        never allocated), but a page that is ALREADY free or untracked —
+        ownership bookkeeping corrupted somewhere — raises instead of
+        silently double-crediting the free list.  Pages still shared with
+        sibling rows (refcount > 1) stay out of the free list, so
+        preempting one fork never yanks a prefix out from under the
+        others."""
         pages = self.owned.pop(row, [])
-        dup = set(pages) & set(self.free)
-        if dup:
-            raise ValueError(
-                f"double free: row {row} pages {sorted(dup)} are already "
-                "in the free list — page ownership is corrupted")
-        self.free.extend(pages)
+        for p in pages:
+            c = self.ref.get(p)
+            if c is None or p in self.free:
+                raise ValueError(
+                    f"double free: row {row} page {p} is already "
+                    "free/untracked — page ownership is corrupted")
+            if c > 1:
+                self.ref[p] = c - 1
+            else:
+                del self.ref[p]
+                self.free.append(p)
         self.table[row, :] = 0
 
     def free_fraction(self) -> float:
@@ -283,6 +383,11 @@ class PageAllocator:
                             f"expected {self.pool_pages - 1}")
         if len(set(self.free)) != len(self.free):
             problems.append("free list contains duplicates")
+        if self.ref:
+            shared = self.shared_page_count()
+            problems.append(
+                f"{len(self.ref)} pages still refcounted "
+                f"({shared} of them shared): {sorted(self.ref)[:16]}")
         if self.table.any():
             rows = sorted(set(np.nonzero(self.table)[0].tolist()))
             problems.append(f"table rows still mapped: {rows}")
@@ -347,6 +452,34 @@ def grow_cache_pages(cache: dict, pool_pages: int, max_pages: int) -> dict:
                 pages=dict(cache["pages"], table=table))
 
 
+def copy_cache_pages(cache: dict, pairs) -> dict:
+    """Device-copy physical pages src→dst across every paged leaf.
+
+    The copy-on-write materialization step: after
+    :meth:`PageAllocator.cow_range` hands back (src, dst) physical page
+    pairs, this clones their contents so the detached row keeps its
+    shared-prefix KV.  Callers pad ``pairs`` to a bucketed count with
+    (0, 0) entries — a trash-page self-copy is a harmless no-op — so the
+    eager scatter keeps a stable shape across rounds.
+    """
+    if cache.get("pages") is None:
+        raise ValueError("copy_cache_pages: not a paged cache")
+    if not pairs:
+        return cache
+    src = jnp.asarray([p[0] for p in pairs], jnp.int32)
+    dst = jnp.asarray([p[1] for p in pairs], jnp.int32)
+
+    def copy_slot(slot):
+        out = dict(slot)
+        for paged_key, _ in _PAGED_LEAF_PAIRS:
+            if paged_key in slot:
+                leaf = slot[paged_key]
+                out[paged_key] = leaf.at[:, dst].set(leaf[:, src])
+        return out
+
+    return dict(cache, layers=[copy_slot(s) for s in cache["layers"]])
+
+
 def grow_cache_seq(cache: dict, cfg: ModelConfig, new_max_seq: int) -> dict:
     """Pad a DENSE cache's sequence axis to ``new_max_seq``.
 
@@ -408,11 +541,17 @@ class Model:
         moe_dispatch: str = "onehot",
         use_flash: bool = False,
         remat: bool = False,
+        paged_attention: str = "kernel",
     ):
+        if paged_attention not in ("kernel", "gather"):
+            raise ValueError(
+                f"paged_attention must be 'kernel' or 'gather', got "
+                f"{paged_attention!r}")
         self.cfg = cfg
         self.moe_dispatch = moe_dispatch
         self.use_flash = use_flash
         self.remat = remat
+        self.paged_attention = paged_attention
 
     # ------------------------------------------------------------------ init
     def init(self, key: jax.Array) -> dict:
@@ -596,7 +735,8 @@ class Model:
             params["layers"], cfg, x, positions, cache["layers"],
             mode="prefill", dispatch=self.moe_dispatch, want_metrics=False,
             use_flash=self.use_flash, remat=self.remat, cross_kvs=cross_kvs,
-            mrope_positions=mrope_positions, page_table=_page_table(cache))
+            mrope_positions=mrope_positions, page_table=_page_table(cache),
+            paged_attention=self.paged_attention)
         # head only at each sequence's last prompt position — never (B,T,V)
         last_h = jnp.take_along_axis(
             x, (lengths - 1)[:, None, None].astype(jnp.int32), axis=1)
@@ -623,7 +763,8 @@ class Model:
             mode="extend", collect=collect, dispatch=self.moe_dispatch,
             want_metrics=False, use_flash=self.use_flash,
             cross_kvs=cache.get("cross"), prefetch_masks=prefetch_masks,
-            page_table=_page_table(cache))
+            page_table=_page_table(cache),
+            paged_attention=self.paged_attention)
         logits = self._head(params, x)                           # (B, T, V)
         return logits, x, dict(cache, layers=new_layers), metrics
 

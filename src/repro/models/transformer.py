@@ -84,13 +84,15 @@ def block_forward(
     mrope_positions=None,
     prefetch_mask: Optional[jnp.ndarray] = None,
     page_table: Optional[jnp.ndarray] = None,
+    paged_attention: str = "kernel",
 ) -> Tuple[jnp.ndarray, Optional[dict], dict]:
     h = apply_norm(params["norm1"], x, cfg.norm_eps)
     if kind in ("attn", "swa"):
         out, new_cache = attn.gqa_forward(
             params["mixer"], cfg, h, positions, kind=kind, cache=cache,
             mode=mode, mrope_positions=mrope_positions, use_flash=use_flash,
-            causal=causal, page_table=page_table)
+            causal=causal, page_table=page_table,
+            paged_attention=paged_attention)
     elif kind == "mla":
         out, new_cache = attn.mla_forward(
             params["mixer"], cfg, h, positions, cache=cache, mode=mode,
@@ -185,6 +187,7 @@ def stack_forward(
     mrope_positions=None,
     prefetch_masks: Optional[List[jnp.ndarray]] = None,
     page_table: Optional[jnp.ndarray] = None,
+    paged_attention: str = "kernel",
 ) -> Tuple[jnp.ndarray, Optional[List[dict]], dict]:
     """Run the full stack.  caches/cross_kvs leaves carry leading (P, ...).
 
@@ -199,6 +202,10 @@ def stack_forward(
     ``page_table`` (optional) is the (B, max_pages) logical→physical block
     table of a paged cache (models/model.py) — shared by every paged
     attention slot, carried as a scan closure constant.
+
+    ``paged_attention`` selects the paged extend backend: "kernel" walks the
+    block table inside the Pallas decode kernel; "gather" materializes the
+    dense ``pool[table]`` view (the pre-kernel behaviour, kept as fallback).
     """
 
     def make_block(i, kind, is_moe):
@@ -208,7 +215,7 @@ def stack_forward(
                 mode=mode, collect=collect, causal=causal, dispatch=dispatch,
                 want_metrics=want_metrics, use_flash=use_flash, cross_kv=lx_i,
                 mrope_positions=mrope_positions, prefetch_mask=lm_i,
-                page_table=page_table)
+                page_table=page_table, paged_attention=paged_attention)
         # per-LAYER rematerialization: checkpointing the whole period keeps
         # every layer's FFN/attention intermediates live during the period's
         # backward (107 GB/device on jamba train_4k — §Perf C4); per-layer

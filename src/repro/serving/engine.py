@@ -191,6 +191,8 @@ class ServingEngine:
         page_size: int = 64,                # paged: positions per KV page
         prefill_chunk: Optional[int] = None,  # continuous: chunked prefill
         admit_mode: str = "sliced",         # "sliced" | "full" (legacy)
+        prefix_sharing: bool = False,       # paged: fork shared prompt prefixes
+        admission_order: str = "fifo",      # "fifo" | "pressure" refill order
         resilience=None,                    # Optional[ResilienceConfig]
         fault_injector=None,                # Optional[FaultInjector] (tests)
     ):
@@ -212,6 +214,26 @@ class ServingEngine:
                 raise ValueError("admit_mode='full' merges same-shape "
                                  "caches and cannot address a paged pool; "
                                  "use the sliced path with paged KV")
+        if admission_order not in ("fifo", "pressure"):
+            raise ValueError(f"admission_order must be 'fifo' or "
+                             f"'pressure', got {admission_order!r}")
+        if admission_order == "pressure" and kv_layout != "paged":
+            raise ValueError("admission_order='pressure' orders refills by "
+                             "page footprint; it requires kv_layout='paged'")
+        if prefix_sharing:
+            if kv_layout != "paged":
+                raise ValueError(
+                    "prefix_sharing maps common prompt prefixes to shared "
+                    "KV pages; it requires kv_layout='paged' (continuous "
+                    "scheduler)")
+            bad = [k for k in target.cfg.layer_pattern
+                   if k not in ("attn", "mla")]
+            if bad:
+                raise ValueError(
+                    f"prefix_sharing forks block-table pages; target layer "
+                    f"kinds {sorted(set(bad))} keep dense per-row state "
+                    "(SWA rings / recurrent columns) that a table fork "
+                    "cannot share — serve this model without sharing")
         if prefill_chunk is not None:
             if prefill_chunk < 1:
                 raise ValueError(f"prefill_chunk must be >= 1, got "
@@ -244,6 +266,8 @@ class ServingEngine:
         self.page_size = page_size
         self.prefill_chunk = prefill_chunk
         self.admit_mode = admit_mode
+        self.prefix_sharing = prefix_sharing
+        self.admission_order = admission_order
         if resilience is None:
             from repro.serving.faults import ResilienceConfig
             resilience = ResilienceConfig()
@@ -373,6 +397,10 @@ class ServingEngine:
             ``chunk_traces`` : list of (stage, chunk, rows)
                 Chunked-prefill retraces ("first"/"mid"/"final" stage
                 functions, compiled once per shape).
+            ``prefix_traces`` : list of (tail_bucket, rows)
+                Prefix-shared tail-admission retraces
+                (``SDEngine.admit_rows_prefix``; empty unless the engine
+                runs with ``prefix_sharing=True``).
             ``growths`` : list of (new_max_seq, pool_pages)
                 Paged-session capacity growths (each one retrace, pow2-
                 amortized).
@@ -397,6 +425,7 @@ class ServingEngine:
                 "traces": list(sess.trace_log),
                 "admit_traces": list(sess.admit_trace_log),
                 "chunk_traces": list(sess.chunk_trace_log),
+                "prefix_traces": list(sess.prefix_trace_log),
                 "growths": list(sess.growth_log),
                 "prefetch": totals,
             }

@@ -27,6 +27,15 @@ completes, and {use_sd, gamma} is planned once per wave.  This module
     long request GROWS the session instead of raising.  Dense streams
     instead REJECT the oversize request (``finish_reason="rejected"``)
     and keep serving,
+  * with ``prefix_sharing=True`` (paged only) an admission whose prompt
+    shares a page-aligned prefix with a LIVE slot's prompt forks that
+    slot's prefix pages (refcounted, copy-on-write at the tail boundary
+    — ``PageAllocator.fork_prefix``/``cow_range``) and target-prefills
+    only the unshared tail via ``SDEngine.admit_rows_prefix``; same-round
+    siblings with a common prefix are staggered one round so the first
+    becomes the fork leader (docs/paged_attention.md), and
+    ``admission_order="pressure"`` refills smallest-footprint-first when
+    the free-page fraction drops below half,
   * every round consults ``AutoTuner.plan()`` on the LIVE slot count: as
     occupancy decays out of the speedup window the stream hands off SD→AR
     mid-flight (a gamma=0 round in the SAME session — no session switch,
@@ -56,7 +65,7 @@ import numpy as np
 
 from repro.core.spec_decode import PendingAdmission, SDStats, SessionState
 from repro.data.tokenizer import PAD
-from repro.models.model import PageAllocator
+from repro.models.model import PageAllocator, copy_cache_pages
 from repro.serving.engine import WaveReport, _pow2_at_least
 
 if TYPE_CHECKING:                                    # avoid runtime cycle
@@ -146,7 +155,12 @@ class StepReport:
     ``preempted`` slots evicted for page pressure at this boundary,
     ``faults`` rows quarantined by the numerical sentinel, ``timeouts``
     requests retired over their round budget, ``deferred`` admissions
-    pushed back by watermark backpressure or transient admission failure.
+    pushed back by watermark backpressure, transient admission failure,
+    or a prefix-sharing stagger.
+
+    ``shared_tokens`` counts prompt tokens this boundary's admissions did
+    NOT prefill because prefix sharing mapped them to a sibling's pages
+    (docs/paged_attention.md) — the per-round admission work saved.
     """
     round_index: int
     live: int
@@ -162,6 +176,7 @@ class StepReport:
     faults: int = 0
     timeouts: int = 0
     deferred: int = 0
+    shared_tokens: int = 0
 
 
 @dataclass
@@ -202,13 +217,32 @@ class ContinuousScheduler:
         Scans past non-admissible entries instead of head-checking: retry
         backoff and preemption requeue push ``arrival_round`` into the
         future, and a deferred request at the head must not block
-        admissible work behind it."""
+        admissible work behind it.
+
+        With ``admission_order="pressure"`` and a TIGHT pool (free page
+        fraction below half), the smallest-page-footprint admissible
+        request is picked instead of the oldest: more refills land per
+        round under pressure, fewer growths/preemptions fire.  FIFO order
+        resumes the moment pressure clears, and the preemption policy's
+        oldest-slot protection is unaffected."""
         q = self.engine.queue
+        pressured = (self.engine.admission_order == "pressure"
+                     and self._alloc is not None
+                     and self._alloc.free_fraction() < 0.5)
+        best = None                           # (pages, queue index)
         for i, r in enumerate(q):
             if r.arrival_round <= round_idx:
-                del q[i]
-                return r
-        return None
+                if not pressured:
+                    del q[i]
+                    return r
+                key = (self._alloc.pages_for(self._need(r)), i)
+                if best is None or key < best:
+                    best = key
+        if best is None:
+            return None
+        r = q[best[1]]
+        del q[best[1]]
+        return r
 
     def _has_admissible(self, round_idx: int) -> bool:
         return any(r.arrival_round <= round_idx for r in self.engine.queue)
@@ -233,6 +267,58 @@ class ContinuousScheduler:
     def _count(self, name: str, n: int = 1) -> None:
         c = self.engine.fault_counters
         c[name] = c.get(name, 0) + n
+
+    # -------------------------------------------------------- prefix sharing
+    @staticmethod
+    def _common_prefix(a, b) -> int:
+        n = min(len(a), len(b))
+        if n == 0:
+            return 0
+        neq = np.nonzero(np.asarray(a[:n]) != np.asarray(b[:n]))[0]
+        return int(neq[0]) if neq.size else n
+
+    def _find_leader(self, slots: List[SlotState], r: "Request"
+                     ) -> Tuple[Optional[SlotState], int]:
+        """The ACTIVE slot whose prompt shares the longest common prefix
+        with ``r``'s, or (None, 0).
+
+        The share length is capped at ``len(r.prompt) - 1`` — the tail
+        must keep at least one token for the admission extend to produce
+        a next-token logit — and floored at ``page_size``: a sub-page
+        overlap shares zero whole pages, so the fork would save nothing
+        and the request admits normally."""
+        best, best_len = None, 0
+        for s in slots:
+            if not s.active or s.request is None:
+                continue
+            share = min(self._common_prefix(s.request.prompt, r.prompt),
+                        len(r.prompt) - 1)
+            if share > best_len:
+                best, best_len = s, share
+        if best_len < self.engine.page_size:
+            return None, 0
+        return best, best_len
+
+    def _should_stagger(self, r: "Request", batch_in, prefix_in, landed,
+                        chunking) -> bool:
+        """True when no ACTIVE leader exists but a sibling admitted at
+        THIS round boundary shares >= one page of prompt prefix with
+        ``r`` — pushing ``r`` one round lets it fork the sibling's pages
+        once they are live instead of prefilling the prefix twice.  Each
+        uid staggers at most once, so a sibling that never activates
+        (instant eos, rejection) cannot orbit the queue."""
+        if r.uid in self._staggered:
+            return False
+        ps = self.engine.page_size
+        siblings = [q for _, q in batch_in] \
+            + [q for _, q, _ in prefix_in] \
+            + [q for _, q in landed] \
+            + [c.request for c in chunking]
+        for q in siblings:
+            if min(self._common_prefix(q.prompt, r.prompt),
+                   len(r.prompt) - 1) >= ps:
+                return True
+        return False
 
     def _bucket(self, n: int) -> int:
         return _pow2_at_least(n) if self.engine.bucket_batches else n
@@ -352,7 +438,8 @@ class ContinuousScheduler:
 
     def _make_room(self, sess, state: SessionState, r: "Request",
                    chunking: List["_Chunking"], round_idx: int, live: int,
-                   slots: List[SlotState]
+                   slots: List[SlotState],
+                   fresh_pages: Optional[int] = None
                    ) -> Tuple[SessionState, str]:
         """Make the paged pool able to admit ``r``; returns a verdict.
 
@@ -361,6 +448,14 @@ class ContinuousScheduler:
                            with no preemptible victim); requeue and retry.
         ``"impossible"`` — the request cannot fit even a fully-drained
                            pool at ``max_pool_pages``; reject it.
+
+        ``fresh_pages`` (prefix-sharing admissions) is how many pages the
+        admission actually withdraws from the free list — the private
+        tail plus the copy-on-write boundary page — which is less than
+        the request's full footprint because the shared prefix pages are
+        a sibling's.  Logical capacity (``max_seq``, table width) is
+        still checked against the FULL footprint: the row's table must
+        address every position it can ever touch.
 
         Resolution order under pressure: GROW (pow2, the cheap path) while
         ``max_pool_pages`` allows, then PREEMPT the youngest non-protected
@@ -372,10 +467,12 @@ class ContinuousScheduler:
         cap = self.engine.resilience.max_pool_pages
         need = self._need(r)
         need_pages = alloc.pages_for(need)
+        fresh = need_pages if fresh_pages is None else fresh_pages
         if cap is not None and need_pages > cap - 1:
             return state, "impossible"
         while True:
-            if need > state.max_seq or not alloc.can_alloc(need):
+            if (need > state.max_seq or need_pages > alloc.max_pages
+                    or fresh > len(alloc.free)):
                 pool_pages, max_pages = alloc.grown_geometry(need)
                 if cap is not None and pool_pages > cap:
                     victim = self._preempt_victim(slots, r)
@@ -386,7 +483,7 @@ class ContinuousScheduler:
                 state = self._grow(sess, state, pool_pages, max_pages,
                                    chunking)
                 continue
-            if not self._headroom_ok(need_pages, live):
+            if not self._headroom_ok(fresh, live):
                 pool_pages = alloc.pool_pages * 2
                 if cap is not None and pool_pages > cap:
                     return state, "defer"    # watermark backpressure
@@ -462,6 +559,55 @@ class ContinuousScheduler:
         state = sess.admit_rows(state, toks, lengths, rows, valid=valid,
                                 key=key)
         return state, R, R * Tp
+
+    def _admit_batch_prefix(self, sess, state: SessionState,
+                            batch_in: List[Tuple[SlotState, "Request", int]]
+                            ) -> Tuple[SessionState, int, int]:
+        """One TAIL-ONLY admission prefill for this round's prefix-shared
+        refills (``SDEngine.admit_rows_prefix``).
+
+        The allocator already forked each admitted row's table onto its
+        leader's prefix pages and detached the CoW boundary, so the target
+        prefills only the unshared tail ``prompt[share_len:]`` as an
+        extend at offset ``share_len`` — the tail queries attend across
+        the shared prefix KV through the block table.  The proposer still
+        prefills the full prompt (its dense cache is private per row).
+        Pad lanes replicate real rows round-robin: their duplicate tail
+        writes land identical values on the same pages and the admit mask
+        drops their state merges, exactly like ``_admit_batch``.
+
+        Returns ``(state, prefill_rows, prefill_tokens)`` counting the
+        TARGET-side tail work — the saving prefix sharing exists for.
+        """
+        eng = self.engine
+        tails = [np.asarray(r.prompt[sl:], np.int32)
+                 for _, r, sl in batch_in]
+        proms = [np.asarray(r.prompt, np.int32) for _, r, _ in batch_in]
+        Tt = self._bucket(max(len(t) for t in tails))
+        Tp = self._bucket(max(len(p) for p in proms))
+        R = min(self._bucket(len(batch_in)), self.pool)
+        tail_toks = np.full((R, Tt), PAD, np.int32)
+        prom_toks = np.full((R, Tp), PAD, np.int32)
+        tail_start = np.zeros((R,), np.int32)
+        tail_len = np.ones((R,), np.int32)
+        lengths = np.ones((R,), np.int32)
+        rows = np.zeros((R,), np.int32)
+        valid = np.zeros((R,), bool)
+        for i in range(R):
+            s, r, sl = batch_in[i % len(batch_in)]
+            t = tails[i % len(batch_in)]
+            p = proms[i % len(batch_in)]
+            tail_toks[i, : len(t)] = t
+            prom_toks[i, : len(p)] = p
+            tail_start[i] = sl
+            tail_len[i] = len(t)
+            lengths[i] = len(p)
+            rows[i] = s.index
+            valid[i] = i < len(batch_in)
+        state = sess.admit_rows_prefix(state, tail_toks, tail_start,
+                                       tail_len, prom_toks, lengths, rows,
+                                       valid=valid, key=eng._next_key())
+        return state, R, R * Tt
 
     # ------------------------------------------------------------ completion
     def _append(self, slot: SlotState, tokens: List[int]) -> int:
@@ -571,6 +717,11 @@ class ContinuousScheduler:
         self._consec_faulty = 0              # ladder state is per-stream
         self._consec_stall = 0
         self._forced_ar = False
+        self._staggered = set()              # uids prefix-staggered once
+        # prefix sharing forks PAGED prefix pages; the engine ctor already
+        # validated layout and layer kinds, so the stream-level gate is
+        # just the flag
+        prefix_ok = paged and eng.prefix_sharing
         used_sd_any = False
         aborted = False
         first_gamma: Optional[int] = None
@@ -579,7 +730,9 @@ class ContinuousScheduler:
         while True:
             admit_credited, landed, n_retired = 0, [], 0
             admit_rows_n, admit_tokens, deferred_n = 0, 0, 0
-            faults_n, timeouts_n = 0, 0
+            faults_n, timeouts_n, shared_tok_n = 0, 0, 0
+            cow_pairs: List[Tuple[int, int]] = []
+            prefix_in: List[Tuple[SlotState, "Request", int]] = []
             self._round_preempted = 0
             self._table_dirty = False
             had_admissible = self._has_admissible(round_idx)
@@ -622,10 +775,45 @@ class ContinuousScheduler:
                     if not paged and self._need(r) > max_seq:
                         self._reject(r)
                         continue
+                    # ---- prefix sharing: fork a live sibling's prompt
+                    # pages instead of re-prefilling the common prefix.
+                    # Re-admissions after preemption never share — their
+                    # resume stream diverges from every prompt — and a
+                    # tail longer than the prefill chunk takes the plain
+                    # chunked path instead of one oversized tail extend.
+                    leader, share_len = None, 0
+                    if prefix_ok and not r.resume_tokens:
+                        leader, share_len = self._find_leader(slots, r)
+                        if (leader is not None and eng.prefill_chunk
+                                and len(r.prompt) - share_len
+                                > eng.prefill_chunk):
+                            leader, share_len = None, 0
+                        if leader is None and self._should_stagger(
+                                r, batch_in, prefix_in, landed, chunking):
+                            r.arrival_round = round_idx + 1
+                            eng.queue.append(r)
+                            self._staggered.add(r.uid)
+                            deferred_n += 1
+                            self._count("prefix_staggered")
+                            continue
                     if paged:
-                        state, verdict = self._make_room(
-                            sess, state, r, chunking, round_idx, live_now,
-                            slots)
+                        while True:
+                            fresh = None
+                            if leader is not None:
+                                # private tail pages + the CoW boundary
+                                # page; the fork itself draws nothing
+                                fresh = (self._alloc.pages_for(
+                                    self._need(r))
+                                    - share_len // self._alloc.page_size)
+                            state, verdict = self._make_room(
+                                sess, state, r, chunking, round_idx,
+                                live_now, slots, fresh_pages=fresh)
+                            if leader is not None and not leader.active:
+                                # _make_room preempted the leader; its
+                                # pages are gone — re-budget unshared
+                                leader, share_len = None, 0
+                                continue
+                            break
                         if verdict == "impossible":
                             self._reject(r)
                             continue
@@ -638,12 +826,28 @@ class ContinuousScheduler:
                             break
                         free = [s for s in slots
                                 if not s.active and s.index not in claimed]
-                        self._alloc.alloc(free[0].index, self._need(r))
+                        row = free[0].index
+                        if leader is not None:
+                            self._alloc.fork_prefix(leader.index, row,
+                                                    share_len)
+                            self._alloc.extend_row(row, self._need(r))
+                            pairs = self._alloc.cow_range(
+                                row, share_len, self._need(r))
+                            cow_pairs.extend(pairs)
+                            shared_tok_n += share_len
+                            self._count("prefix_hits")
+                            self._count("prefix_shared_tokens", share_len)
+                            self._count("cow_copies", len(pairs))
+                        else:
+                            self._alloc.alloc(row, self._need(r))
                         self._table_dirty = True
                     s = free[0]
                     claimed.add(s.index)
                     s.admit_seq = self._admit_seq
                     self._admit_seq += 1
+                    if leader is not None:
+                        prefix_in.append((s, r, share_len))
+                        continue
                     toks = self._admit_toks(r)
                     if eng.prefill_chunk and len(toks) > eng.prefill_chunk:
                         chunking.append(_Chunking(
@@ -661,6 +865,21 @@ class ContinuousScheduler:
                 # at trash page 0 before the next decode, or its frozen
                 # lane would write into pages the pool has re-issued
                 state = self._sync_table(state)
+            if cow_pairs:
+                # one bucketed device copy detaches every CoW boundary
+                # page this round; (0, 0) trash self-copies pad to pow2 so
+                # the copy dispatch stays shape-stable across rounds
+                n = _pow2_at_least(len(cow_pairs)) if eng.bucket_batches \
+                    else len(cow_pairs)
+                padded = cow_pairs + [(0, 0)] * (n - len(cow_pairs))
+                state = dc_replace(state, t_cache=copy_cache_pages(
+                    state.t_cache, padded))
+            if prefix_in:
+                state, rows_n, toks_n = self._admit_batch_prefix(
+                    sess, state, prefix_in)
+                admit_rows_n += rows_n
+                admit_tokens += toks_n
+                landed.extend((s, r) for s, r, _ in prefix_in)
             if batch_in:
                 state, rows_n, toks_n = self._admit_batch(sess, state,
                                                           batch_in)
@@ -697,7 +916,8 @@ class ContinuousScheduler:
                                             n_retired, 0.0, admit_rows_n,
                                             admit_tokens,
                                             preempted=self._round_preempted,
-                                            deferred=deferred_n))
+                                            deferred=deferred_n,
+                                            shared_tokens=shared_tok_n))
                 self._free_retired()
                 if not eng.queue and not chunking:
                     break
@@ -804,7 +1024,8 @@ class ContinuousScheduler:
                                     admit_tokens,
                                     preempted=self._round_preempted,
                                     faults=faults_n, timeouts=timeouts_n,
-                                    deferred=deferred_n))
+                                    deferred=deferred_n,
+                                    shared_tokens=shared_tok_n))
 
             # ---- degradation ladder: consecutive faulty rounds escalate
             # healthy → forced AR → stream-level safe stop

@@ -1,0 +1,278 @@
+"""Prefix sharing: shared prompt prefixes map to refcounted CoW pages.
+
+The contracts docs/paged_attention.md specifies on top of the paged
+continuous scheduler:
+
+  * byte-identical outputs — a prefix-shared stream commits exactly the
+    greedy tokens of an unshared stream, while target-prefilling the
+    common prefix once (tail-bucket admission traces, shrunk
+    admit_tokens, prefix_hits/shared_tokens accounting),
+  * refcounts protect siblings — preempting or retiring one fork never
+    frees pages another row still references; every stream ends with
+    zero leaked or double-freed pages (``assert_no_leaks`` and
+    ``free_row`` raise loudly instead of corrupting the free list),
+  * page-exhaustion pressure composes — scripted exhaustion and a
+    capped pool while shared pages are live recover with the same
+    tokens,
+  * misconfigurations fail at engine construction, not mid-stream.
+"""
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models.model import Model, PageAllocator
+from repro.serving.engine import ServingEngine
+from repro.serving.faults import Fault, FaultInjector, ResilienceConfig
+
+pytestmark = pytest.mark.tier1
+
+TCFG = ModelConfig("pfx-moe", "moe", 2, 128, 4, 2, 256, 512, num_experts=4,
+                   num_experts_per_tok=2, dtype="float32")
+DCFG = ModelConfig("pfx-draft", "dense", 2, 64, 2, 2, 128, 512,
+                   dtype="float32")
+SWACFG = ModelConfig("pfx-swa", "dense", 2, 64, 4, 2, 128, 512,
+                     layer_pattern=("swa",), sliding_window=6,
+                     dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def models():
+    t, d = Model(TCFG), Model(DCFG)
+    return t, d, t.init(jax.random.PRNGKey(0)), d.init(jax.random.PRNGKey(1))
+
+
+def _engine(t, d, pt, pd, **kw):
+    kw.setdefault("max_batch", 3)
+    kw.setdefault("gamma", 2)
+    kw.setdefault("force_sd", True)
+    kw.setdefault("scheduler", "continuous")
+    return ServingEngine(t, d, pt, pd, **kw)
+
+
+# --------------------------------------------------- allocator fork/CoW/free
+def test_fork_cow_refcount_mechanics():
+    """fork_prefix bumps refcounts, cow_range detaches exactly the shared
+    pages in range, and free order is irrelevant: a page returns to the
+    free list only when its LAST reference drops."""
+    a = PageAllocator(3, 8, 16, 4)
+    a.alloc(0, 30)                            # 4 private pages
+    with pytest.raises(ValueError, match="cannot share"):
+        a.fork_prefix(2, 1, 8)                # src owns nothing
+    assert a.fork_prefix(0, 1, 20) == 3       # 3 pages cover 20 positions
+    with pytest.raises(ValueError, match="already owns"):
+        a.fork_prefix(0, 1, 8)                # dst must start empty
+    assert a.shared_page_count() == 3
+    np.testing.assert_array_equal(a.table[1, :3], a.table[0, :3])
+    a.extend_row(1, 30)                       # private tail page
+    assert a.table[1, 3] != a.table[0, 3]
+
+    # CoW the tail boundary: only the one shared page in [20, 30) detaches
+    pairs = a.cow_range(1, 20, 30)
+    assert len(pairs) == 1
+    src, dst = pairs[0]
+    assert src == a.owned[0][2] and a.owned[1][2] == dst and src != dst
+    assert a.shared_page_count() == 2
+    assert a.cow_range(1, 20, 30) == []       # already private: idempotent
+
+    # retire the LEADER first — the follower's shared pages must survive
+    follower_pages = list(a.owned[1])
+    a.free_row(0)
+    assert all(p not in a.free for p in follower_pages)
+    assert a.shared_page_count() == 0         # last reference each
+    a.free_row(1)
+    a.assert_no_leaks()
+
+    # leak check reports still-shared pages while forks are live
+    a.alloc(0, 8)
+    a.fork_prefix(0, 1, 8)
+    with pytest.raises(RuntimeError, match="1 of them shared"):
+        a.assert_no_leaks()
+    a.free_row(1)
+    a.free_row(0)
+    a.assert_no_leaks()
+
+
+def test_cow_without_free_pages_raises():
+    """Detaching under a full pool fails loudly — never silently aliases
+    a page two writers both think they own."""
+    a = PageAllocator(2, 8, 3, 2)             # 2 allocatable pages
+    a.alloc(0, 16)
+    a.fork_prefix(0, 1, 16)
+    with pytest.raises(ValueError, match="no free page"):
+        a.cow_range(1, 0, 16)
+
+
+def test_double_free_of_shared_page_detected():
+    """A shared page that lands on the free list while still referenced
+    is corruption — free_row raises instead of double-crediting."""
+    a = PageAllocator(2, 8, 8, 2)
+    a.alloc(0, 16)
+    a.fork_prefix(0, 1, 16)
+    a.free.append(a.owned[1][0])              # corrupt: shared AND free
+    with pytest.raises(ValueError, match="double free"):
+        a.free_row(1)
+
+
+# --------------------------------------------------------- end-to-end stream
+# 20 shared tokens with page_size 8: two whole shared pages + a shared
+# BOUNDARY page every follower must CoW-detach before its tail prefill
+SHARED, TAIL, N_REQ = 20, 4, 3
+
+
+def _shared_stream(t, d, pt, pd, *, sharing, n=N_REQ, max_new=6, **kw):
+    """n requests with one SHARED-token system prompt + distinct TAIL-token
+    suffixes, all arriving at round 0 (exercises the stagger path)."""
+    kw.setdefault("kv_layout", "paged")
+    kw.setdefault("page_size", 8)
+    eng = _engine(t, d, pt, pd, prefix_sharing=sharing, seed=3, **kw)
+    rng = np.random.default_rng(3)
+    sys_toks = rng.integers(3, 500, size=SHARED)
+    uids = [eng.submit(
+        np.concatenate([sys_toks,
+                        rng.integers(3, 500, size=TAIL)]).astype(np.int32),
+        max_new_tokens=max_new, arrival_round=0) for _ in range(n)]
+    eng.run()
+    return eng, uids
+
+
+def test_shared_stream_byte_identical_and_prefilled_once(models):
+    """The acceptance trace: N requests sharing one system prompt finish
+    byte-identical to the unshared stream; the target prefills the common
+    prefix exactly once (followers admit through tail-sized buckets) and
+    the page pool drains to zero leaks."""
+    t, d, pt, pd = models
+    plain, pu = _shared_stream(t, d, pt, pd, sharing=False)
+    share, su = _shared_stream(t, d, pt, pd, sharing=True)
+    for a, b in zip(pu, su):
+        assert share.done[b].finish_reason == "length"
+        np.testing.assert_array_equal(plain.done[a].output,
+                                      share.done[b].output)
+
+    fc = share.fault_counters
+    assert fc["prefix_hits"] == N_REQ - 1
+    assert fc["prefix_shared_tokens"] == (N_REQ - 1) * SHARED
+    assert fc["prefix_staggered"] == N_REQ - 1   # same-round siblings wait
+    assert fc["cow_copies"] == N_REQ - 1         # one boundary page each
+
+    # follower admissions are TAIL-sized, never full-prompt re-prefills
+    traces = share.session_stats()["model"]["prefix_traces"]
+    assert traces and all(tt < SHARED for tt, _ in traces)
+    assert sum(r for _, r in traces) >= N_REQ - 1
+    report = share.reports[-1]
+    assert sum(s.shared_tokens for s in report.steps) == (N_REQ - 1) * SHARED
+    assert sum(s.admit_tokens for s in report.steps) < \
+        sum(s.admit_tokens for s in plain.reports[-1].steps)
+    share._slot_scheduler._alloc.assert_no_leaks()
+
+
+def test_preempting_a_fork_never_frees_sibling_pages(models):
+    """A pool capped so a late arrival forces preemption while forked
+    pages are live — and after the LEADER has already retired, so the
+    shared pages survive on follower refcounts alone.  The preempted
+    fork's siblings keep their prefix (outputs untouched), the requeued
+    request resumes byte-identically, and the stream ends leak-free.
+    free_row would raise on any double free."""
+    t, d, pt, pd = models
+
+    def run_with_late(**kw):
+        kw.setdefault("kv_layout", "paged")
+        kw.setdefault("page_size", 8)
+        eng = _engine(t, d, pt, pd, seed=3, **kw)
+        rng = np.random.default_rng(3)
+        sys_toks = rng.integers(3, 500, size=SHARED)
+        # leader (short budget) + two long-budget followers: the leader
+        # retires first, leaving its 3 prefix pages alive only through
+        # the followers' references
+        uids = [eng.submit(
+            np.concatenate([sys_toks, rng.integers(3, 500, size=TAIL)])
+            .astype(np.int32), max_new_tokens=m, arrival_round=0)
+            for m in (4, 10, 10)]
+        # unrelated late LONG prompt (no shared prefix): needs 8 fresh
+        # pages, the capped pool has at most 7 free (sharing saved 4) →
+        # admission must preempt the youngest fork
+        uids.append(eng.submit(rng.integers(3, 500, size=50)
+                               .astype(np.int32), max_new_tokens=8,
+                               arrival_round=4))
+        eng.run()
+        return eng, uids
+
+    ref, ru = run_with_late(prefix_sharing=False)
+    # the pool (pow2-sized at 16 for the initial three requests) is
+    # capped at its initial size: no growth for the late arrival
+    eng, uids = run_with_late(prefix_sharing=True,
+                              resilience=ResilienceConfig(max_pool_pages=16))
+    assert eng.fault_counters["prefix_hits"] >= 1
+    assert eng.fault_counters["preemptions"] >= 1
+    assert eng.fault_counters["requeues"] >= 1
+    for a, b in zip(ru, uids):
+        assert eng.done[b].finish_reason in ("length", "eos")
+        np.testing.assert_array_equal(eng.done[b].output,
+                                      ref.done[a].output)
+    eng._slot_scheduler._alloc.assert_no_leaks()
+
+
+def test_injected_page_exhaustion_with_sharing_recovers(models):
+    """Scripted page-exhaustion holds (FaultInjector) while shared pages
+    are live: admissions defer, nothing double-frees, and the stream
+    still finishes byte-identical to an unshared, uninjected one."""
+    t, d, pt, pd = models
+    plain, pu = _shared_stream(t, d, pt, pd, sharing=False)
+    inj = FaultInjector([Fault(round=1, kind="page_exhaustion",
+                               hold_rounds=2)])
+    eng, su = _shared_stream(t, d, pt, pd, sharing=True, fault_injector=inj)
+    assert inj.injected["page_exhaustion"] >= 1
+    for a, b in zip(pu, su):
+        np.testing.assert_array_equal(plain.done[a].output,
+                                      eng.done[b].output)
+    eng._slot_scheduler._alloc.assert_no_leaks()
+
+
+def test_pressure_admission_order_parity(models):
+    """admission_order="pressure" reorders refills under a low free-page
+    watermark but each request's greedy tokens never change."""
+    t, d, pt, pd = models
+    fifo, fu = _shared_stream(t, d, pt, pd, sharing=True)
+    pres, qu = _shared_stream(t, d, pt, pd, sharing=True,
+                              admission_order="pressure")
+    for a, b in zip(fu, qu):
+        np.testing.assert_array_equal(fifo.done[a].output,
+                                      pres.done[b].output)
+
+
+# ------------------------------------------------------------- construction
+def test_misconfiguration_fails_at_construction(models):
+    t, d, pt, pd = models
+    with pytest.raises(ValueError, match="prefix_sharing"):
+        _engine(t, d, pt, pd, prefix_sharing=True)          # dense KV
+    with pytest.raises(ValueError, match="admission_order"):
+        _engine(t, d, pt, pd, admission_order="lifo")
+    with pytest.raises(ValueError, match="pressure"):
+        _engine(t, d, pt, pd, admission_order="pressure")   # dense KV
+    swa = Model(SWACFG)
+    with pytest.raises(ValueError, match="cannot share"):
+        _engine(swa, d, swa.init(jax.random.PRNGKey(2)), pd,
+                kv_layout="paged", page_size=8, prefix_sharing=True)
+
+
+# ------------------------------------------- satellite: offloading dry mode
+def test_offloading_dry_mode(monkeypatch):
+    """benchmarks/offloading.run(dry=True) is a cheap structural smoke:
+    two batch points per configuration, validated finite rows with the
+    expected names."""
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    monkeypatch.syspath_prepend(repo_root)
+    from benchmarks.offloading import DRY_BATCHES, run
+    assert len(DRY_BATCHES) < 4                # dry really is small
+    rows = run(dry=True)
+    names = [r.split(",")[0] for r in rows]
+    assert names == ["offload_hbm", "offload_offload_pcie64",
+                     "offload_offload_pcie16", "offload_ep_chips1_B1",
+                     "offload_ep_chips4_B1"]
+    for r in rows[:3]:
+        derived = dict(kv.split("=") for kv in r.split(",")[2].split(";"))
+        assert float(derived["peak"]) > 0
+        assert float(derived["B1"]) > 0

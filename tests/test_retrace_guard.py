@@ -112,3 +112,31 @@ def test_continuous_stream_steady_state(models):
         eng.run()
     assert guard.count == 0
     assert eng.session_constructions == {"model": 1}
+
+
+def test_paged_kernel_shared_prefix_stream_steady_state(models):
+    """A second identical-shape shared-prefix stream through the SAME
+    paged engine compiles nothing: the block-table kernel's steady
+    decode/verify rounds, the tail-bucket prefix admissions, the CoW
+    page copies (pow2-padded pairs) and the table swaps are all DATA
+    once the warm stream covered each signature."""
+    t, d, pt, pd = models
+    eng = ServingEngine(t, d, pt, pd, max_batch=2, gamma=2, force_sd=True,
+                        scheduler="continuous", kv_layout="paged",
+                        page_size=8, prefix_sharing=True)
+    base = np.arange(3, 15)                       # 12-token shared prefix:
+                                                  # boundary page gets CoW'd
+
+    def stream(budgets, salt):
+        for i, m in enumerate(budgets):
+            tail = np.arange(0, 4) + 20 + salt + 4 * i
+            eng.submit(np.concatenate([base, tail]), max_new_tokens=m)
+        eng.run()
+
+    stream((3, 7, 5), salt=0)                     # warm: every signature
+    assert eng.fault_counters.get("prefix_hits", 0) >= 1
+    assert eng.fault_counters.get("cow_copies", 0) >= 1
+    with compile_guard() as guard:
+        stream((4, 6, 5), salt=60)
+    assert guard.count == 0
+    assert eng.fault_counters["prefix_hits"] >= 2
