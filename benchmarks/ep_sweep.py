@@ -1,0 +1,168 @@
+"""Expert-parallel serving sweep: ep_degree ∈ {1, 2, 4, 8} on forced host
+devices, asserting token-identical outputs vs single-device serving and
+recording modeled-vs-measured a2a dispatch cost.
+
+The sweep serves one fixed continuous workload (paged KV, staggered
+arrivals, mixed token budgets) per ep_degree.  ep=1 is the meshless ragged
+gmm engine — the oracle every sharded run must match byte-for-byte; ep>1
+shards the experts over a ``("data","model")`` mesh and routes tokens
+through the a2a→per-shard-ragged-gmm dispatch (distributed/collectives.py).
+
+Two caveats the numbers must be read with (recorded in the JSON):
+
+* forced host devices share ONE physical CPU, so walls measure dispatch
+  and collective OVERHEAD, not expert-parallel speedup — the point of the
+  sweep is the parity + accounting contract, not a throughput claim;
+* the modeled a2a cost prices the volume ``2·N·K·d·bytes/ep`` against the
+  v5e ICI bandwidth (core/perf_model.SpeedupModel.ep_a2a_time), while the
+  measured column is the verify-phase wall delta vs ep=1 on that shared
+  CPU — they are reported side by side, not asserted against each other.
+
+Run with ``python -m benchmarks.ep_sweep`` (spawns its own subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``).  Writes
+BENCH_ep.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from repro.core.perf_model import SpeedupModel
+
+# mirrored by the child script below — keep in sync
+D_MODEL = 128
+TOP_K = 2
+N_MOE_LAYERS = 4
+GAMMA = 3
+EP_DEGREES = (1, 2, 4, 8)
+
+_CHILD = textwrap.dedent("""
+    import json, os, sys, time
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, numpy as np
+    from repro.configs.base import ModelConfig
+    from repro.launch.mesh import make_ep_mesh
+    from repro.models.model import Model
+    from repro.serving.engine import ServingEngine
+
+    TCFG = ModelConfig("ep-bench-t", "moe", 4, 128, 4, 2, 256, 512,
+                       num_experts=8, num_experts_per_tok=2,
+                       dtype="float32")
+    DCFG = ModelConfig("ep-bench-d", "dense", 2, 64, 2, 2, 128, 512,
+                       dtype="float32")
+    PROMPTS = [(np.arange(3 + i, 3 + i + 6 + (i % 3)) % 500 + 1)
+               for i in range(8)]
+    MAX_NEW = [16, 8, 12, 16, 8, 12, 16, 8]
+
+    def serve(ep):
+        mesh = make_ep_mesh(ep) if ep > 1 else None
+        t = Model(TCFG, moe_dispatch="ep" if mesh is not None else "gmm",
+                  mesh=mesh)
+        d = Model(DCFG)
+        pt = t.init(jax.random.PRNGKey(0))
+        pd = d.init(jax.random.PRNGKey(1))
+        eng = ServingEngine(t, d, pt, pd, max_batch=4, gamma=3,
+                            force_sd=True, scheduler="continuous",
+                            kv_layout="paged", page_size=16, seed=0,
+                            timed=True, mesh=mesh)
+
+        def stream():
+            uids = [eng.submit(p, max_new_tokens=m, arrival_round=i // 3)
+                    for i, (p, m) in enumerate(zip(PROMPTS, MAX_NEW))]
+            t0 = time.perf_counter()
+            reports = eng.run()
+            return uids, reports, time.perf_counter() - t0
+
+        stream()                           # warmup: pay every jit compile
+        uids, reports, wall = stream()     # measured steady-state replay
+        outputs = [eng.done[u].output.tolist() for u in uids]
+        stats = [r.stats for r in reports if r.stats]
+        ep_rep = next((r.ep for r in reversed(reports)
+                       if r.ep is not None), None)
+        return {
+            "ep_degree": ep,
+            "wall_s": wall,
+            "tokens": sum(len(o) for o in outputs),
+            "tokens_per_second": sum(len(o) for o in outputs)
+                                 / max(wall, 1e-9),
+            "rounds": sum(s.rounds for s in stats),
+            "verify_positions": sum(s.max_possible for s in stats),
+            "phase_times_s": {
+                "propose": sum(s.propose_time for s in stats),
+                "verify": sum(s.verify_time for s in stats),
+                "reject": sum(s.reject_time for s in stats),
+                "round": sum(s.round_time for s in stats),
+            },
+            "a2a_bytes_per_device": (ep_rep or {}).get(
+                "a2a_bytes_per_device"),
+            "per_shard_load": (ep_rep or {}).get("per_shard_load"),
+            "outputs": outputs,
+        }
+
+    print(json.dumps([serve(ep) for ep in (1, 2, 4, 8)]))
+""")
+
+
+def run(out_path: str = "BENCH_ep.json") -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = env.get("PYTHONPATH") or "src"
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run([sys.executable, "-c", _CHILD],
+                          capture_output=True, text=True, timeout=1800,
+                          env=env, cwd=os.path.dirname(
+                              os.path.dirname(os.path.abspath(__file__))))
+    if proc.returncode != 0:
+        raise RuntimeError(f"ep sweep child failed:\n{proc.stderr[-3000:]}")
+    rows = json.loads(proc.stdout.strip().splitlines()[-1])
+
+    # token-identity contract: every sharded run ≡ the single-device run
+    base = rows[0]
+    assert base["ep_degree"] == 1
+    for row in rows[1:]:
+        assert row["outputs"] == base["outputs"], (
+            f"ep={row['ep_degree']} outputs diverged from single-device")
+        assert row["tokens"] == base["tokens"]
+        row["token_identical_to_single_device"] = True
+
+    # modeled vs measured a2a cost per sharded row
+    model = SpeedupModel()
+    for row in rows:
+        ep = row["ep_degree"]
+        vtpr = row["verify_positions"] / max(row["rounds"], 1)
+        row["a2a_cost"] = {
+            "modeled_s": row["rounds"] * float(model.ep_a2a_time(
+                vtpr, TOP_K, D_MODEL, ep, n_layers=N_MOE_LAYERS)),
+            "measured_verify_delta_s":
+                row["phase_times_s"]["verify"]
+                - base["phase_times_s"]["verify"],
+        }
+        del row["outputs"]      # parity asserted above; keep the JSON small
+
+    out = {
+        "benchmark": "ep_sweep",
+        "workload": {"requests": 8, "gamma": GAMMA, "max_batch": 4,
+                     "kv_layout": "paged", "scheduler": "continuous",
+                     "d_model": D_MODEL, "top_k": TOP_K,
+                     "n_moe_layers": N_MOE_LAYERS, "num_experts": 8},
+        "note": ("forced host devices share one CPU: walls measure "
+                 "dispatch/collective overhead, not EP speedup; modeled "
+                 "a2a prices v5e ICI bandwidth"),
+        "rows": rows,
+    }
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+    for row in rows:
+        print(f"ep={row['ep_degree']}: {row['tokens_per_second']:.1f} tok/s "
+              f"verify={row['phase_times_s']['verify']:.3f}s "
+              f"a2a modeled={row['a2a_cost']['modeled_s'] * 1e6:.2f}us "
+              f"measured_delta={row['a2a_cost']['measured_verify_delta_s']:.3f}s")
+    print(f"wrote {out_path}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

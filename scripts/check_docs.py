@@ -100,11 +100,20 @@ DOCUMENTED_API = [
     ("repro.kernels.decode_attention.ops", ["decode_attention",
                                             "paged_decode_attention"]),
     ("repro.models.moe", ["moe_forward", "warm_experts", "PrefetchPlan"]),
+    ("repro.distributed.collectives", ["moe_ep_forward", "ep_a2a_bytes",
+                                       "ep_load_report"]),
+    ("repro.distributed.constraints", ["resolve_mesh", "set_mesh",
+                                       "constrain", "data_axes_of"]),
+    ("repro.distributed.sharding", ["shard_params", "shard_cache",
+                                    "cache_spec", "param_spec"]),
+    ("repro.launch.mesh", ["make_ep_mesh"]),
     ("repro.core.perf_model", ["SpeedupModel", "SpeedupModel.target_time",
                                "SpeedupModel.predict_decay",
                                "SpeedupModel.admission_time",
                                "SpeedupModel.prefix_admission_time",
-                               "SpeedupModel.paged_extend_traffic_time"]),
+                               "SpeedupModel.paged_extend_traffic_time",
+                               "SpeedupModel.ep_a2a_time",
+                               "SpeedupModel.ep_target_time"]),
     ("repro.analysis", ["analyze_paths", "compile_guard", "CompileGuard",
                         "compile_count", "compilation_events_available",
                         "Finding", "Report", "ratchet", "load_baseline",

@@ -33,6 +33,16 @@ timeout 300 python -m repro.launch.serve --arch qwen2-57b-a14b --reduced \
   --requests 4 --max-batch 2 --max-new 4 --gamma 2 \
   --scheduler continuous --no-autotune --kv-layout paged --page-size 16 \
   --prefix-sharing --shared-prefix 24 --admission-order pressure
+# expert-parallel smoke: continuous paged serving with experts sharded
+# over a 1x4 ("data","model") mesh of forced host devices — the a2a →
+# per-shard ragged gmm dispatch plus per-wave EP telemetry
+# (docs/distributed.md); the reduced arch has E=4 experts, so ep=4 puts
+# one expert per shard
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+timeout 300 python -m repro.launch.serve --arch qwen2-57b-a14b --reduced \
+  --requests 4 --max-batch 2 --max-new 6 --gamma 2 \
+  --scheduler continuous --no-autotune --kv-layout paged --page-size 16 \
+  --ep-degree 4 --mesh-layout tp
 # fault-injection smoke: a seeded injector stream (page exhaustion +
 # preemption/requeue, NaN quarantine, slow round, admission retry) must
 # complete with the expected finish_reasons, zero leaked pages, and a

@@ -77,8 +77,20 @@ KNOWN_ENTRY_POINTS: Tuple[KnownEntry, ...] = (
                static=("self", "gamma")),
     # moe / attention forwards (reached through layer dispatch)
     KnownEntry("models/moe.py", "moe_forward",
-               static=("cfg", "dispatch", "return_metrics")),
-    KnownEntry("models/moe.py", "warm_experts", static=("cfg",)),
+               static=("cfg", "dispatch", "return_metrics", "mesh",
+                       "mesh_layout")),
+    KnownEntry("models/moe.py", "warm_experts", static=("cfg", "mesh")),
+    # expert-parallel shard_map dispatch (distributed/collectives.py):
+    # moe_ep_forward is the mesh entry, _ragged_ep_shard the per-shard
+    # body (everything bound via functools.partial there is static)
+    KnownEntry("distributed/collectives.py", "moe_ep_forward",
+               static=("cfg", "mesh", "layout", "capacity_factor",
+                       "interpret")),
+    KnownEntry("distributed/collectives.py", "_ragged_ep_shard",
+               static=("cfg", "slots", "activation", "model_axis",
+                       "m_shards", "interpret")),
+    KnownEntry("distributed/constraints.py", "constrain",
+               static=("kind", "mesh", "layout")),
     KnownEntry("models/attention.py", "attention_forward",
                static=("cfg",)),
     # paged decode/verify attention kernel (reached from gqa_forward's

@@ -191,6 +191,60 @@ class SpeedupModel:
             passes = 1.0
         return n_layers * B * positions * per_pos * passes / self.hw.hbm_bw
 
+    def ep_a2a_time(self, tokens, top_k, d_model, ep_degree, *,
+                    n_layers: int = 1, dtype_bytes: int = 2,
+                    overlap_time: float = 0.0):
+        """Modeled wall time of an EP MoE layer's all-to-all hops.
+
+        The shard_map dispatch (distributed/collectives.py) moves each
+        routed (token, k) payload across the interconnect twice — dispatch
+        to the expert's shard and combine back — so per device the volume
+        is ``tokens·K·d_model·2·dtype_bytes / ep_degree`` per MoE layer,
+        priced against ``hw.ici_bw``.  ``overlap_time`` is the window of
+        independent compute the dispatch is staggered against (the
+        shared-expert matmul runs BETWEEN the two hops); the net cost
+        clamps at zero when the collective hides entirely.  Returns 0 for
+        ``ep_degree <= 1`` (no interconnect crossed).
+        """
+        from repro.distributed.collectives import ep_a2a_bytes
+        toks = np.asarray(tokens, np.float64)
+        vol = np.vectorize(
+            lambda n: ep_a2a_bytes(float(n), top_k, d_model, ep_degree,
+                                   dtype_bytes=dtype_bytes))(toks)
+        raw = n_layers * vol / self.hw.ici_bw
+        return np.maximum(raw - overlap_time, 0.0)
+
+    def ep_target_time(self, t, top_k, num_experts, ep_degree, d_model, *,
+                       n_moe_layers: int = 1, dtype_bytes: int = 2,
+                       overlap_time: float = 0.0,
+                       params: np.ndarray | None = None):
+        """Predicted T_target(t) under expert-parallel sharded serving.
+
+        Splits the fitted gmm-regime target time into its dense part
+        (bias + k1·G(t): attention, router, shared experts — replicated
+        work, unchanged by EP) and its expert part (k2·n(t) + k3·G(t̄_exp):
+        expert weight loads + expert GEMMs — sharded E/ep per device), and
+        adds the ``ep_a2a_time`` interconnect term net of overlap.  The
+        EP deployment changes neither N(t) nor T̄_exp (§3.4), so the MoESD
+        speedup analysis carries over with only this cost relabeling —
+        ``benchmarks/ep_sweep.py`` holds the a2a term against measured
+        per-phase timings.
+        """
+        p = self.params if params is None else np.asarray(params, np.float64)
+        assert p is not None, "fit() first or pass params"
+        (bias, k1, k2, k3, _db, _dk, _rb, _rk, lam, s) = p
+        knee = lam * self.hw.ridge_point
+        t = np.asarray(t, np.float64)
+        dense = bias + k1 * roofline_response(t, knee, s)
+        n = expected_activated_experts(t, num_experts, top_k)
+        t_exp = mean_tokens_per_expert(t, top_k / num_experts)
+        expert = k2 * n + k3 * roofline_response(t_exp, knee, s)
+        a2a = self.ep_a2a_time(t, top_k, d_model, ep_degree,
+                               n_layers=n_moe_layers,
+                               dtype_bytes=dtype_bytes,
+                               overlap_time=overlap_time)
+        return dense + expert / max(ep_degree, 1) + a2a
+
     def compute_speedup(self, p: np.ndarray, batch, gamma, top_k,
                         num_experts, sigma):
         """Alg. 1 line 3 — vectorized over measurement arrays."""

@@ -112,6 +112,12 @@ class PrefetchProposer:
     proposer's.  The wrapper only adds the router probe to ``propose`` (the
     resulting ``PrefetchPlan`` rides in the round work-state) and exposes
     ``provides_prefetch`` so the engine runs warm + scored-verify stages.
+
+    Under expert-parallel sharded serving the plan is mesh-agnostic (global
+    expert ids); LOCALITY lives in the warm gather itself —
+    ``models/moe.warm_experts(..., mesh=...)`` runs as a shard_map in which
+    each shard touches only the predicted experts of ITS local slice, so
+    warming never streams another shard's weights across the interconnect.
     """
 
     kind = "prefetch"

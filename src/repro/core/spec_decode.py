@@ -86,9 +86,12 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.core.proposer import Proposer, make_proposer
 from repro.core.rejection import probs_from_logits, rejection_sample, sample_from
+from repro.distributed.constraints import resolve_mesh
+from repro.distributed.sharding import shard_cache
 from repro.models.model import Model
 from repro.models.moe import warm_experts as moe_warm_experts
 from repro.serving.faults import logits_finite
@@ -250,11 +253,26 @@ class SDEngine:
     """
 
     def __init__(self, target: Model, proposer: Proposer, *,
-                 gamma: int = 4, temperature: float = 0.0):
+                 gamma: int = 4, temperature: float = 0.0,
+                 mesh=None, mesh_layout: Optional[str] = None):
         self.target = target
         self.proposer = proposer
         self.gamma = gamma
         self.temperature = temperature
+        # mesh defaults to the target model's (one mesh per session);
+        # host-boundary inputs are then committed REPLICATED so every jit
+        # call sees one placement signature (docs/distributed.md), and
+        # session caches open device_put per distributed.sharding.cache_spec
+        if mesh is None and getattr(target, "mesh", None) is not None:
+            mesh = target.mesh
+            mesh_layout = (mesh_layout if mesh_layout is not None
+                           else target.mesh_layout)
+        if mesh is not None:
+            mesh, mesh_layout = resolve_mesh(mesh, mesh_layout)
+        self.mesh = mesh
+        self.mesh_layout = mesh_layout
+        self._replicated = (NamedSharding(mesh, PartitionSpec())
+                            if mesh is not None else None)
         self._round_cache: Dict[int, Callable] = {}      # gamma -> jitted round
         self._stage_cache: Dict[int, Tuple] = {}         # gamma -> stage jits
         self._admit_cache: Dict[Tuple[int, int, int], Callable] = {}
@@ -276,6 +294,17 @@ class SDEngine:
         # summed across every generate() call this session served
         self.prefetch_totals: Dict[str, int] = {
             "hits": 0, "actual": 0, "predicted": 0, "rounds": 0}
+
+    def _host(self, x, np_dtype):
+        """Host-boundary cast with mesh-aware placement: under a mesh every
+        host value is committed REPLICATED, so repeated calls (new streams,
+        new admission waves) present identical sharding signatures to the
+        jit caches — an uncommitted single-device array next to sharded
+        params would otherwise key (and retrace) on whatever placement the
+        first call happened to see."""
+        if self._replicated is not None and not isinstance(x, jax.Array):
+            return jax.device_put(np.asarray(x, np_dtype), self._replicated)  # lint: allow[T104] tracers are jax.Array and take the _device_cast branch; only host values reach here
+        return _device_cast(x, np_dtype)
 
     def compiled_gammas(self) -> List[int]:
         """Gammas with a built round (fused or staged) in this session."""
@@ -417,10 +446,13 @@ class SDEngine:
             warm = None
             if getattr(self.proposer, "provides_prefetch", False):
                 target_cfg = self.target.cfg
+                warm_mesh = self.mesh
 
                 def warm(params_t, plan):
+                    # mesh threaded → each shard gathers only ITS expert
+                    # slice (models/moe.warm_experts shard_map path)
                     return moe_warm_experts(params_t["layers"], target_cfg,
-                                            plan)
+                                            plan, mesh=warm_mesh)
                 warm = jax.jit(warm)
 
             fns = (jax.jit(propose_logged), jax.jit(verify),
@@ -453,11 +485,11 @@ class SDEngine:
         key = key if key is not None else jax.random.PRNGKey(0)
         if not prefill_kwargs:
             fn = self._start_fn(max_seq, cache_opts)
-            return fn(params, _device_cast(prompts, np.int32),
+            return fn(params, self._host(prompts, np.int32),
                       None if lengths is None
-                      else _device_cast(lengths, np.int32),
+                      else self._host(lengths, np.int32),
                       None if page_table is None
-                      else _device_cast(page_table, np.int32), key)
+                      else self._host(page_table, np.int32), key)
         t_cache, p_state, last_l = self._fresh_prefill(
             params, prompts, lengths, max_seq, cache_opts=cache_opts,
             page_table=page_table, prefill_kwargs=prefill_kwargs)
@@ -503,6 +535,12 @@ class SDEngine:
             params_t, params_p, prompts, max_seq, lengths=lengths, key=key,
             prefill_kwargs=prefill_kwargs, cache_opts=cache_opts,
             page_table=page_table)
+        if self.mesh is not None:
+            # place the session cache per distributed.sharding.cache_spec
+            # ONCE at open (batch over data axes, KV heads / page pools
+            # over "model"); rounds then carry the placement forward
+            t_cache = jax.device_put(t_cache,
+                                     shard_cache(t_cache, self.mesh))
         return SessionState(params={"target": params_t, "draft": params_p},
                             t_cache=t_cache, p_state=p_state,
                             last_token=last_token, max_seq=max_seq)
@@ -546,8 +584,8 @@ class SDEngine:
             key = jax.random.PRNGKey(0)
         k_prop, k_rej = jax.random.split(key)
         B = state.batch
-        active = _device_cast(np.ones((B,), bool) if active is None
-                              else active, bool)
+        active = self._host(np.ones((B,), bool) if active is None
+                            else active, bool)
         params = state.params
         pf_aware = getattr(self.proposer, "provides_prefetch", False)
         staged = timed or pf_aware
@@ -686,11 +724,11 @@ class SDEngine:
             raise ValueError(f"admit batch {B} != session batch "
                              f"{state.batch}")
         key = key if key is not None else jax.random.PRNGKey(0)
-        mask = _device_cast(admit_mask, bool)
+        mask = self._host(admit_mask, bool)
         fn = self._admit_fn(B, Tp, state.max_seq)
         t_cache, p_state, last_token = fn(
             state.params, state.t_cache, state.p_state, state.last_token,
-            _device_cast(prompts, np.int32), _device_cast(lengths, np.int32),
+            self._host(prompts, np.int32), self._host(lengths, np.int32),
             mask, key)
         return replace(state, t_cache=t_cache, p_state=p_state,
                        last_token=last_token)
@@ -807,8 +845,8 @@ class SDEngine:
         fn = self._admit_rows_fn(R, Tp, state.max_seq)
         t_cache, p_state, last_token = fn(
             state.params, state.t_cache, state.p_state, state.last_token,
-            _device_cast(prompts, np.int32), _device_cast(lengths, np.int32),
-            _device_cast(rows, np.int32), _device_cast(valid, bool), key)
+            self._host(prompts, np.int32), self._host(lengths, np.int32),
+            self._host(rows, np.int32), self._host(valid, bool), key)
         return replace(state, t_cache=t_cache, p_state=p_state,
                        last_token=last_token)
 
@@ -941,12 +979,12 @@ class SDEngine:
         fn = self._admit_prefix_fn(R, Tt, Tp, state.max_seq)
         t_cache, p_state, last_token = fn(
             state.params, state.t_cache, state.p_state, state.last_token,
-            _device_cast(tails, np.int32),
-            _device_cast(tail_start, np.int32),
-            _device_cast(tail_len, np.int32),
-            _device_cast(prompts, np.int32),
-            _device_cast(lengths, np.int32),
-            _device_cast(rows, np.int32), _device_cast(valid, bool), key)
+            self._host(tails, np.int32),
+            self._host(tail_start, np.int32),
+            self._host(tail_len, np.int32),
+            self._host(prompts, np.int32),
+            self._host(lengths, np.int32),
+            self._host(rows, np.int32), self._host(valid, bool), key)
         return replace(state, t_cache=t_cache, p_state=p_state,
                        last_token=last_token)
 
@@ -1052,14 +1090,14 @@ class SDEngine:
         take = min(C, total - done)
         toks = np.full((R, C), 0, np.int32)
         toks[:, :take] = pa.prompts[:, done:done + take]
-        toks = jnp.asarray(toks)
-        n_row = _device_cast(np.full((R,), take, np.int32), np.int32)
+        toks = self._host(toks, np.int32)
+        n_row = self._host(np.full((R,), take, np.int32), np.int32)
         final = done + take >= total
         params = state.params
         if done == 0:
             fn = self._chunk_fn("first", R, C, Tp, state.max_seq)
             fresh_t = fn(params, toks,
-                         _device_cast(np.minimum(pa.lengths, C), np.int32))
+                         self._host(np.minimum(pa.lengths, C), np.int32))
             return state, replace(pa, t_cache=fresh_t, consumed=take)
         if not final:
             fn = self._chunk_fn("mid", R, C, Tp, state.max_seq)
@@ -1067,12 +1105,12 @@ class SDEngine:
             return state, replace(pa, t_cache=fresh_t,
                                   consumed=done + take)
         fn = self._chunk_fn("final", R, C, Tp, state.max_seq)
-        valid = _device_cast(np.ones((R,), bool), bool)
+        valid = self._host(np.ones((R,), bool), bool)
         t_cache, p_state, last_token = fn(
             params, state.t_cache, state.p_state, state.last_token,
-            pa.t_cache, toks, _device_cast(pa.prompts, np.int32),
-            _device_cast(pa.lengths, np.int32), n_row,
-            _device_cast(pa.rows, np.int32), valid, pa.key)
+            pa.t_cache, toks, self._host(pa.prompts, np.int32),
+            self._host(pa.lengths, np.int32), n_row,
+            self._host(pa.rows, np.int32), valid, pa.key)
         new_state = replace(state, t_cache=t_cache, p_state=p_state,
                             last_token=last_token)
         return new_state, None

@@ -2,179 +2,242 @@
 
 The baseline one-hot dispatch (models/moe.py) runs EVERY token through
 EVERY expert — E/K-fold redundant compute (usefulness ≈ K/E in the
-roofline table) that GSPMD cannot eliminate.  This module replaces it with
-explicit expert parallelism:
+roofline table) that GSPMD cannot eliminate.  This module dispatches
+routed tokens through an explicit two-hop ``all_to_all`` into the
+*per-shard ragged grouped matmul*:
 
   * expert weights are sharded over the "model" axis (E/m experts/shard),
-  * activations arrive batch-sharded over data and replicated over model,
-  * each model shard bins ONLY tokens routed to its local experts
-    (capacity bins, paper's balanced-routing assumption), runs the local
-    expert FFN, scatters partial outputs, and one psum over "model"
-    combines expert contributions.
+  * token rows are sharded over EVERY mesh axis (each of the n shards
+    routes a disjoint slice),
+  * each shard ranks its (token, k) pairs per destination shard and
+    all-to-alls the token payloads to the shards owning the chosen
+    experts — per-DEST-shard slot buffers, NOT dense (E, C) capacity
+    bins,
+  * the receiving shard sorts arrivals by LOCAL expert id and runs the
+    ragged gmm kernel (kernels/gmm/ragged.py) with local group sizes —
+    expert GEMM work scales with the tokens actually received, and an
+    EMPTY local expert costs zero tiles,
+  * the shared-expert matmul runs on local rows BETWEEN the two a2a hops,
+    so the combine is staggered and the compiler can hide the collectives
+    under independent compute (the TensorRT-LLM NCCL-overlap idiom),
+  * the return all-to-all brings each pair's expert output home, where it
+    is combined against the top-k router weights.
 
-Per-layer collective cost: one (N, d) all-reduce over the model axis —
-instead of E/K-fold FLOPs.  Dense compute per shard: N*K/m tokens worth of
-expert FFN (capacity-padded).
+Per-layer collective cost: 2 × (N·K·d / ep_degree) elements per device
+(dispatch + combine) — priced by ``SpeedupModel.ep_a2a_time``
+(core/perf_model.py) and reported per wave by ``ep_load_report``.
 
-Used with Model(..., moe_dispatch="ep"); requires constraints.set_mesh().
+Used with ``Model(cfg, moe_dispatch="ep", mesh=...)``; the mesh is
+threaded explicitly (docs/distributed.md), with the deprecated
+``constraints.set_mesh`` global as fallback.
 """
 from __future__ import annotations
 
+import math
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.distributed.constraints import get_mesh
+from repro.distributed.constraints import resolve_mesh
 
 
 def _act(x, activation):
     return jax.nn.gelu(x, approximate=True) if activation == "gelu" else jax.nn.silu(x)
 
 
-def _local_moe(x, router_w, w_gate, w_up, w_down, *, top_k: int,
-               num_experts: int, capacity: int, activation: str,
-               model_axis: str):
-    """Runs inside shard_map.  x: (N, d) local tokens (replicated over the
-    model axis); w_*: (E_local, d, f) this shard's experts."""
-    e_local = w_gate.shape[0]
-    m_idx = jax.lax.axis_index(model_axis)
-    first = m_idx * e_local                               # global id of expert 0
+def _ragged_ep_shard(x, router_w, w_gate, w_up, w_down, shared, *,
+                     cfg, slots: int, activation: str,
+                     model_axis: str, m_shards: int, interpret):
+    """shard_map body: route local rows, all-to-all routed payloads to the
+    shards owning the chosen experts, run the LOCAL ragged gmm slice, and
+    all-to-all the results back for the top-k weighted combine.
 
-    logits = x.astype(jnp.float32) @ router_w             # (N, E) full router
-    probs = jax.nn.softmax(logits, axis=-1)
-    weights, indices = jax.lax.top_k(probs, top_k)        # (N, K) global ids
-    weights = (weights / jnp.sum(weights, -1, keepdims=True)).astype(x.dtype)
+    x: (N_loc, d) this shard's disjoint token rows; w_*: (e_local, d, f)
+    this shard's expert slice; shared: () or replicated shared-expert
+    weights, computed between the two a2a hops so the collectives overlap
+    independent compute instead of serializing with it.
+    """
+    from repro.kernels.gmm import ops as gmm_ops
+    from repro.models.moe import router_topk
 
-    # keep only (token, k) pairs routed to experts owned by this shard
-    local = (indices >= first) & (indices < first + e_local)
-    lidx = jnp.where(local, indices - first, e_local)     # e_local = drop bin
-    flat_e = lidx.reshape(-1)                             # (N*K,)
-    onehot = jax.nn.one_hot(flat_e, e_local + 1, dtype=jnp.int32)
-    rank = (jnp.cumsum(onehot, axis=0) - onehot)
-    slot = jnp.sum(rank * onehot, -1)
-    kept = local.reshape(-1) & (slot < capacity)
-    slot = jnp.where(kept, slot, capacity - 1)
-    tok = jnp.repeat(jnp.arange(x.shape[0]), top_k)
-    bins = jnp.zeros((e_local, capacity, x.shape[1]), x.dtype)
-    bins = bins.at[jnp.where(kept, flat_e, 0), slot].add(
-        jnp.where(kept[:, None], x[tok], 0))
-
-    h = _act(jnp.einsum("ecd,edf->ecf", bins, w_gate), activation) \
-        * jnp.einsum("ecd,edf->ecf", bins, w_up)
-    y_bins = jnp.einsum("ecf,efd->ecd", h, w_down)        # (E_local, C, d)
-
-    gathered = y_bins[jnp.where(kept, flat_e, 0), slot]
-    gathered = jnp.where(kept[:, None], gathered, 0)
-    wk = (weights.reshape(-1) * kept).astype(y_bins.dtype)
-    partial_out = jnp.zeros_like(x).at[tok].add(gathered * wk[:, None])
-    # combine expert contributions across model shards
-    return jax.lax.psum(partial_out, model_axis)
-
-
-def _local_moe_a2a(x, router_w, w_gate, w_up, w_down, *, top_k: int,
-                   num_experts: int, capacity: int, activation: str,
-                   model_axis: str, m_shards: int):
-    """Two-hop all-to-all EP (DeepSpeed-MoE style), for the FSDP layout
-    where tokens are sharded over the model axis too: each tile routes its
-    own disjoint tokens, EXCHANGES them with the shards owning the chosen
-    experts (all-to-all), computes locally, and exchanges back.  No psum —
-    each (token, k) pair is computed exactly once.
-
-    x: (N_loc, d) tokens of this tile; w_*: (e_local, d, f)."""
     N, d = x.shape
     e_local = w_gate.shape[0]
-    E = num_experts
-    logits = x.astype(jnp.float32) @ router_w
-    probs = jax.nn.softmax(logits, axis=-1)
-    weights, indices = jax.lax.top_k(probs, top_k)
-    weights = (weights / jnp.sum(weights, -1, keepdims=True)).astype(x.dtype)
+    top_k = cfg.num_experts_per_tok
 
-    flat_e = indices.reshape(-1)                          # (N*K,) global ids
-    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
-    slot = jnp.sum((jnp.cumsum(onehot, 0) - onehot) * onehot, -1)
-    kept = slot < capacity
-    slot = jnp.where(kept, slot, capacity - 1)
+    # 1. route local rows with the full (replicated) router — the same
+    #    router_topk the single-device dispatches use (renormalized
+    #    top-k, fp32), so routing decisions match bit-for-bit
+    weights, indices, _ = router_topk({"router": router_w}, cfg, x)
+
+    # 2. rank each (token, k) pair within its DESTINATION shard — the slot
+    #    buffer is per dest shard, not per expert: no dense (E, C) staging
+    flat_e = indices.reshape(-1)                   # (N*K,) global expert ids
+    dest = flat_e // e_local                       # owning shard per pair
     tok = jnp.repeat(jnp.arange(N), top_k)
-    send = jnp.zeros((E, capacity, d), x.dtype)
-    send = send.at[jnp.where(kept, flat_e, 0), slot].add(
-        jnp.where(kept[:, None], x[tok], 0))
-    send = send.reshape(m_shards, e_local, capacity, d)
+    onehot = jax.nn.one_hot(dest, m_shards, dtype=jnp.int32)
+    rank = jnp.cumsum(onehot, axis=0) - onehot
+    slot = jnp.take_along_axis(rank, dest[:, None], axis=1)[:, 0]
+    kept = slot < slots                            # all-True when slots=N*K
+    dest_eff = jnp.where(kept, dest, m_shards)     # OOB → scatter drops
+    slot = jnp.where(kept, slot, 0)
 
+    # 3. dispatch a2a: token payloads + their LOCAL expert id on the dest
+    #    shard (e_local marks an empty slot → pad group after the sort)
+    send = jnp.zeros((m_shards, slots, d), x.dtype)
+    send = send.at[dest_eff, slot].set(x[tok], mode="drop")
+    send_eid = jnp.full((m_shards, slots), e_local, jnp.int32)
+    send_eid = send_eid.at[dest_eff, slot].set(
+        flat_e % e_local, mode="drop")
     recv = jax.lax.all_to_all(send, model_axis, split_axis=0, concat_axis=0)
-    # recv[j] = tokens from shard j destined to MY experts
-    xin = recv.transpose(1, 0, 2, 3).reshape(e_local, m_shards * capacity, d)
-    h = _act(jnp.einsum("ecd,edf->ecf", xin, w_gate), activation) \
-        * jnp.einsum("ecd,edf->ecf", xin, w_up)
-    y = jnp.einsum("ecf,efd->ecd", h, w_down)
-    y = y.reshape(e_local, m_shards, capacity, d).transpose(1, 0, 2, 3)
-    back = jax.lax.all_to_all(y, model_axis, split_axis=0, concat_axis=0)
-    back = back.reshape(E, capacity, d)
+    recv_eid = jax.lax.all_to_all(send_eid, model_axis,
+                                  split_axis=0, concat_axis=0)
 
-    gathered = back[jnp.where(kept, flat_e, 0), slot]
-    gathered = jnp.where(kept[:, None], gathered, 0)
-    wk = (weights.reshape(-1) * kept).astype(gathered.dtype)
-    return jnp.zeros_like(x).at[tok].add(gathered * wk[:, None])
+    # 4. shared-expert branch on local rows — no data dependence on the
+    #    a2a, so the scheduler hides the dispatch hop under this matmul
+    #    (and the combine below is staggered after it)
+    shared_out = None
+    if shared:  # lint: allow[T101] tuple-or-None closure structure: truthiness is trace-time shape, not data
+        sg, su, sd_ = shared
+        shared_out = (_act(x @ sg, activation) * (x @ su)) @ sd_
+
+    # 5. per-shard ragged FFN: sort arrivals by local expert id, local
+    #    group sizes drive the kernel — empty local experts cost nothing,
+    #    pad slots sort into a trailing group no expert owns
+    xs = recv.reshape(m_shards * slots, d)
+    eid = recv_eid.reshape(-1)
+    order = jnp.argsort(eid)                       # stable: preserves (src, slot)
+    sizes = jnp.bincount(eid, length=e_local + 1)[:e_local]
+    ys = gmm_ops.ragged_moe_ffn(xs[order], w_gate, w_up, w_down, sizes,
+                                activation=activation, interpret=interpret)
+    real = jnp.arange(m_shards * slots) < jnp.sum(sizes)
+    ys = jnp.where(real[:, None], ys, 0).astype(x.dtype)
+    back = jnp.zeros_like(ys).at[order].set(ys).reshape(m_shards, slots, d)
+
+    # 6. return a2a, then combine against the top-k weights (fp32 accum)
+    ret = jax.lax.all_to_all(back, model_axis, split_axis=0, concat_axis=0)
+    gathered = ret[jnp.where(kept, dest, 0), slot]
+    wk = weights.reshape(-1) * kept
+    out = jnp.zeros((N, d), jnp.float32)
+    out = out.at[tok].add(gathered.astype(jnp.float32) * wk[:, None])
+    out = out.astype(x.dtype)
+    if shared_out is not None:
+        out = out + shared_out
+    return out
 
 
 def moe_ep_forward(params: dict, cfg, x: jnp.ndarray, *,
-                   capacity_factor: float = 2.0):
-    """(B, T, d) → (B, T, d) expert-parallel MoE FFN.  Falls back to the
-    dense one-hot path when no mesh is active (single-device tests)."""
-    mesh = get_mesh()
+                   mesh=None, layout: Optional[str] = None,
+                   capacity_factor: Optional[float] = None,
+                   interpret: Optional[bool] = None):
+    """(B, T, d) → (B, T, d) expert-parallel MoE FFN.
+
+    Token rows shard over every mesh axis; each shard all-to-alls its
+    routed (token, k) payloads to the shards owning the chosen experts,
+    which run the ragged gmm over their local expert slice (module
+    docstring has the full contract).  ``capacity_factor=None`` (default)
+    sizes the per-destination slot buffers to the drop-free worst case
+    N_loc·K, making outputs token-identical to the single-device gmm
+    dispatch; a finite factor trades a2a volume for possible drops under
+    extreme skew.  Falls back to the dense one-hot path when no mesh is
+    threaded (single-device tests) or E does not divide over the model
+    axis.
+    """
+    mesh, layout = resolve_mesh(mesh, layout)
     if mesh is None or "model" not in mesh.axis_names \
             or cfg.num_experts % mesh.shape["model"] != 0:
         from repro.models import moe as moe_mod
         return moe_mod.moe_forward(params, cfg, x, dispatch="onehot")[0]
+    if interpret is None:
+        from repro.kernels.gmm.ragged import INTERPRET
+        interpret = INTERPRET
 
-    import math
-    from repro.distributed.constraints import get_layout
     B, T, d = x.shape
-    layout = get_layout()
-    if layout == "fsdp":
-        token_axes = tuple(mesh.axis_names)
-    else:
-        token_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
-    d_size = math.prod(mesh.shape[a] for a in token_axes) if token_axes else 1
-    if (B * T) % max(d_size, 1) != 0:
-        token_axes = ()
-        d_size = 1
-        layout = "tp"
-    n_local = B * T // d_size
-    # capacity: 128-lane tiles when the workload is large (MXU efficiency),
-    # 8-row sublane granularity when tiny — a 128 floor makes EP pad MORE
-    # work than one-hot's E/K redundancy at decode scale (§Perf A-iterations)
-    want = -(-int(n_local * cfg.num_experts_per_tok * capacity_factor)
-             // cfg.num_experts)
-    align = 128 if want >= 128 else 8
-    capacity = max(align, -(-want // align) * align)
+    m = mesh.shape["model"]
+    all_axes = tuple(mesh.axis_names)
+    n_shards = math.prod(mesh.shape[a] for a in all_axes)
+    K = cfg.num_experts_per_tok
 
+    # row-shard tokens over the whole mesh; pad to an even split (pad rows
+    # are zero vectors — routed, computed, sliced off: correctness is
+    # unaffected, and no-pad is the common case at serving batch sizes)
     xf = x.reshape(B * T, d)
-    in_specs = (P(token_axes or None, None),              # tokens
-                P(),                                      # router (replicated)
-                P("model", None, None), P("model", None, None),
-                P("model", None, None))
-    out_specs = P(token_axes or None, None)
-    if layout == "fsdp":
-        # tokens sharded over "model" too → two-hop all-to-all EP
-        local_fn = partial(_local_moe_a2a, top_k=cfg.num_experts_per_tok,
-                           num_experts=cfg.num_experts, capacity=capacity,
-                           activation=cfg.mlp_activation, model_axis="model",
-                           m_shards=mesh.shape["model"])
+    n_pad = -(-(B * T) // n_shards) * n_shards
+    if n_pad != B * T:
+        xf = jnp.pad(xf, ((0, n_pad - B * T), (0, 0)))
+    n_local = n_pad // n_shards
+    if capacity_factor is None:
+        slots = n_local * K                        # drop-free (token-identical)
     else:
-        # tokens replicated over "model" → local-select EP + psum combine
-        local_fn = partial(_local_moe, top_k=cfg.num_experts_per_tok,
-                           num_experts=cfg.num_experts, capacity=capacity,
-                           activation=cfg.mlp_activation, model_axis="model")
+        want = -(-int(n_local * K * capacity_factor) // m)
+        slots = max(8, min(n_local * K, -(-want // 8) * 8))
+
+    has_shared = "shared" in params
+    shared_w = ((params["shared"]["w_gate"], params["shared"]["w_up"],
+                 params["shared"]["w_down"]) if has_shared else ())
+    in_specs = (P(all_axes, None),                 # tokens: disjoint rows
+                P(),                               # router (replicated)
+                P("model", None, None), P("model", None, None),
+                P("model", None, None),            # expert slices
+                (P(), P(), P()) if has_shared else ())
     fn = shard_map(
-        local_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        partial(_ragged_ep_shard, cfg=cfg, slots=slots,
+                activation=cfg.mlp_activation, model_axis="model",
+                m_shards=m, interpret=interpret),
+        mesh=mesh, in_specs=in_specs, out_specs=P(all_axes, None),
         check_rep=False)
     y = fn(xf, params["router"], params["w_gate"], params["w_up"],
-           params["w_down"])
-    if "shared" in params:
-        s = params["shared"]
-        y = y + (_act(xf @ s["w_gate"], cfg.mlp_activation)
-                 * (xf @ s["w_up"])) @ s["w_down"]
-    return y.reshape(B, T, d)
+           params["w_down"], shared_w)
+    return y[:B * T].reshape(B, T, d)
+
+
+def ep_a2a_bytes(tokens: int, top_k: int, d_model: int, ep_degree: int,
+                 *, dtype_bytes: int = 2) -> float:
+    """Per-device all-to-all volume of one EP MoE layer: each routed copy
+    crosses the interconnect twice (dispatch + combine), N·K·d·2·bytes
+    total, split over ep_degree devices."""
+    if ep_degree <= 1:
+        return 0.0
+    return 2.0 * tokens * top_k * d_model * dtype_bytes / ep_degree
+
+
+def ep_load_report(params: dict, cfg, tokens, ep_degree: int,
+                   *, dtype_bytes: Optional[int] = None) -> Optional[dict]:
+    """Host-side expert-load skew probe for serving telemetry (no profiler).
+
+    Routes ``tokens`` through every MoE router via the embedding probe
+    (same approximation as ``core/prefetch.router_probe``), folds the (E,)
+    activation counts into per-shard loads, and reports the load imbalance
+    (max/mean over shards) plus the modeled per-device a2a volume.
+    Returns None when there are no tokens or no MoE layers.
+    """
+    import numpy as np
+
+    toks = np.asarray(tokens).reshape(-1)
+    if toks.size == 0 or not any(cfg.moe_pattern):
+        return None
+    x = params["embed"]["table"][jnp.asarray(toks, jnp.int32)]
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    counts = jnp.zeros((E,), jnp.float32)
+    for i, is_moe in enumerate(cfg.moe_pattern):
+        if not is_moe:
+            continue
+        router = params["layers"][i]["ffn"]["router"]      # (P, d, E)
+        logits = jnp.einsum("nd,pde->pne", x.astype(jnp.float32),
+                            router.astype(jnp.float32))
+        _, topk = jax.lax.top_k(jax.nn.softmax(logits, axis=-1), K)
+        counts = counts.at[topk.reshape(-1)].add(1.0)
+    per_shard = np.asarray(counts).reshape(ep_degree, E // ep_degree).sum(-1)
+    mean = float(per_shard.mean())
+    if dtype_bytes is None:
+        dtype_bytes = 4 if cfg.dtype == "float32" else 2
+    return {
+        "per_shard_load": per_shard.astype(int).tolist(),
+        "imbalance": float(per_shard.max() / mean) if mean else 0.0,
+        "a2a_bytes_per_device": ep_a2a_bytes(
+            int(toks.size), K, cfg.d_model, ep_degree,
+            dtype_bytes=dtype_bytes),
+    }

@@ -7,23 +7,53 @@ embedding table's d-dim carried the 'data' axis).  Explicit constraints at
 a few strategic points pin the batch axis to ("pod","data") and let the
 partitioner all-gather weights instead.
 
-The module is a process-global switch so model code stays mesh-agnostic:
-launch code calls ``set_mesh(mesh)``; tests/single-device runs leave it
-unset and ``constrain`` is a no-op.
+The mesh is threaded EXPLICITLY: ``Model(cfg, mesh=...)`` (and
+``ServingEngine(..., mesh=...)`` above it) hands the mesh to every
+``constrain`` call, so model code carries no hidden global state and the
+analyzer's captured-state rule (T106) holds without waivers.  A validated
+process-global fallback (``set_mesh``) survives, deprecated, for launch
+scripts that configure sharding once at startup; new code should pass
+``mesh=`` instead.
 """
 from __future__ import annotations
 
-from typing import Optional
+import math
+import warnings
+from typing import Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+VALID_LAYOUTS = ("tp", "fsdp")
+
+# Deprecated process-global fallback — written ONLY by set_mesh (host-side,
+# never inside a trace), read only when no explicit mesh is threaded.
 _MESH: Optional[Mesh] = None
 _LAYOUT: str = "tp"
 
 
+def _validate(mesh: Optional[Mesh], layout: str) -> None:
+    if layout not in VALID_LAYOUTS:
+        raise ValueError(f"layout must be one of {VALID_LAYOUTS}, got {layout!r}")
+    if mesh is not None and not isinstance(mesh, Mesh):
+        raise TypeError(f"mesh must be a jax.sharding.Mesh, got {type(mesh)!r}")
+
+
 def set_mesh(mesh: Optional[Mesh], layout: str = "tp"):
+    """DEPRECATED: install a process-global mesh for ``constrain`` fallback.
+
+    Thread the mesh explicitly instead — ``Model(cfg, mesh=...)`` /
+    ``ServingEngine(..., mesh=...)`` — so sharding is visible at the call
+    site and carries no process-global state.  Arguments are validated
+    (Mesh instance, layout in ``VALID_LAYOUTS``); ``set_mesh(None)``
+    clears the fallback.
+    """
     global _MESH, _LAYOUT
+    _validate(mesh, layout)
+    warnings.warn(
+        "set_mesh is deprecated: pass mesh=/mesh_layout= explicitly "
+        "(Model(cfg, mesh=...), ServingEngine(..., mesh=...))",
+        DeprecationWarning, stacklevel=2)
     _MESH = mesh
     _LAYOUT = layout
 
@@ -36,25 +66,40 @@ def get_layout() -> str:
     return _LAYOUT
 
 
-def _data_axes(mesh):
-    if _LAYOUT == "fsdp":
+def resolve_mesh(mesh: Optional[Mesh] = None,
+                 layout: Optional[str] = None
+                 ) -> Tuple[Optional[Mesh], str]:
+    """Resolve (mesh, layout): the explicit arguments when given, else the
+    deprecated ``set_mesh`` process-global fallback."""
+    if mesh is not None:
+        _validate(mesh, layout or "tp")
+        return mesh, (layout or "tp")
+    return _MESH, (layout if layout is not None else _LAYOUT)
+
+
+def data_axes_of(mesh, layout: str):
+    """Batch-parallel axes under a layout: every axis for fsdp, the
+    ("pod","data") subset for tp.  None when the mesh has no such axes."""
+    if layout == "fsdp":
         return tuple(mesh.axis_names) or None
     return tuple(a for a in mesh.axis_names if a in ("pod", "data")) or None
 
 
-def constrain(x, kind: str):
-    """kind: 'hidden' (batch-major activation) | 'logits' (vocab-last)."""
-    mesh = _MESH
+def constrain(x, kind: str, *, mesh: Optional[Mesh] = None,
+              layout: Optional[str] = None):
+    """Pin an activation's sharding: 'hidden' (batch-major activation) |
+    'logits' (vocab-last).  No-op when neither an explicit ``mesh`` nor the
+    deprecated ``set_mesh`` fallback is configured."""
+    mesh, layout = resolve_mesh(mesh, layout)
     if mesh is None:
         return x
-    d_axes = _data_axes(mesh)
-    import math
+    d_axes = data_axes_of(mesh, layout)
     d_size = math.prod(mesh.shape[a] for a in (d_axes or ()))
     if x.shape[0] % max(d_size, 1) != 0:
         d_axes = None
     if kind == "logits":
         m_size = mesh.shape.get("model", 1)
-        vocab_axis = ("model" if _LAYOUT == "tp" and x.shape[-1] % m_size == 0
+        vocab_axis = ("model" if layout == "tp" and x.shape[-1] % m_size == 0
                       else None)
         spec = P(d_axes, *([None] * (x.ndim - 2)), vocab_axis)
     else:

@@ -192,6 +192,17 @@ def cache_spec(path_str: str, shape, *, mesh: Mesh, kv_mode: str = "auto") -> P:
     msize = mesh.shape["model"]
     if re.search(r"lengths$", path_str):
         return _fit(mesh, P(d_axes), shape)
+    if re.search(r"pages/table$", path_str):
+        # (B, max_pages) logical→physical block table: rows follow batch
+        return _fit(mesh, P(d_axes, None), shape)
+    if re.search(r"(k|v)_pages$", path_str) and len(shape) == 5:
+        # (P, pool, page, Hkv, hd) physical page pool: pages are a SHARED
+        # pool addressed through the table (page ids carry no batch
+        # locality), so only the head axis shards — over "model"
+        return _fit(mesh, P(None, None, None, "model", None), shape)
+    if re.search(r"(latent|k_rope)_pages$", path_str):
+        # (P, pool, page, dim) MLA page pools: replicated pool
+        return P(*([None] * len(shape)))
     if re.search(r"(^|/)(k|v)$", path_str) and len(shape) == 5:
         # (P, B, S, Hkv, hd)
         head_ok = shape[3] % msize == 0
@@ -214,6 +225,9 @@ def cache_spec(path_str: str, shape, *, mesh: Mesh, kv_mode: str = "auto") -> P:
 
 
 def shard_cache(cache, mesh: Mesh, kv_mode: str = "auto"):
+    """NamedSharding pytree for a session KV cache: batch dims over the
+    data axes, KV heads (dense layers and paged pools) over "model" where
+    divisible; one ``cache_spec`` rule per leaf path."""
     def spec_of(path, leaf):
         return NamedSharding(mesh, cache_spec(_path_str(path), leaf.shape,
                                               mesh=mesh, kv_mode=kv_mode))

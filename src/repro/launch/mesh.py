@@ -26,6 +26,31 @@ def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     return jax.make_mesh(shape, axes)
 
 
+def make_ep_mesh(ep_degree: int, *, data_degree: int = 1, devices=None):
+    """``("data", "model")`` mesh for expert-parallel serving: the model
+    axis spans ``ep_degree`` devices (each holding E/ep_degree experts),
+    the data axis spans ``data_degree``.  ``data_degree=1`` (the default)
+    is the 1×N layout serving parity tests pin — batch stays whole, only
+    expert weights and the a2a dispatch shard.  Uses the first
+    ``data_degree*ep_degree`` of the available devices, so it works on
+    forced host devices (XLA_FLAGS=--xla_force_host_platform_device_count=8)
+    with any ep_degree dividing the forced count."""
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = list(devices) if devices is not None else jax.devices()
+    need = data_degree * ep_degree
+    if ep_degree < 1 or data_degree < 1:
+        raise ValueError(f"degrees must be >= 1, got {data_degree}x{ep_degree}")
+    if len(devs) < need:
+        raise ValueError(
+            f"mesh {data_degree}x{ep_degree} needs {need} devices, "
+            f"have {len(devs)} (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need} before import)")
+    return Mesh(np.asarray(devs[:need]).reshape(data_degree, ep_degree),
+                ("data", "model"))
+
+
 def data_axes(mesh) -> tuple:
     """The batch-parallel axes of a mesh: ("pod","data") or ("data",)."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

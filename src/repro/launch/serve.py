@@ -63,7 +63,17 @@ def main():
                     choices=["onehot", "gmm", "ep"],
                     help="MoE dispatch for the decode path; the serving "
                          "default is the ragged grouped-matmul kernel "
-                         "(training keeps onehot)")
+                         "(training keeps onehot); ep = mesh-sharded "
+                         "experts with all-to-all dispatch (--ep-degree)")
+    ap.add_argument("--ep-degree", type=int, default=1,
+                    help="expert-parallel shards: builds a (1, N) "
+                         "('data','model') mesh, shards expert weights "
+                         "over it and serves through the all-to-all "
+                         "ragged dispatch (forces --moe-dispatch ep when "
+                         "> 1; docs/distributed.md)")
+    ap.add_argument("--mesh-layout", default="tp", choices=["tp", "fsdp"],
+                    help="parameter layout on the mesh for the non-expert "
+                         "weights (distributed/sharding.param_spec)")
     ap.add_argument("--scheduler", default="wave",
                     choices=["wave", "continuous"],
                     help="wave: static batch per wave; continuous: slot "
@@ -130,8 +140,22 @@ def main():
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
+    mesh = None
+    if args.ep_degree > 1:
+        from repro.launch.mesh import make_ep_mesh
+        if args.moe_dispatch != "ep":
+            print(f"--ep-degree {args.ep_degree}: forcing --moe-dispatch ep")
+            args.moe_dispatch = "ep"
+        if cfg.num_experts % args.ep_degree != 0:
+            raise SystemExit(
+                f"--ep-degree {args.ep_degree} does not divide "
+                f"num_experts={cfg.num_experts} for {args.arch}")
+        mesh = make_ep_mesh(args.ep_degree)
+        print(f"mesh: {dict(mesh.shape)} layout={args.mesh_layout} "
+              f"({len(mesh.devices.flat)} devices)")
     target = Model(cfg, moe_dispatch=args.moe_dispatch,
-                   paged_attention=args.paged_attention)
+                   paged_attention=args.paged_attention, mesh=mesh,
+                   mesh_layout=args.mesh_layout if mesh is not None else None)
     params_t = target.init(jax.random.PRNGKey(args.seed))
 
     if args.proposer == "eagle":
@@ -180,7 +204,9 @@ def main():
                         kv_layout=args.kv_layout, page_size=args.page_size,
                         prefix_sharing=args.prefix_sharing,
                         admission_order=args.admission_order,
-                        resilience=resilience)
+                        resilience=resilience, mesh=mesh,
+                        mesh_layout=args.mesh_layout if mesh is not None
+                        else None)
 
     pb = prompt_batch(cfg.vocab_size, args.requests, kind=args.kind,
                       seed=args.seed)
@@ -238,6 +264,12 @@ def main():
                   f"prefill rows, {sum(s.admit_tokens for s in r.steps)} "
                   f"row-tokens ({args.admit_mode})"
                   + (f", {shared} prefix-shared tokens" if shared else ""))
+        if r.ep is not None:
+            # expert-parallel wave telemetry: per-shard routed load of the
+            # wave's outputs, skew, and modeled per-device a2a volume
+            print(f"  ep: shards={r.ep['per_shard_load']} "
+                  f"imbalance={r.ep['imbalance']:.2f} "
+                  f"a2a={r.ep['a2a_bytes_per_device'] / 1e6:.3f} MB/device")
     for kind, s in eng.session_stats().items():
         if kind == "resilience":
             if s:                 # fault/preemption/recovery counters

@@ -542,6 +542,8 @@ class Model:
         use_flash: bool = False,
         remat: bool = False,
         paged_attention: str = "kernel",
+        mesh=None,
+        mesh_layout: Optional[str] = None,
     ):
         if paged_attention not in ("kernel", "gather"):
             raise ValueError(
@@ -552,6 +554,14 @@ class Model:
         self.use_flash = use_flash
         self.remat = remat
         self.paged_attention = paged_attention
+        # explicit mesh threading (docs/distributed.md): flows to every
+        # constrain() and to the "ep" dispatch; None = single-device (or
+        # the deprecated set_mesh process-global, resolved per call)
+        if mesh is not None:
+            from repro.distributed.constraints import resolve_mesh
+            mesh, mesh_layout = resolve_mesh(mesh, mesh_layout)
+        self.mesh = mesh
+        self.mesh_layout = mesh_layout
 
     # ------------------------------------------------------------------ init
     def init(self, key: jax.Array) -> dict:
@@ -595,13 +605,14 @@ class Model:
             x = embed(params["embed"], tokens, scale=cfg.name.startswith("gemma"))
         if cfg.rope_type == "sinusoidal":
             x = x + sinusoidal_at(positions, cfg.d_model).astype(x.dtype)
-        return constrain(x, "hidden")
+        return constrain(x, "hidden", mesh=self.mesh, layout=self.mesh_layout)
 
     def _head(self, params, x):
         cfg = self.cfg
         x = apply_norm(params["final_norm"], x, cfg.norm_eps)
         table = params["embed"] if cfg.tie_embeddings else params["head"]
-        return constrain(unembed(table, x, cfg.final_logit_softcap), "logits")
+        return constrain(unembed(table, x, cfg.final_logit_softcap), "logits",
+                         mesh=self.mesh, layout=self.mesh_layout)
 
     # --------------------------------------------------------------- encoder
     def encode(self, params, encoder_embeds: jnp.ndarray) -> jnp.ndarray:
@@ -652,7 +663,9 @@ class Model:
         x, _, metrics = tfm.stack_forward(
             params["layers"], cfg, x, positions, None,
             mode="train", dispatch=self.moe_dispatch, use_flash=self.use_flash,
-            remat=self.remat, cross_kvs=cross_kvs, mrope_positions=mrope_positions)
+            remat=self.remat, cross_kvs=cross_kvs,
+            mrope_positions=mrope_positions,
+            mesh=self.mesh, mesh_layout=self.mesh_layout)
         return x, metrics
 
     def forward_train(self, params, tokens, **kw) -> Tuple[jnp.ndarray, dict]:
@@ -736,7 +749,8 @@ class Model:
             mode="prefill", dispatch=self.moe_dispatch, want_metrics=False,
             use_flash=self.use_flash, remat=self.remat, cross_kvs=cross_kvs,
             mrope_positions=mrope_positions, page_table=_page_table(cache),
-            paged_attention=self.paged_attention)
+            paged_attention=self.paged_attention,
+            mesh=self.mesh, mesh_layout=self.mesh_layout)
         # head only at each sequence's last prompt position — never (B,T,V)
         last_h = jnp.take_along_axis(
             x, (lengths - 1)[:, None, None].astype(jnp.int32), axis=1)
@@ -764,7 +778,8 @@ class Model:
             want_metrics=False, use_flash=self.use_flash,
             cross_kvs=cache.get("cross"), prefetch_masks=prefetch_masks,
             page_table=_page_table(cache),
-            paged_attention=self.paged_attention)
+            paged_attention=self.paged_attention,
+            mesh=self.mesh, mesh_layout=self.mesh_layout)
         logits = self._head(params, x)                           # (B, T, V)
         return logits, x, dict(cache, layers=new_layers), metrics
 

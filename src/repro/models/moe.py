@@ -52,7 +52,7 @@ class PrefetchPlan(NamedTuple):
     expert_ids: Tuple[jnp.ndarray, ...]
 
 
-def warm_experts(layer_params, cfg, plan: PrefetchPlan):
+def warm_experts(layer_params, cfg, plan: PrefetchPlan, *, mesh=None):
     """Gather the predicted experts' FFN weights into fresh buffers.
 
     Parameters
@@ -64,12 +64,18 @@ def warm_experts(layer_params, cfg, plan: PrefetchPlan):
         Supplies ``moe_pattern`` (which slots have routed FFNs).
     plan : PrefetchPlan
         ``expert_ids[i]`` selects the ``(P, M)`` experts to warm in slot i.
+    mesh : jax.sharding.Mesh, optional
+        When the expert weights are sharded over a ``"model"`` axis
+        (expert-parallel serving), the gather runs under shard_map so each
+        shard warms ONLY the predicted ids in its LOCAL expert slice —
+        warming never all-gathers remote experts' weights.
 
     Returns
     -------
     list of dict
         Per MoE slot, ``{"w_gate": (P, M, d, f), "w_up": ..., "w_down":
-        (P, M, f, d)}`` gathered copies.  The VALUES are not consumed — the
+        (P, M, f, d)}`` gathered copies (an extra leading shard axis under
+        a mesh, non-local ids zeroed).  The VALUES are not consumed — the
         point is the dispatch: issued right after propose, the gather
         streams the predicted experts' weights while the host is still
         assembling the verify launch.  NOTE this makes the warming a
@@ -78,7 +84,34 @@ def warm_experts(layer_params, cfg, plan: PrefetchPlan):
         a model of what the measured hit rate is worth once warmed buffers
         are donated to the gmm dispatch (ROADMAP headroom).
     """
-    gather = jax.vmap(lambda w, ids: jnp.take(w, ids, axis=0))
+    ep = (mesh is not None and "model" in getattr(mesh, "axis_names", ())
+          and mesh.shape["model"] > 1
+          and cfg.num_experts % mesh.shape["model"] == 0)
+    if ep:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as SP
+
+        def _local_gather(w, ids):
+            # w: (P, e_local, ...) LOCAL slice; ids: (P, M) global ids.
+            # Gather only the ids this shard owns; foreign ids read row 0
+            # of the local slice (free) and are zeroed.
+            e_local = w.shape[1]
+            first = jax.lax.axis_index("model") * e_local
+            mine = (ids >= first) & (ids < first + e_local)
+            lids = jnp.clip(ids - first, 0, e_local - 1)
+            g = jax.vmap(lambda wp, ip: jnp.take(wp, ip, axis=0))(w, lids)
+            g = g * mine[..., None, None].astype(g.dtype)
+            return g[None]                       # stack shard results
+
+        def gather(w, ids):
+            nd = w.ndim
+            return shard_map(
+                _local_gather, mesh=mesh,
+                in_specs=(SP(None, "model", *([None] * (nd - 2))), SP()),
+                out_specs=SP("model", *([None] * nd)),
+                check_rep=False)(w, ids)
+    else:
+        gather = jax.vmap(lambda w, ids: jnp.take(w, ids, axis=0))
     warmed = []
     for i, is_moe in enumerate(cfg.moe_pattern):
         if not is_moe or plan.expert_ids[i].shape[-1] == 0:
@@ -214,10 +247,12 @@ def moe_forward(
     cfg,
     x: jnp.ndarray,                  # (B, T, d)
     *,
-    dispatch: str = "onehot",        # "onehot" | "gmm"
+    dispatch: str = "onehot",        # "onehot" | "gmm" | "ep"
     rng: Optional[jax.Array] = None,
     return_metrics: bool = False,
     prefetch_mask: Optional[jnp.ndarray] = None,   # (E,) predicted-hot experts
+    mesh=None,
+    mesh_layout: Optional[str] = None,
 ):
     """Routed MoE FFN: top-k route, dispatch to experts, weighted combine.
 
@@ -242,6 +277,10 @@ def moe_forward(
         (E,) predicted-hot expert mask from a PrefetchPlan; when given, the
         returned metrics include prefetch hit/miss counts scored against
         this forward's actual routing.
+    mesh, mesh_layout : optional
+        Device mesh (and layout) threaded explicitly to the "ep" dispatch
+        and ignored by the single-device dispatches — see
+        docs/distributed.md.
 
     Returns
     -------
@@ -255,7 +294,7 @@ def moe_forward(
         # router runs inside the shard, so metrics (and prefetch scoring)
         # come from a cheap replicated re-route below.
         from repro.distributed.collectives import moe_ep_forward
-        y = moe_ep_forward(params, cfg, x)
+        y = moe_ep_forward(params, cfg, x, mesh=mesh, layout=mesh_layout)
         metrics = None
         if return_metrics or prefetch_mask is not None:
             xf = x.reshape(B * T, d)

@@ -85,6 +85,8 @@ def block_forward(
     prefetch_mask: Optional[jnp.ndarray] = None,
     page_table: Optional[jnp.ndarray] = None,
     paged_attention: str = "kernel",
+    mesh=None,
+    mesh_layout: Optional[str] = None,
 ) -> Tuple[jnp.ndarray, Optional[dict], dict]:
     h = apply_norm(params["norm1"], x, cfg.norm_eps)
     if kind in ("attn", "swa"):
@@ -125,7 +127,8 @@ def block_forward(
             # (routing needs it) but no metric materialization happens
             y, m = moe_mod.moe_forward(params["ffn"], cfg, h, dispatch=dispatch,
                                        return_metrics=want_metrics,
-                                       prefetch_mask=prefetch_mask)
+                                       prefetch_mask=prefetch_mask,
+                                       mesh=mesh, mesh_layout=mesh_layout)
             if want_metrics:
                 metrics["aux_loss"] = m["aux_loss"]
                 metrics["expert_counts"] = m["expert_counts"]
@@ -188,6 +191,8 @@ def stack_forward(
     prefetch_masks: Optional[List[jnp.ndarray]] = None,
     page_table: Optional[jnp.ndarray] = None,
     paged_attention: str = "kernel",
+    mesh=None,
+    mesh_layout: Optional[str] = None,
 ) -> Tuple[jnp.ndarray, Optional[List[dict]], dict]:
     """Run the full stack.  caches/cross_kvs leaves carry leading (P, ...).
 
@@ -206,6 +211,10 @@ def stack_forward(
     ``paged_attention`` selects the paged extend backend: "kernel" walks the
     block table inside the Pallas decode kernel; "gather" materializes the
     dense ``pool[table]`` view (the pre-kernel behaviour, kept as fallback).
+
+    ``mesh``/``mesh_layout`` (optional) thread the device mesh down to the
+    sharding constraints and the expert-parallel dispatch
+    (docs/distributed.md) — no process-global mesh state.
     """
 
     def make_block(i, kind, is_moe):
@@ -215,7 +224,8 @@ def stack_forward(
                 mode=mode, collect=collect, causal=causal, dispatch=dispatch,
                 want_metrics=want_metrics, use_flash=use_flash, cross_kv=lx_i,
                 mrope_positions=mrope_positions, prefetch_mask=lm_i,
-                page_table=page_table, paged_attention=paged_attention)
+                page_table=page_table, paged_attention=paged_attention,
+                mesh=mesh, mesh_layout=mesh_layout)
         # per-LAYER rematerialization: checkpointing the whole period keeps
         # every layer's FFN/attention intermediates live during the period's
         # backward (107 GB/device on jamba train_4k — §Perf C4); per-layer
@@ -238,7 +248,8 @@ def stack_forward(
                 None if lm is None else lm[i])
             new_caches.append(nc if nc is not None else {})
             agg = m if agg is None else jax.tree.map(jnp.add, agg, m)
-        return constrain(h, "hidden"), (new_caches, agg)
+        return constrain(h, "hidden", mesh=mesh, layout=mesh_layout), \
+            (new_caches, agg)
 
     xs = (layer_params, caches, cross_kvs, prefetch_masks)
 

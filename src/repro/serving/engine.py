@@ -55,6 +55,9 @@ from repro.core.autotune import AutoTuner
 from repro.core.proposer import make_proposer
 from repro.core.spec_decode import SDEngine, SDStats
 from repro.data.tokenizer import PAD
+from repro.distributed.collectives import ep_load_report
+from repro.distributed.constraints import resolve_mesh
+from repro.distributed.sharding import shard_params
 from repro.models.model import Model
 from repro.serving.sampling import SamplingParams
 
@@ -118,6 +121,11 @@ class WaveReport:
     # request's recomputed prefix.
     tokens_discarded: int = 0
     finish_reasons: Optional[Dict[str, int]] = None  # reason -> count
+    # expert-parallel telemetry (mesh-sharded "ep" dispatch only): the
+    # finished outputs' per-shard expert-load counts, load imbalance
+    # (max/mean) and modeled per-device a2a volume
+    # (distributed.collectives.ep_load_report); None otherwise
+    ep: Optional[dict] = None
 
     @property
     def tokens_per_second(self) -> float:
@@ -195,6 +203,8 @@ class ServingEngine:
         admission_order: str = "fifo",      # "fifo" | "pressure" refill order
         resilience=None,                    # Optional[ResilienceConfig]
         fault_injector=None,                # Optional[FaultInjector] (tests)
+        mesh=None,                          # Optional[Mesh]: sharded serving
+        mesh_layout: Optional[str] = None,  # "tp" | "fsdp" (with mesh)
     ):
         if scheduler not in ("wave", "continuous"):
             raise ValueError(f"scheduler must be 'wave' or 'continuous', "
@@ -249,6 +259,36 @@ class ServingEngine:
                     f"prefill_chunk={prefill_chunk} > SWA_RING_PAD+1="
                     f"{SWA_RING_PAD + 1}: a larger chunk evicts ring "
                     "entries still inside earlier chunk queries' windows")
+        # ------- expert-parallel sharded serving (docs/distributed.md) ----
+        # the mesh is threaded EXPLICITLY: engine → model constraints / ep
+        # dispatch → SDEngine sessions (host placement + cache_spec); no
+        # process-global mesh state (constraints.set_mesh is deprecated)
+        if mesh is not None:
+            mesh, mesh_layout = resolve_mesh(mesh, mesh_layout)
+            if "model" not in mesh.axis_names:
+                raise ValueError(
+                    f"ServingEngine(mesh=...) needs a 'model' axis for the "
+                    f"expert/TP dimension; got axes {mesh.axis_names} "
+                    "(launch/mesh.make_ep_mesh builds a ('data','model') "
+                    "mesh)")
+            if getattr(target, "mesh", None) is None:
+                target.mesh = mesh
+                target.mesh_layout = mesh_layout
+            if isinstance(draft, Model) and draft.mesh is None:
+                draft.mesh = mesh
+                draft.mesh_layout = mesh_layout
+            # expert weights shard over "model" (EP), attention/router per
+            # param_spec; placed once here so every session reuses them
+            if params_t is not None:
+                params_t = jax.device_put(
+                    params_t, shard_params(params_t, mesh,
+                                           layout=mesh_layout))
+            if params_d is not None:
+                params_d = jax.device_put(
+                    params_d, shard_params(params_d, mesh,
+                                           layout=mesh_layout))
+        self.mesh = mesh
+        self.mesh_layout = mesh_layout
         self.proposer_kind = draft_kind if draft_kind is not None else proposer
         self.proposer_opts = dict(proposer_opts or {})
         self.target, self.draft = target, draft
@@ -355,6 +395,18 @@ class ServingEngine:
         (launch/serve defaults it to "gmm" — the ragged serving kernels)."""
         return getattr(self.target, "moe_dispatch", "onehot")
 
+    def _ep_telemetry(self, outputs) -> Optional[dict]:
+        """Per-wave expert-parallel load report over the finished outputs
+        (``WaveReport.ep``): per-shard expert loads, imbalance, and modeled
+        a2a volume.  None unless this is a mesh-sharded "ep" engine."""
+        if self.mesh is None or self.moe_dispatch != "ep":
+            return None
+        toks = [np.asarray(o).reshape(-1) for o in outputs if o is not None]
+        toks = (np.concatenate(toks) if toks
+                else np.zeros((0,), np.int32))
+        return ep_load_report(self.params_t, self.target.cfg, toks,
+                              int(self.mesh.shape["model"]))
+
     # -------------------------------------------------------------- sessions
     def _session(self, kind: str) -> SDEngine:
         """The long-lived decoding session for one proposer kind."""
@@ -367,7 +419,8 @@ class ServingEngine:
                                  None if kind == "none" else self.draft,
                                  temperature=self.temperature, **opts)
             sess = SDEngine(self.target, prop, gamma=self.gamma,
-                            temperature=self.temperature)
+                            temperature=self.temperature, mesh=self.mesh,
+                            mesh_layout=self.mesh_layout)
             self._sessions[kind] = sess
             self.session_constructions[kind] = \
                 self.session_constructions.get(kind, 0) + 1
@@ -527,7 +580,8 @@ class ServingEngine:
             self.done[r.uid] = r
         report = WaveReport(B, gamma, use_sd, stats, wall, n_tokens,
                             proposer=kind, bucket=bucket,
-                            moe_dispatch=self.moe_dispatch)
+                            moe_dispatch=self.moe_dispatch,
+                            ep=self._ep_telemetry([r.output for r in wave]))
         self.reports.append(report)
         return report
 
@@ -545,8 +599,12 @@ class ServingEngine:
         from repro.serving.scheduler import ContinuousScheduler
         if self._slot_scheduler is None:
             self._slot_scheduler = ContinuousScheduler(self)
+        before = set(self.done)
         report = self._slot_scheduler.run_stream()
         if report is not None:
+            report.ep = self._ep_telemetry(
+                [r.output for uid, r in self.done.items()
+                 if uid not in before])
             self.reports.append(report)
         return report
 

@@ -60,6 +60,7 @@ import time
 from dataclasses import dataclass, field, replace as dc_replace
 from typing import TYPE_CHECKING, List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -353,17 +354,30 @@ class ContinuousScheduler:
                           "pool_pages": self._alloc.pool_pages}
             table = self._alloc.table
         params_d = None if eng.proposer_kind == "none" else eng.params_d
-        return sess.start(eng.params_t, params_d, jnp.asarray(toks),
+        # host arrays go in raw: the session's _host boundary places them
+        # (replicated under a mesh) so admission keeps one jit signature
+        return sess.start(eng.params_t, params_d, toks,
                           max_seq=max_seq,
-                          lengths=jnp.ones((B,), jnp.int32),
+                          lengths=np.ones((B,), np.int32),
                           key=eng._next_key(), cache_opts=cache_opts,
                           page_table=table)
 
     def _sync_table(self, state: SessionState) -> SessionState:
         """Push the allocator's (host) block table into the session —
-        an input-array swap, never a retrace."""
-        pages = dict(state.t_cache["pages"],
-                     table=jnp.asarray(self._alloc.table))
+        an input-array swap, never a retrace.  Under a mesh the swap is
+        device_put with the SAME cache_spec placement the session opened
+        with, so sharded rounds never see a placement flip."""
+        eng = self.engine
+        table = np.asarray(self._alloc.table, np.int32)
+        if eng.mesh is not None:
+            from jax.sharding import NamedSharding
+            from repro.distributed.sharding import cache_spec
+            new = jax.device_put(table, NamedSharding(
+                eng.mesh, cache_spec("pages/table", table.shape,
+                                     mesh=eng.mesh)))
+        else:
+            new = jnp.asarray(table)
+        pages = dict(state.t_cache["pages"], table=new)
         return dc_replace(state, t_cache=dict(state.t_cache, pages=pages))
 
     def _grow(self, sess, state: SessionState, pool_pages: int,
@@ -974,7 +988,7 @@ class ContinuousScheduler:
 
             # ---- one SD round over the pool, retired rows masked out
             state, res = sess.round(state, gamma=gamma, key=eng._next_key(),
-                                    active=jnp.asarray(active_mask),
+                                    active=active_mask,
                                     timed=eng.timed)
             round_wall = time.perf_counter() - t_r0
 

@@ -14,23 +14,21 @@ _SCRIPT = textwrap.dedent("""
     import numpy as np
     from repro.configs.base import ModelConfig
     from repro.models.moe import init_moe, moe_forward
-    from repro.distributed.constraints import set_mesh
 
     mesh = jax.make_mesh((2, 2), ("data", "model"))
-    set_mesh(mesh)
     cfg = ModelConfig("ep", "moe", 2, 64, 4, 2, 128, 256, num_experts=8,
                       num_experts_per_tok=2, moe_d_ff=128, dtype="float32",
                       num_shared_experts=1)
     p = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
     x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 64)) * 0.5
-    with mesh:
-        y_ref, _ = moe_forward(p, cfg, x, dispatch="onehot")
-        y_ep, _ = jax.jit(lambda p, x: moe_forward(p, cfg, x,
-                                                   dispatch="ep"))(p, x)
+    y_ref, _ = moe_forward(p, cfg, x, dispatch="onehot")
+    y_ep, _ = jax.jit(lambda p, x: moe_forward(p, cfg, x, dispatch="ep",
+                                               mesh=mesh))(p, x)
     np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_ep),
                                rtol=3e-4, atol=3e-4)
     # metrics path too
-    y_ep2, m = moe_forward(p, cfg, x, dispatch="ep", return_metrics=True)
+    y_ep2, m = moe_forward(p, cfg, x, dispatch="ep", mesh=mesh,
+                           return_metrics=True)
     assert m["expert_counts"].sum() == 4 * 16 * 2
     print("OK")
 """)
@@ -54,19 +52,17 @@ _A2A_SCRIPT = textwrap.dedent("""
     import numpy as np
     from repro.configs.base import ModelConfig
     from repro.models.moe import init_moe, moe_forward
-    from repro.distributed.constraints import set_mesh
 
     mesh = jax.make_mesh((2, 2), ("data", "model"))
     cfg = ModelConfig("ep", "moe", 2, 64, 4, 2, 128, 256, num_experts=8,
                       num_experts_per_tok=2, moe_d_ff=128, dtype="float32")
     p = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
     x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 64)) * 0.5
-    with mesh:
-        set_mesh(None)
-        y_ref, _ = moe_forward(p, cfg, x, dispatch="onehot")
-        set_mesh(mesh, "fsdp")   # tokens sharded over model too → a2a path
-        y_a2a, _ = jax.jit(lambda p, x: moe_forward(p, cfg, x,
-                                                    dispatch="ep"))(p, x)
+    y_ref, _ = moe_forward(p, cfg, x, dispatch="onehot")
+    # fsdp layout: tokens sharded over model too → the a2a path
+    y_a2a, _ = jax.jit(lambda p, x: moe_forward(p, cfg, x, dispatch="ep",
+                                                mesh=mesh,
+                                                mesh_layout="fsdp"))(p, x)
     np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_a2a),
                                rtol=3e-4, atol=3e-4)
     print("OK")
