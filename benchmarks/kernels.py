@@ -80,7 +80,9 @@ def moe_dispatch_sweep(out_path: str = "BENCH_moe_dispatch.json") -> list:
         modes = {
             # every token through all E experts: E/K x FLOP overhead
             "onehot": dict(
-                us=_time(jax.jit(moe_ffn_ref), x, wg, wu, wd, w, idx),
+                us=_time(jax.jit(moe_ffn_ref,
+                                 static_argnames=("activation",)),
+                         x, wg, wu, wd, w, idx),
                 flops=3 * 2 * E * N * D * F,
                 bytes=w_bytes + act_bytes(E * N, fused=False),
                 m_tiles=3 * E * _round_up(N, bm) // bm, launches=3),
@@ -93,7 +95,9 @@ def moe_dispatch_sweep(out_path: str = "BENCH_moe_dispatch.json") -> list:
             # ragged: work scales with routed tokens; fused gate+up halves
             # the x reads of the up-projection stage
             "ragged": dict(
-                us=_time(jax.jit(ragged_moe_ffn_ref), xs, wg, wu, wd, sizes),
+                us=_time(jax.jit(ragged_moe_ffn_ref,
+                                 static_argnames=("activation",)),
+                         xs, wg, wu, wd, sizes),
                 flops=3 * 2 * NK * D * F,
                 bytes=w_bytes + act_bytes(n_pad, fused=True),
                 m_tiles=3 * visits, launches=2),

@@ -116,9 +116,15 @@ DOCUMENTED_API = [
                                "SpeedupModel.ep_target_time"]),
     ("repro.analysis", ["analyze_paths", "compile_guard", "CompileGuard",
                         "compile_count", "compilation_events_available",
+                        "transfer_guard", "TransferGuard",
+                        "sharding_guard", "ShardingGuard", "pass_of",
                         "Finding", "Report", "ratchet", "load_baseline",
                         "write_baseline"]),
-    ("repro.analysis.registry", ["KnownEntry", "lookup_entry"]),
+    ("repro.analysis.registry", ["KnownEntry", "lookup_entry",
+                                 "DonationCandidate"]),
+    ("repro.analysis.sharding_lint", ["run"]),
+    ("repro.analysis.prng_lint", ["run"]),
+    ("repro.analysis.donation_lint", ["run"]),
 ]
 
 

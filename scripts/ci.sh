@@ -8,8 +8,10 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
-# static-analysis gate: tracer-safety + cache-key + Pallas-contract lint,
-# ratcheted against scripts/lint_baseline.txt (AST-only, no jax import)
+# static-analysis gate: tracer-safety + cache-key + Pallas-contract +
+# sharding/collective + PRNG-hygiene + donation lint over src, examples,
+# benchmarks and scripts, ratcheted against scripts/lint_baseline.txt
+# (AST-only, no jax import)
 timeout 120 bash scripts/lint.sh
 # docs gate: broken relative links in README/docs + docstring presence on
 # the public API surface the docs point at
@@ -38,11 +40,14 @@ timeout 300 python -m repro.launch.serve --arch qwen2-57b-a14b --reduced \
 # per-shard ragged gmm dispatch plus per-wave EP telemetry
 # (docs/distributed.md); the reduced arch has E=4 experts, so ep=4 puts
 # one expert per shard
+# --transfer-guard replays the same stream through the warm engine and
+# fails on any implicit host<->device transfer or a second input-sharding
+# signature on a cached program (docs/analysis.md runtime guards)
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
 timeout 300 python -m repro.launch.serve --arch qwen2-57b-a14b --reduced \
   --requests 4 --max-batch 2 --max-new 6 --gamma 2 \
   --scheduler continuous --no-autotune --kv-layout paged --page-size 16 \
-  --ep-degree 4 --mesh-layout tp
+  --ep-degree 4 --mesh-layout tp --transfer-guard
 # fault-injection smoke: a seeded injector stream (page exhaustion +
 # preemption/requeue, NaN quarantine, slow round, admission retry) must
 # complete with the expected finish_reasons, zero leaked pages, and a

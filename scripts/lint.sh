@@ -1,11 +1,16 @@
 #!/usr/bin/env bash
-# Static analysis gate: tracer-safety lint, jit-cache-key audit and Pallas
-# kernel-contract checks over the serving stack, ratcheted against
-# scripts/lint_baseline.txt (which ships empty — new findings fail).
+# Static analysis gate: tracer-safety lint, jit-cache-key audit, Pallas
+# kernel-contract checks, shard_map/collective + host-boundary lint (S4xx),
+# PRNG key-dataflow lint (R5xx) and buffer-donation lint (D6xx) over the
+# serving stack AND its callers (examples, benchmarks, scripts), ratcheted
+# against scripts/lint_baseline.txt (which ships empty — new findings fail).
 #
-#   scripts/lint.sh                 # lint src/repro against the baseline
-#   scripts/lint.sh --json src/     # machine-readable findings
+#   scripts/lint.sh                 # lint the default tree vs the baseline
+#   scripts/lint.sh --json src/     # machine-readable findings (per_pass)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+if [ "$#" -eq 0 ]; then
+  exec python -m repro.analysis src/repro examples benchmarks scripts
+fi
 exec python -m repro.analysis "$@"

@@ -1,35 +1,49 @@
-"""Repo-native static analysis + retrace guard for the jit/Pallas stack.
+"""Repo-native static analysis + runtime guards for the jit/Pallas stack.
 
-Three source-level passes (no imports of the analyzed code, no
-accelerator needed) plus one runtime guard:
+Six source-level passes (no imports of the analyzed code, no accelerator
+needed) plus three runtime guards:
 
 * :mod:`repro.analysis.tracer_lint` — tracer-safety dataflow (T1xx),
 * :mod:`repro.analysis.cache_keys` — jit-cache-key audit (K2xx),
 * :mod:`repro.analysis.pallas_lint` — Pallas kernel contracts (P3xx),
-* :mod:`repro.analysis.runtime` — ``compile_guard()`` XLA-compile counter.
+* :mod:`repro.analysis.sharding_lint` — shard_map/collective and
+  host-boundary contracts (S4xx),
+* :mod:`repro.analysis.prng_lint` — PRNG key dataflow (R5xx),
+* :mod:`repro.analysis.donation_lint` — buffer donation (D6xx),
+* :mod:`repro.analysis.runtime` — ``compile_guard()`` XLA-compile
+  counter, ``transfer_guard()`` implicit host<->device transfer counter,
+  ``sharding_guard()`` one-sharding-signature-per-program assertion.
 
 Run the analyzer with ``python -m repro.analysis src/repro`` (see
 ``scripts/lint.sh`` for the CI invocation against the ratchet baseline)
-and read ``docs/analysis.md`` for the finding codes, the traced-ness
-model, and how to extend the entry-point registry.
+and read ``docs/analysis.md`` for the finding codes, the traced-ness /
+key-dataflow / host-boundary models, and how to extend the entry-point
+registry.
 """
 from __future__ import annotations
 
 import os
 from typing import List, Optional, Sequence
 
-from repro.analysis import cache_keys, pallas_lint, tracer_lint
+from repro.analysis import (cache_keys, donation_lint, pallas_lint,
+                            prng_lint, sharding_lint, tracer_lint)
 from repro.analysis._astutil import Project
-from repro.analysis.findings import (CODES, Finding, Report, apply_waivers,
-                                     load_baseline, parse_waivers, ratchet,
+from repro.analysis.findings import (CODES, PASSES, Finding, Report,
+                                     apply_waivers, load_baseline,
+                                     parse_waivers, pass_of, ratchet,
                                      write_baseline)
 from repro.analysis.pallas_lint import _DEFAULT_VMEM_BUDGET
-from repro.analysis.runtime import (CompileGuard, compilation_events_available,
-                                    compile_count, compile_guard)
+from repro.analysis.runtime import (CompileGuard, ShardingGuard,
+                                    TransferGuard,
+                                    compilation_events_available,
+                                    compile_count, compile_guard,
+                                    sharding_guard, transfer_guard)
 
 __all__ = [
-    "CODES", "Finding", "Report", "analyze_paths", "compile_guard",
-    "CompileGuard", "compile_count", "compilation_events_available",
+    "CODES", "PASSES", "Finding", "Report", "analyze_paths",
+    "compile_guard", "CompileGuard", "compile_count",
+    "compilation_events_available", "transfer_guard", "TransferGuard",
+    "sharding_guard", "ShardingGuard", "pass_of",
     "load_baseline", "ratchet", "write_baseline",
 ]
 
@@ -46,6 +60,9 @@ def analyze_paths(paths: Sequence[str], repo_root: Optional[str] = None,
     findings += tracer_lint.run(project)
     findings += cache_keys.run(project)
     findings += pallas_lint.run(project, vmem_budget=vmem_budget)
+    findings += sharding_lint.run(project)
+    findings += prng_lint.run(project)
+    findings += donation_lint.run(project)
     waivers = {mod.rel: parse_waivers(mod.source)
                for mod in project.modules.values()}
     kept = apply_waivers(findings, waivers)

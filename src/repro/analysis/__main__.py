@@ -19,7 +19,8 @@ from repro.analysis.pallas_lint import _DEFAULT_VMEM_BUDGET
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="Tracer-safety / cache-key / Pallas-contract analyzer.")
+        description="Tracer-safety / cache-key / Pallas / sharding / "
+                    "PRNG / donation analyzer.")
     ap.add_argument("paths", nargs="*", default=["src/repro"],
                     help="files or directories to analyze "
                          "(default: src/repro)")

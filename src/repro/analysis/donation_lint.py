@@ -1,0 +1,361 @@
+"""Buffer-donation lint: use-after-donate and unclaimed donation headroom.
+
+``donate_argnums`` is the only way the serving/training hot paths reuse
+input buffers in place; it is also the easiest jax feature to corrupt
+silently — a donated array is *deallocated* at the call, and reading it
+afterwards returns garbage (or an error only on some backends).  The
+inverse failure is quieter still: a functional-update loop that never
+donates holds two copies of every buffer it touches, which is exactly the
+HBM headroom the ROADMAP's prefetch item tracks.
+
+========  ===========================================================
+ D601     an argument at a donated position is read again after the
+          donating call without being rebound from its results.
+ D602     a ``registry.DONATION_CANDIDATES`` buffer is never donated
+          by any jit site in the scanned tree — the tracked form of
+          "until buffers are donated to the gmm" comments.
+ D603     ``donate_argnums`` names an index out of the wrapped
+          function's positional range, or one of its static
+          parameters (jax ignores or rejects both at run time).
+========  ===========================================================
+
+Loop bodies are visited twice, so a step function that donates its state
+but fails to rebind it is caught on the simulated second iteration.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis._astutil import (FuncInfo, ModuleInfo, Project,
+                                     call_keywords, const_eval, dotted_name)
+from repro.analysis.findings import Finding
+from repro.analysis.registry import DONATION_CANDIDATES
+
+_JIT_NAMES = ("jax.jit", "jit", "api.jit")
+_PARTIAL_NAMES = ("functools.partial", "partial")
+
+
+def _own_nodes(fi: FuncInfo) -> Iterator[ast.AST]:
+    stack: List[ast.AST] = list(fi.body())
+    while stack:
+        node = stack.pop()
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                yield child
+                continue
+            stack.append(child)
+
+
+def _flat_names(target: ast.expr) -> List[str]:
+    if isinstance(target, ast.Name):
+        return [target.id]
+    if isinstance(target, (ast.Tuple, ast.List)):
+        out: List[str] = []
+        for e in target.elts:
+            out.extend(_flat_names(e))
+        return out
+    if isinstance(target, ast.Starred):
+        return _flat_names(target.value)
+    return []
+
+
+def _donated_indices(call: ast.Call) -> Optional[Tuple[int, ...]]:
+    """Constant donate_argnums of a jit call; None when absent or symbolic
+    (a symbolic value still counts as "donates" for D602)."""
+    kws = call_keywords(call)
+    expr = kws.get("donate_argnums")
+    if expr is None:
+        return None
+    val = const_eval(expr, {})
+    if isinstance(val, int):
+        return (val,)
+    if isinstance(val, tuple) and all(isinstance(v, int) for v in val):
+        return tuple(val)
+    return None
+
+
+@dataclass
+class _DonatingFn:
+    """A name bound to a jit-compiled function with donated positions."""
+    donated: Tuple[int, ...]
+
+
+class DonationLint:
+    def __init__(self, project: Project):
+        self.project = project
+        self.findings: List[Finding] = []
+        self._seen: Set[Tuple[str, int, str]] = set()
+        #: jit sites with ANY donate_argnums (constant or symbolic), by
+        #: wrapped-candidate id — feeds D602
+        self._donating_targets: Set[int] = set()
+
+    def emit(self, mod: ModuleInfo, line: int, code: str, msg: str) -> None:
+        k = (mod.rel, line, code)
+        if k not in self._seen:
+            self._seen.add(k)
+            self.findings.append(Finding(mod.rel, line, code, msg))
+
+    def run(self) -> List[Finding]:
+        for mod in self.project.modules.values():
+            for fi in mod.functions.values():
+                self._check_scope(mod, fi)
+        self._check_candidates()
+        self.findings.sort(key=lambda f: (f.path, f.line, f.code))
+        return self.findings
+
+    # ------------------------------------------------------------- D602
+    def _check_candidates(self) -> None:
+        for cand in DONATION_CANDIDATES:
+            for mod in self.project.modules.values():
+                if not mod.rel.endswith(cand.module):
+                    continue
+                fi = mod.functions.get(cand.qualname)
+                if fi is None:
+                    continue
+                if id(fi) not in self._donating_targets:
+                    self.emit(mod, fi.line, "D602",
+                              f"{cand.qualname}() buffer "
+                              f"{cand.param!r} is donation-eligible but "
+                              f"no jit site donates into it — "
+                              f"{cand.note}")
+
+    # --------------------------------------------------------- jit sites
+    def _jit_call(self, node: ast.expr) -> Optional[ast.Call]:
+        if isinstance(node, ast.Call) and dotted_name(node.func) in _JIT_NAMES:
+            return node
+        return None
+
+    def _wrapped_candidates(self, mod: ModuleInfo, scope: Optional[FuncInfo],
+                            jit: ast.Call) -> List[FuncInfo]:
+        if not jit.args:
+            return []
+        f = jit.args[0]
+        if isinstance(f, ast.Name):
+            return self.project.resolve_name(f.id, mod, scope)
+        if isinstance(f, ast.Attribute):
+            return self.project.resolve_attr_call(f.value, f.attr, mod)
+        if isinstance(f, ast.Lambda):
+            return [FuncInfo(f, mod, "<lambda>", scope)]
+        if isinstance(f, ast.Call):
+            dn = dotted_name(f.func)
+            if dn in _PARTIAL_NAMES and f.args:
+                return self._wrapped_candidates(
+                    mod, scope, ast.Call(func=ast.Name(id="jit",
+                                                       ctx=ast.Load()),
+                                         args=[f.args[0]], keywords=[]))
+            # builder call (make_train_step(...)): follow returned fns
+            inner: List[FuncInfo] = []
+            for cand in self._wrapped_candidates(
+                    mod, scope, ast.Call(func=ast.Name(id="jit",
+                                                       ctx=ast.Load()),
+                                         args=[f.func], keywords=[])):
+                for pos in self.project.returned_functions(cand):
+                    inner.extend(pos)
+            return inner
+        return []
+
+    def _note_jit(self, mod: ModuleInfo, scope: Optional[FuncInfo],
+                  jit: ast.Call) -> Optional[Tuple[int, ...]]:
+        """Register the site for D602/D603 and return constant donated
+        positions (None when absent/symbolic)."""
+        kws = call_keywords(jit)
+        has_donation = "donate_argnums" in kws or "donate_argnames" in kws
+        donated = _donated_indices(jit)
+        candidates = self._wrapped_candidates(mod, scope, jit)
+        if has_donation:
+            for cand in candidates:
+                self._donating_targets.add(id(cand))
+                # one transitive hop: `jit(step)` where step calls the
+                # candidate still donates into it
+                for node in ast.walk(cand.node):
+                    if isinstance(node, ast.Call):
+                        for inner in self._call_candidates(cand, node):
+                            self._donating_targets.add(id(inner))
+        if donated:
+            statics = self._static_indices(jit, candidates)
+            for cand in candidates:
+                if cand.node.args.vararg is not None:
+                    continue
+                n_pos = len(cand.positional_params())
+                for idx in donated:
+                    if idx >= n_pos:
+                        self.emit(mod, jit.lineno, "D603",
+                                  f"donate_argnums={idx} but "
+                                  f"{cand.name}() has only {n_pos} "
+                                  f"positional parameter(s)")
+                    elif idx in statics:
+                        self.emit(mod, jit.lineno, "D603",
+                                  f"donate_argnums={idx} names a static "
+                                  f"parameter of {cand.name}() — jax "
+                                  f"cannot donate static arguments")
+        return donated
+
+    def _static_indices(self, jit: ast.Call,
+                        candidates: List[FuncInfo]) -> Set[int]:
+        kws = call_keywords(jit)
+        out: Set[int] = set()
+        val = const_eval(kws.get("static_argnums"), {})
+        if isinstance(val, int):
+            out.add(val)
+        elif isinstance(val, tuple):
+            out.update(v for v in val if isinstance(v, int))
+        names = const_eval(kws.get("static_argnames"), {})
+        name_set = {names} if isinstance(names, str) else \
+            set(names) if isinstance(names, tuple) else set()
+        for cand in candidates:
+            pos = cand.positional_params()
+            out.update(i for i, p in enumerate(pos) if p in name_set)
+        return out
+
+    def _call_candidates(self, scope: FuncInfo,
+                         call: ast.Call) -> List[FuncInfo]:
+        if isinstance(call.func, ast.Name):
+            return self.project.resolve_name(call.func.id, scope.module,
+                                             scope)
+        if isinstance(call.func, ast.Attribute):
+            return self.project.resolve_attr_call(call.func.value,
+                                                  call.func.attr,
+                                                  scope.module)
+        return []
+
+    # ------------------------------------------------------------- D601
+    def _check_scope(self, mod: ModuleInfo, fi: FuncInfo) -> None:
+        donating: Dict[str, _DonatingFn] = {}
+        for node in _own_nodes(fi):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                jit = self._jit_call(node.value)
+                if jit is not None:
+                    donated = self._note_jit(mod, fi, jit)
+                    if donated:
+                        donating[node.targets[0].id] = _DonatingFn(donated)
+            elif isinstance(node, ast.Call):
+                jit = self._jit_call(node)
+                if jit is not None:
+                    self._note_jit(mod, fi, jit)
+        # decorated defs with donation, callable by bare name in this scope
+        for name, cands in list(fi.local_funcs.items()) + \
+                list(fi.module.top_funcs.items()):
+            for cand in cands:
+                if isinstance(cand.node, ast.Lambda):
+                    continue
+                for dec in cand.node.decorator_list:
+                    if isinstance(dec, ast.Call) \
+                            and dotted_name(dec.func) in _PARTIAL_NAMES \
+                            and dec.args \
+                            and dotted_name(dec.args[0]) in _JIT_NAMES:
+                        donated = _donated_indices(dec)
+                        if donated:
+                            donating.setdefault(name,
+                                                _DonatingFn(donated))
+        if donating:
+            _DeadScan(self, mod, fi, donating).run()
+
+
+class _DeadScan:
+    """Statement-ordered use-after-donate scan, loop bodies twice."""
+
+    def __init__(self, lint: DonationLint, mod: ModuleInfo, fi: FuncInfo,
+                 donating: Dict[str, _DonatingFn]):
+        self.lint = lint
+        self.mod = mod
+        self.fi = fi
+        self.donating = donating
+        self.dead: Dict[str, int] = {}        # name -> donating call line
+
+    def run(self) -> None:
+        self.visit_block(self.fi.body())
+
+    def visit_block(self, stmts: List[ast.stmt]) -> bool:
+        """True when the block terminates (return/raise/break/continue),
+        so If-merges drop the state of branches that never fall through."""
+        terminated = False
+        for stmt in stmts:
+            if not terminated:
+                terminated = self.visit_stmt(stmt)
+        return terminated
+
+    def visit_stmt(self, stmt: ast.stmt) -> bool:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return False
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._scan_expr(stmt.iter, set())
+            self.visit_block(stmt.body)
+            self.visit_block(stmt.body)          # simulated 2nd iteration
+            self.visit_block(stmt.orelse)
+            return False
+        if isinstance(stmt, ast.While):
+            self._scan_expr(stmt.test, set())
+            self.visit_block(stmt.body)
+            self.visit_block(stmt.body)
+            self.visit_block(stmt.orelse)
+            return False
+        if isinstance(stmt, ast.If):
+            self._scan_expr(stmt.test, set())
+            saved = dict(self.dead)
+            then_term = self.visit_block(stmt.body)
+            after = self.dead
+            self.dead = dict(saved)
+            else_term = self.visit_block(stmt.orelse)
+            if then_term and not else_term:
+                pass                              # keep the else state
+            elif else_term and not then_term:
+                self.dead = after
+            elif not then_term and not else_term:
+                for name, line in after.items():
+                    self.dead.setdefault(name, line)
+            return then_term and else_term
+        if isinstance(stmt, (ast.Return, ast.Raise)):
+            val = stmt.value if isinstance(stmt, ast.Return) else stmt.exc
+            if val is not None:
+                self._scan_expr(val, set())
+            return True
+        if isinstance(stmt, (ast.Break, ast.Continue)):
+            return True
+        donated_here: Set[str] = set()
+        newly_dead: Dict[str, int] = {}
+        rebound: List[str] = []
+        for node in ast.walk(stmt):
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Name) \
+                    and node.func.id in self.donating:
+                for idx in self.donating[node.func.id].donated:
+                    if idx < len(node.args) \
+                            and isinstance(node.args[idx], ast.Name):
+                        name = node.args[idx].id
+                        donated_here.add(name)
+                        newly_dead[name] = node.lineno
+        if isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                rebound.extend(_flat_names(t))
+            self._scan_expr(stmt.value, donated_here)
+        else:
+            for child in ast.iter_child_nodes(stmt):
+                if isinstance(child, ast.expr):
+                    self._scan_expr(child, donated_here)
+        for name in rebound:
+            self.dead.pop(name, None)
+            newly_dead.pop(name, None)
+        self.dead.update(newly_dead)
+        return False
+
+    def _scan_expr(self, expr: ast.expr, donated_here: Set[str]) -> None:
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load) \
+                    and node.id in self.dead and node.id not in donated_here:
+                # no line numbers in the message (line-free fingerprints)
+                self.lint.emit(self.mod, node.lineno, "D601",
+                               f"{node.id!r} was donated by an earlier "
+                               f"call and read again — donated buffers "
+                               f"are deallocated at the donating call")
+                self.dead.pop(node.id, None)     # one finding per donation
+
+
+def run(project: Project) -> List[Finding]:
+    """Entry point: D6xx findings over the project."""
+    return DonationLint(project).run()

@@ -51,9 +51,42 @@ CODES: Dict[str, str] = {
     "P303": "BlockSpec block dims unaligned to the dtype's TPU tile",
     "P304": "VMEM footprint (blocks + scratch) exceeds the budget",
     "P305": "num_scalar_prefetch inconsistent with the grid spec",
+    # sharding / collective contract lint (sharding_lint.py)
+    "S401": "collective axis name not in the enclosing shard_map mesh/specs",
+    "S402": "in_specs/out_specs arity != wrapped function signature",
+    "S403": "host array enters a cached jit program without _host/constrain",
+    "S404": "paged cache leaf not covered by an explicit cache_spec rule",
+    "S405": "deprecated set_mesh process-global (thread the mesh explicitly)",
+    # PRNG-hygiene lint (prng_lint.py)
+    "R501": "PRNG key consumed twice without an interleaving split/fold_in",
+    "R502": "jax.random.split result discarded (keys derived, never used)",
+    "R503": "jitted closure captures a PRNG key (randomness baked at trace)",
+    "R504": "fold_in with a loop-invariant constant (same key every iteration)",
+    # buffer-donation lint (donation_lint.py)
+    "D601": "donated argument is read again after the donating call",
+    "D602": "donation-eligible hot-path buffer is never donated",
+    "D603": "donate_argnums index out of range or names a static parameter",
     # waiver hygiene
     "W001": "lint waiver without a reason",
 }
+
+#: code prefix -> pass name, the ``--json`` per-pass accounting and the
+#: docs/analysis.md section structure.  W001 is attributed to the waiver
+#: machinery itself.
+PASSES: Dict[str, str] = {
+    "T1": "tracer_lint",
+    "K2": "cache_keys",
+    "P3": "pallas_lint",
+    "S4": "sharding_lint",
+    "R5": "prng_lint",
+    "D6": "donation_lint",
+    "W0": "waivers",
+}
+
+
+def pass_of(code: str) -> str:
+    """Name of the analysis pass that owns a finding code."""
+    return PASSES.get(code[:2], "unknown")
 
 _WAIVER_RE = re.compile(r"#\s*lint:\s*allow\[([A-Z]\d{3}(?:,\s*[A-Z]\d{3})*)\]"
                         r"\s*(.*)")
@@ -192,12 +225,23 @@ class Report:
                    f"{len(self.stale)} stale baseline entr(ies)")
         return "\n".join(out)
 
+    def per_pass(self) -> Dict[str, int]:
+        """Finding counts (new + baselined) keyed by owning pass name.
+
+        Every pass appears, zero or not, so dashboards diffing the JSON
+        see a stable key set as passes are added."""
+        counts = {name: 0 for name in PASSES.values()}
+        for f in list(self.new) + list(self.baselined):
+            counts[pass_of(f.code)] = counts.get(pass_of(f.code), 0) + 1
+        return counts
+
     def as_json(self) -> str:
         return json.dumps({
             "ok": self.ok,
             "new": [f.as_json() for f in self.new],
             "baselined": [f.as_json() for f in self.baselined],
             "stale_baseline": list(self.stale),
+            "per_pass": self.per_pass(),
         }, indent=2)
 
 

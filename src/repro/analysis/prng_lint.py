@@ -1,0 +1,454 @@
+"""PRNG-hygiene lint: key dataflow over the serving/training surface.
+
+The engines' determinism contract (docs/serving.md: byte-identical
+replay, per-call ``split`` discipline in ``SDEngine.round`` /
+``ServingEngine._next_key``) dies silently when a key is reused: two
+samples correlate, rejection sampling's acceptance math is wrong, and no
+test that only checks shapes will ever notice.  The pass tracks key
+values through names, statement by statement (loop bodies are visited
+twice so a second iteration's reuse is seen):
+
+========  ===========================================================
+ R501     a key is consumed twice with no interleaving ``split`` /
+          rebind — includes splitting the same parent twice (the two
+          "fresh" keys are identical) and passing one key to two
+          sampling calls.
+ R502     a ``jax.random.split`` result is discarded (bare expression
+          statement, or no derived name is ever read).
+ R503     a jitted function closes over a PRNG key instead of taking
+          it as an argument — the key is baked into the trace, so
+          every cached call replays the same randomness.
+ R504     ``fold_in`` with a loop-invariant constant inside a loop —
+          every iteration derives the same key (fold_in with the loop
+          index is the sanctioned pattern).
+========  ===========================================================
+
+Consumption is: a ``jax.random`` sampler taking the key, a ``key=``
+keyword on any call, or a positional argument that maps to a key-named
+parameter of a project-resolved callee (the interprocedural hop, riding
+the same candidate resolution the tracer lint uses).  ``fold_in`` does
+NOT consume its parent (per-step derivation from a root key is the
+sanctioned loop pattern); ``split`` does (a second split of the same
+parent yields identical children).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis._astutil import (FuncInfo, ModuleInfo, Project,
+                                     call_keywords, dotted_name)
+from repro.analysis.findings import Finding
+
+_SAMPLERS = frozenset({
+    "normal", "uniform", "bernoulli", "categorical", "gumbel", "bits",
+    "truncated_normal", "randint", "choice", "permutation", "exponential",
+    "beta", "gamma", "dirichlet", "laplace", "logistic", "shuffle",
+    "rademacher", "cauchy", "multivariate_normal", "poisson", "t",
+    "orthogonal", "ball", "loggamma", "rayleigh", "weibull_min",
+})
+_CREATORS = frozenset({"PRNGKey", "key", "wrap_key_data"})
+_JIT_NAMES = ("jax.jit", "jit", "api.jit")
+_PARTIAL_NAMES = ("functools.partial", "partial")
+
+
+def _is_key_param(name: str) -> bool:
+    return name == "key" or name in ("rng", "prng", "prng_key") \
+        or name.endswith("_key")
+
+
+def _own_nodes(fi: FuncInfo) -> Iterator[ast.AST]:
+    stack: List[ast.AST] = list(fi.body())
+    while stack:
+        node = stack.pop()
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                yield child
+                continue
+            stack.append(child)
+
+
+def _flat_names(target: ast.expr) -> List[str]:
+    if isinstance(target, ast.Name):
+        return [target.id]
+    if isinstance(target, (ast.Tuple, ast.List)):
+        out: List[str] = []
+        for e in target.elts:
+            out.extend(_flat_names(e))
+        return out
+    if isinstance(target, ast.Starred):
+        return _flat_names(target.value)
+    return []
+
+
+class _ModuleScope:
+    """Module top level presented with the FuncInfo surface the walker
+    needs (body/params), so globals get the same key dataflow."""
+
+    def __init__(self, mod: ModuleInfo):
+        self.module = mod
+        self.node = mod.tree
+        self.qualname = "<module>"
+
+    def body(self) -> List[ast.stmt]:
+        return [s for s in self.node.body
+                if not isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                      ast.ClassDef))]
+
+    def params(self) -> List[str]:
+        return []
+
+
+class PrngLint:
+    def __init__(self, project: Project):
+        self.project = project
+        self.findings: List[Finding] = []
+        self._seen: Set[Tuple[str, int, str]] = set()
+
+    def emit(self, mod: ModuleInfo, line: int, code: str, msg: str) -> None:
+        k = (mod.rel, line, code)
+        if k not in self._seen:
+            self._seen.add(k)
+            self.findings.append(Finding(mod.rel, line, code, msg))
+
+    def run(self) -> List[Finding]:
+        for mod in self.project.modules.values():
+            for fi in mod.functions.values():
+                _FuncWalker(self, mod, fi).run()
+            _FuncWalker(self, mod, _ModuleScope(mod)).run()
+            self._check_jit_captures(mod)
+        self.findings.sort(key=lambda f: (f.path, f.line, f.code))
+        return self.findings
+
+    # -------------------------------------------------------- random calls
+    def random_tail(self, call: ast.Call, mod: ModuleInfo) -> Optional[str]:
+        """'split'/'fold_in'/creator/sampler name when ``call`` is a
+        ``jax.random`` call (through dotted access or import alias)."""
+        dn = dotted_name(call.func)
+        if dn is None:
+            return None
+        tail = dn.rsplit(".", 1)[-1]
+        if tail not in _SAMPLERS and tail not in _CREATORS \
+                and tail not in ("split", "fold_in"):
+            return None
+        if "." in dn:
+            prefix = dn.rsplit(".", 1)[0]
+            if "random" not in prefix.split("."):
+                return None
+            if prefix.startswith(("np", "numpy")):
+                return None
+        else:
+            target = mod.imports.get(dn, "")
+            if not target.startswith("jax.random"):
+                return None
+        return tail
+
+    # ----------------------------------------------------------------- R503
+    def _jitted_locals(self, mod: ModuleInfo
+                       ) -> List[Tuple[FuncInfo, int]]:
+        """(jitted function, anchor line) for every jit site whose wrapped
+        function is a def in the scanned module."""
+        out: List[Tuple[FuncInfo, int]] = []
+        for fi in list(mod.functions.values()):
+            node = fi.node
+            if isinstance(node, ast.Lambda):
+                continue
+            for dec in node.decorator_list:
+                dn = dotted_name(dec) or (
+                    dotted_name(dec.func) if isinstance(dec, ast.Call)
+                    else None)
+                if dn in _JIT_NAMES:
+                    out.append((fi, node.lineno))
+                elif isinstance(dec, ast.Call) and dn in _PARTIAL_NAMES \
+                        and dec.args and dotted_name(dec.args[0]) \
+                        in _JIT_NAMES:
+                    out.append((fi, node.lineno))
+        for fi in list(mod.functions.values()):
+            for node in _own_nodes(fi):
+                if isinstance(node, ast.Call) \
+                        and dotted_name(node.func) in _JIT_NAMES \
+                        and node.args and isinstance(node.args[0], ast.Name):
+                    for cand in self.project.resolve_name(
+                            node.args[0].id, mod, fi):
+                        out.append((cand, node.lineno))
+        return out
+
+    def _key_names_in_scope(self, scope, mod: ModuleInfo) -> Set[str]:
+        """Names that hold keys in ``scope``: key-named params plus locals
+        assigned from PRNGKey/split/fold_in."""
+        names = {p for p in scope.params() if _is_key_param(p)}
+        body_nodes = (_own_nodes(scope) if isinstance(scope, FuncInfo)
+                      else ast.walk(mod.tree))
+        for node in body_nodes:
+            if isinstance(node, ast.Assign) \
+                    and isinstance(node.value, ast.Call) \
+                    and self.random_tail(node.value, mod) in (
+                        "split", "fold_in", "PRNGKey", "key",
+                        "wrap_key_data"):
+                for t in node.targets:
+                    names.update(_flat_names(t))
+        return names
+
+    def _check_jit_captures(self, mod: ModuleInfo) -> None:
+        module_keys = self._key_names_in_scope(_ModuleScope(mod), mod)
+        for fi, line in self._jitted_locals(mod):
+            scope_keys = set(module_keys)
+            if fi.parent is not None:
+                scope_keys |= self._key_names_in_scope(fi.parent, mod)
+            own = set(fi.params())
+            for node in ast.walk(fi.node):
+                if isinstance(node, (ast.Assign, ast.AugAssign)):
+                    targets = (node.targets
+                               if isinstance(node, ast.Assign)
+                               else [node.target])
+                    for t in targets:
+                        own.update(_flat_names(t))
+            captured = sorted(
+                n.id for n in ast.walk(fi.node)
+                if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)
+                and n.id in scope_keys and n.id not in own)
+            if captured:
+                self.emit(mod, line, "R503",
+                          f"jitted {fi.name}() closes over PRNG key(s) "
+                          f"{captured}: randomness is baked at trace "
+                          f"time — pass the key as an argument")
+
+
+class _FuncWalker:
+    """Statement-ordered key dataflow for one function (or module body)."""
+
+    def __init__(self, lint: PrngLint, mod: ModuleInfo, scope):
+        self.lint = lint
+        self.mod = mod
+        self.scope = scope
+        #: tracked key name -> line of the consuming use (present=consumed)
+        self.consumed: Dict[str, int] = {}
+        self.keys: Set[str] = {p for p in scope.params()
+                               if _is_key_param(p)}
+        self.loop_depth = 0
+        self.loop_vars: List[Set[str]] = []
+        self._split_assigns: List[Tuple[List[str], int]] = []
+        self._loads: Set[str] = set()
+
+    # ------------------------------------------------------------- driver
+    def run(self) -> None:
+        for node in ast.walk(self.scope.node
+                             if isinstance(self.scope, FuncInfo)
+                             else self.scope.module.tree):
+            if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+                self._loads.add(node.id)
+        self.visit_block(self.scope.body())
+        for targets, line in self._split_assigns:
+            live = [t for t in targets if t != "_" and t in self._loads]
+            if not live:
+                self.lint.emit(self.mod, line, "R502",
+                               f"split result(s) {targets} never used — "
+                               f"derived keys discarded")
+
+    def visit_block(self, stmts: List[ast.stmt]) -> bool:
+        """Visit statements in order; True when the block terminates
+        (return/raise/break/continue), so If-merges can drop the state of
+        a branch that never falls through."""
+        terminated = False
+        for stmt in stmts:
+            if not terminated:
+                terminated = self.visit_stmt(stmt)
+        return terminated
+
+    # ---------------------------------------------------------- statements
+    def visit_stmt(self, stmt: ast.stmt) -> bool:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            return False
+        if isinstance(stmt, ast.Assign):
+            self._consume_in(stmt.value, rebinding=set(
+                n for t in stmt.targets for n in _flat_names(t)))
+            self._bind(stmt.targets, stmt.value, stmt.lineno)
+            return False
+        if isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+            self._consume_in(stmt.value,
+                             rebinding=set(_flat_names(stmt.target)))
+            self._bind([stmt.target], stmt.value, stmt.lineno)
+            return False
+        if isinstance(stmt, ast.AugAssign):
+            self._consume_in(stmt.value)
+            for n in _flat_names(stmt.target):
+                self.keys.discard(n)
+                self.consumed.pop(n, None)
+            return False
+        if isinstance(stmt, ast.Expr):
+            if isinstance(stmt.value, ast.Call) \
+                    and self.lint.random_tail(stmt.value, self.mod) \
+                    == "split":
+                self.lint.emit(self.mod, stmt.lineno, "R502",
+                               "bare jax.random.split(...): the derived "
+                               "keys are discarded")
+            self._consume_in(stmt.value)
+            return False
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
+            self._consume_in(stmt.iter)
+            targets = set(_flat_names(stmt.target))
+            for n in targets:
+                self.keys.discard(n)
+                self.consumed.pop(n, None)
+            self._visit_loop(stmt.body, targets)
+            self.visit_block(stmt.orelse)
+            return False
+        if isinstance(stmt, ast.While):
+            self._consume_in(stmt.test)
+            self._visit_loop(stmt.body, set())
+            self.visit_block(stmt.orelse)
+            return False
+        if isinstance(stmt, ast.If):
+            self._consume_in(stmt.test)
+            saved = dict(self.consumed)
+            then_term = self.visit_block(stmt.body)
+            after_then = self.consumed
+            self.consumed = dict(saved)
+            else_term = self.visit_block(stmt.orelse)
+            # a branch that never falls through contributes no state
+            if then_term and not else_term:
+                pass                              # keep the else state
+            elif else_term and not then_term:
+                self.consumed = after_then
+            elif not then_term and not else_term:
+                for name, line in after_then.items():
+                    self.consumed.setdefault(name, line)
+            return then_term and else_term
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            for item in stmt.items:
+                self._consume_in(item.context_expr)
+            return self.visit_block(stmt.body)
+        if isinstance(stmt, ast.Try):
+            self.visit_block(stmt.body)
+            for h in stmt.handlers:
+                self.visit_block(h.body)
+            self.visit_block(stmt.orelse)
+            self.visit_block(stmt.finalbody)
+            return False
+        if isinstance(stmt, ast.Return):
+            if stmt.value is not None:
+                self._consume_in(stmt.value)
+            return True
+        if isinstance(stmt, ast.Raise):
+            if stmt.exc is not None:
+                self._consume_in(stmt.exc)
+            return True
+        if isinstance(stmt, (ast.Break, ast.Continue)):
+            return True
+        for child in ast.iter_child_nodes(stmt):
+            if isinstance(child, ast.expr):
+                self._consume_in(child)
+        return False
+
+    def _visit_loop(self, body: List[ast.stmt],
+                    targets: Set[str]) -> None:
+        self.loop_depth += 1
+        self.loop_vars.append(targets)
+        # two passes: the second sees pass-one consumption, so a key that
+        # is used-but-not-rederived each iteration trips R501
+        self.visit_block(body)
+        self.visit_block(body)
+        self.loop_vars.pop()
+        self.loop_depth -= 1
+
+    def _bind(self, targets: List[ast.expr], value: ast.expr,
+              line: int) -> None:
+        names = [n for t in targets for n in _flat_names(t)]
+        tail = (self.lint.random_tail(value, self.mod)
+                if isinstance(value, ast.Call) else None)
+        if tail in _CREATORS or tail in ("split", "fold_in"):
+            for n in names:
+                self.keys.add(n)
+                self.consumed.pop(n, None)
+            if tail == "split":
+                self._split_assigns.append((names, line))
+            return
+        for n in names:
+            self.keys.discard(n)
+            self.consumed.pop(n, None)
+
+    # --------------------------------------------------------- consumption
+    def _consume_in(self, expr: ast.expr,
+                    rebinding: Optional[Set[str]] = None) -> None:
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Call):
+                self._consume_call(node, rebinding or set())
+
+    def _consume_call(self, call: ast.Call, rebinding: Set[str]) -> None:
+        tail = self.lint.random_tail(call, self.mod)
+        kws = call_keywords(call)
+        if tail == "split":
+            if call.args and isinstance(call.args[0], ast.Name):
+                parent = call.args[0].id
+                # `key, sub = split(key)` rebinds the parent: sanctioned
+                if parent not in rebinding:
+                    self._consume(parent, call.lineno,
+                                  "split of an already-used key yields "
+                                  "the same children")
+                elif parent in self.keys:
+                    self.consumed.pop(parent, None)
+            return
+        if tail == "fold_in":
+            if self.loop_depth > 0 and len(call.args) > 1 \
+                    and isinstance(call.args[1], ast.Constant):
+                self.lint.emit(self.mod, call.lineno, "R504",
+                               f"fold_in with constant "
+                               f"{call.args[1].value!r} inside a loop: "
+                               f"every iteration derives the same key — "
+                               f"fold in the loop index")
+            return
+        if tail in _SAMPLERS:
+            key_expr = kws.get("key")
+            if key_expr is None and call.args:
+                key_expr = call.args[0]
+            if isinstance(key_expr, ast.Name):
+                self._consume(key_expr.id, call.lineno,
+                              f"second use in jax.random.{tail}")
+            return
+        if tail in _CREATORS:
+            return
+        # non-random call: key= keyword, then positional->key-param mapping
+        kw_key = kws.get("key")
+        if isinstance(kw_key, ast.Name):
+            self._consume(kw_key.id, call.lineno, "second use as key=")
+        for cand in self._callees(call):
+            pos = cand.positional_params()
+            for i, arg in enumerate(call.args):
+                if i < len(pos) and _is_key_param(pos[i]) \
+                        and isinstance(arg, ast.Name):
+                    self._consume(arg.id, call.lineno,
+                                  f"second use as {cand.name}() key "
+                                  f"argument")
+
+    def _callees(self, call: ast.Call) -> List[FuncInfo]:
+        scope = self.scope if isinstance(self.scope, FuncInfo) else None
+        if isinstance(call.func, ast.Name):
+            cands = self.lint.project.resolve_name(
+                call.func.id, self.mod, scope)
+        elif isinstance(call.func, ast.Attribute):
+            cands = self.lint.project.resolve_attr_call(
+                call.func.value, call.func.attr, self.mod)
+        else:
+            return []
+        return cands[:4]
+
+    def _consume(self, name: str, line: int, why: str) -> None:
+        if name not in self.keys:
+            return
+        first = self.consumed.get(name)
+        if first is not None:
+            # no line numbers in the message: fingerprints must survive
+            # unrelated edits shifting the first-use line (ratchet contract)
+            self.lint.emit(self.mod, line, "R501",
+                           f"key {name!r} consumed earlier and reused: "
+                           f"{why} — split first")
+        else:
+            self.consumed[name] = line
+
+
+def run(project: Project) -> List[Finding]:
+    """Entry point: R5xx findings over the project."""
+    return PrngLint(project).run()

@@ -89,6 +89,10 @@ KNOWN_ENTRY_POINTS: Tuple[KnownEntry, ...] = (
     KnownEntry("distributed/collectives.py", "_ragged_ep_shard",
                static=("cfg", "slots", "activation", "model_axis",
                        "m_shards", "interpret")),
+    # shard_map body of the expert-prefetch warm gather (models/moe.py):
+    # nested def, reached only through the shard_map site, so jit-site
+    # discovery never sees it
+    KnownEntry("models/moe.py", "warm_experts._local_gather"),
     KnownEntry("distributed/constraints.py", "constrain",
                static=("kind", "mesh", "layout")),
     KnownEntry("models/attention.py", "attention_forward",
@@ -127,6 +131,43 @@ STATIC_RESULT_CALLS: FrozenSet[str] = frozenset({
     "len", "isinstance", "issubclass", "hasattr", "getattr", "type",
     "callable", "id", "repr", "range",
 })
+
+
+#: Axis names the repo's meshes can carry (launch/mesh.py builds
+#: ("pod","data","model") sub-meshes; docs/distributed.md).  The sharding
+#: lint (S401) resolves collective axis names against the enclosing
+#: shard_map's spec literals first and falls back to this set when the
+#: mesh expression is a runtime value — so a typo'd axis name is caught
+#: even where the mesh is not statically known.
+KNOWN_MESH_AXES: FrozenSet[str] = frozenset({"pod", "data", "model"})
+
+
+@dataclass(frozen=True)
+class DonationCandidate:
+    """A hot-path buffer the ROADMAP expects to be donated eventually.
+
+    ``module``/``qualname`` locate the function that produces or updates
+    the buffer, ``param`` names it, ``note`` carries the tracking context
+    surfaced in the D602 message.  The donation lint fires D602 at the
+    function's def line unless some jit site in the scanned tree donates
+    an argument into it — turning "TODO: donate" comments into findings
+    the ratchet tracks.
+    """
+    module: str
+    qualname: str
+    param: str
+    note: str
+
+
+#: Buffers with acknowledged donation headroom.  Waive the finding inline
+#: (with the reason) while the headroom is accepted; delete the entry when
+#: the donation lands.
+DONATION_CANDIDATES: Tuple[DonationCandidate, ...] = (
+    DonationCandidate(
+        "models/moe.py", "warm_experts", "layer_params",
+        "ROADMAP: warmed expert buffers stay simulation-only until they "
+        "are donated to the gmm dispatch"),
+)
 
 
 def lookup_entry(module_rel: str, qualname: str) -> Optional[KnownEntry]:

@@ -1,12 +1,24 @@
-"""Runtime retrace guard: count XLA compilations across a code region.
+"""Runtime guards: compilations, host transfers, sharding signatures.
 
-The static passes prove the *code* cannot leak tracers; this module proves
-the *runtime* does not recompile.  ``compile_guard()`` counts backend
-compilations via ``jax.monitoring`` duration events
-(``/jax/core/compile/backend_compile_duration`` fires exactly once per
-XLA compile, including jit cache misses and Pallas kernel builds), so
-tier-1 tests can assert zero recompiles across steady-state
-ContinuousScheduler rounds::
+The static passes prove the *code* cannot leak tracers; this module
+proves the *runtime* holds the serving-path invariants across a region:
+
+* :func:`compile_guard` — zero XLA compilations on a warm stream, via
+  ``jax.monitoring`` duration events
+  (``/jax/core/compile/backend_compile_duration`` fires exactly once per
+  XLA compile, including jit cache misses and Pallas kernel builds).
+* :func:`transfer_guard` — zero *implicit* host<->device transfers, via
+  ``jax.transfer_guard``.  Implicit transfers are how an un-``_host``-ed
+  numpy array sneaks into a jitted program (and, under a mesh, how a
+  second sharding signature is born); explicit ``jax.device_put`` /
+  ``np.asarray(device_array)`` crossings stay allowed.
+* :func:`sharding_guard` — each cached jit program of an
+  :class:`~repro.core.spec_decode.SDEngine` sees exactly ONE input
+  sharding signature per abstract shape across the region (the PR 9
+  one-sharding-signature-per-program rule; a second signature is a
+  silent retrace plus a resharding transfer on every call).
+
+All three share the contract::
 
     with compile_guard() as guard:
         run_more_rounds(...)          # same shapes as warmup
@@ -22,8 +34,13 @@ instead of letting vacuous ``count == 0`` assertions pass.
 from __future__ import annotations
 
 import contextlib
+import functools
+import os
+import re
+import sys
+import tempfile
 import threading
-from typing import Iterator, Optional
+from typing import Dict, Iterator, List, Optional, Tuple
 
 _COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
 
@@ -112,3 +129,266 @@ def compilation_events_available() -> bool:
     except Exception:                            # pragma: no cover
         _events_available = False
     return _events_available
+
+
+# ---------------------------------------------------------------------------
+# transfer guard
+# ---------------------------------------------------------------------------
+
+# the C++ guard (xla/python/guard_lib.cc) logs one stderr line per guarded
+# transfer; Python logging never sees it, so the counter captures fd 2
+_TRANSFER_RE = re.compile(
+    r"\] (host-to-device|device-to-host|device-to-device) transfer")
+
+
+class TransferGuard:
+    """Handle yielded by :func:`transfer_guard`.
+
+    ``count`` is the number of *implicit* host<->device transfers observed
+    in the region — live while it runs, frozen at exit.  ``lines`` holds
+    the raw guard log lines for diagnostics (frozen at exit).
+    """
+
+    def __init__(self) -> None:
+        self._frozen: Optional[int] = None
+        self._fd: Optional[int] = None
+        self.lines: List[str] = []
+
+    def _read(self) -> str:
+        if self._fd is None:
+            return ""
+        chunks = []
+        off = 0
+        while True:
+            chunk = os.pread(self._fd, 1 << 20, off)
+            if not chunk:
+                break
+            chunks.append(chunk)
+            off += len(chunk)
+        return b"".join(chunks).decode("utf-8", "replace")
+
+    @property
+    def count(self) -> int:
+        if self._frozen is not None:
+            return self._frozen
+        sys.stderr.flush()
+        return len(_TRANSFER_RE.findall(self._read()))
+
+
+@contextlib.contextmanager
+def transfer_guard(level: str = "log") -> Iterator[TransferGuard]:
+    """Count implicit host<->device transfers inside the ``with`` region.
+
+    Same contract as :func:`compile_guard`::
+
+        with transfer_guard() as guard:
+            scheduler.run_stream(...)      # warm stream
+        assert guard.count == 0            # every crossing was explicit
+
+    Under ``level="log"`` (default) jax's transfer guard logs each
+    implicit transfer to the C-level stderr; the region redirects fd 2 to
+    a scratch file, counts matching lines, and replays any non-transfer
+    stderr output on exit, so surrounding pytest/fd capture still sees
+    it.  ``level="disallow"`` instead RAISES at the offending call — the
+    debugging mode: the traceback points at the exact crossing.
+
+    Explicit transfers (``jax.device_put``, ``jnp.asarray(np_array)``,
+    ``np.asarray(device_array)``) never count; the guard exists to catch
+    the implicit ones that break the one-sharding-signature-per-program
+    rule (docs/distributed.md).
+    """
+    import jax
+
+    guard = TransferGuard()
+    if level == "disallow":
+        with jax.transfer_guard("disallow"):
+            yield guard
+        guard._frozen = 0
+        return
+    if level != "log":
+        raise ValueError(f"transfer_guard level must be 'log' or "
+                         f"'disallow', got {level!r}")
+    sys.stderr.flush()
+    saved = os.dup(2)
+    tmp = tempfile.TemporaryFile(mode="w+b")
+    guard._fd = tmp.fileno()
+    os.dup2(tmp.fileno(), 2)
+    try:
+        with jax.transfer_guard("log"):
+            yield guard
+    finally:
+        sys.stderr.flush()
+        os.dup2(saved, 2)
+        os.close(saved)
+        data = guard._read()
+        guard._fd = None
+        tmp.close()
+        guard.lines = [ln for ln in data.splitlines()
+                       if _TRANSFER_RE.search(ln)]
+        guard._frozen = len(guard.lines)
+        other = [ln for ln in data.splitlines(True)
+                 if not _TRANSFER_RE.search(ln)]
+        if other:
+            sys.stderr.write("".join(other))
+            sys.stderr.flush()
+
+
+# ---------------------------------------------------------------------------
+# sharding-signature guard
+# ---------------------------------------------------------------------------
+
+#: SDEngine's hand-rolled jit caches (core/spec_decode.py): every compiled
+#: program the serving path calls lives in one of these dicts.
+_SIG_CACHES = ("_round_cache", "_stage_cache", "_admit_cache",
+               "_sliced_cache", "_chunk_cache", "_start_cache",
+               "_prefix_cache")
+
+
+def _canon_sharding(x) -> str:
+    """Canonical key for an array's placement: the device -> index-slice
+    map.  Two shardings spelled differently — ``P()`` vs ``P(None, None)``,
+    a ``GSPMDSharding`` vs the ``NamedSharding`` it round-tripped from, a
+    size-1 mesh axis in the spec — are the SAME placement iff every device
+    holds the same slice, and only materially different placements make
+    jax.jit specialize; comparing ``str(sharding)`` would flag spelling."""
+    s = x.sharding
+    try:
+        imap = s.devices_indices_map(tuple(x.shape))
+        return str(sorted((getattr(d, "id", -1), str(idx))
+                          for d, idx in imap.items()))
+    except Exception:  # noqa: BLE001 — unknown sharding type: fall back
+        return str(s)
+
+
+def _arg_signature(args, kwargs):
+    """(aval_sig, canon_sharding_sig, display_sig) over the flattened call
+    arguments.
+
+    jax.jit keys its executable cache on avals AND shardings; one abstract
+    shape arriving with two materially different shardings is a silent
+    retrace."""
+    import jax
+
+    aval, canon, shard = [], [], []
+    for x in jax.tree_util.tree_leaves((args, kwargs)):
+        if isinstance(x, jax.Array):
+            aval.append((tuple(x.shape), str(x.dtype)))
+            canon.append(_canon_sharding(x))
+            shard.append(str(x.sharding))
+        else:
+            aval.append(("host", type(x).__name__))
+            canon.append(f"host:{type(x).__name__}")
+            shard.append(f"host:{type(x).__name__}")
+    return tuple(aval), tuple(canon), tuple(shard)
+
+
+class ShardingGuard:
+    """Handle yielded by :func:`sharding_guard`.
+
+    ``programs`` counts cached jit programs that were actually called in
+    the region; ``violations`` lists ``(program, aval_sig, sharding_sigs)``
+    for programs that saw more than one input sharding for the same
+    abstract shapes; ``ok`` is True when there are none.
+    """
+
+    def __init__(self) -> None:
+        #: program label -> aval signature -> canonical placement signature
+        #: -> first-seen printable sharding signature.  Keyed on the
+        #: canonical form (see ``_canon_sharding``) so equivalent
+        #: placements spelled differently collapse to one entry.
+        self._sigs: Dict[str, Dict[tuple, Dict[tuple, tuple]]] = {}
+        self._lock = threading.Lock()
+
+    def _record(self, program: str, args, kwargs) -> None:
+        aval, canon, shard = _arg_signature(args, kwargs)
+        with self._lock:
+            self._sigs.setdefault(program, {}) \
+                .setdefault(aval, {}).setdefault(canon, shard)
+
+    @property
+    def programs(self) -> int:
+        return len(self._sigs)
+
+    @property
+    def violations(self) -> List[Tuple[str, tuple, List[tuple]]]:
+        out = []
+        for program, by_aval in sorted(self._sigs.items()):
+            for aval, by_canon in by_aval.items():
+                if len(by_canon) > 1:
+                    out.append((program, aval, sorted(by_canon.values())))
+        return out
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def render(self) -> str:
+        if self.ok:
+            return (f"sharding_guard: {self.programs} program(s), "
+                    f"one sharding signature each")
+        lines = []
+        for program, aval, shards in self.violations:
+            lines.append(f"{program}: {len(shards)} sharding signatures "
+                         f"for avals {aval}:")
+            lines.extend(f"  {s}" for s in shards)
+        return "\n".join(lines)
+
+
+def _wrap_program(guard: ShardingGuard, label: str, fn):
+    @functools.wraps(fn)
+    def recorded(*args, **kwargs):
+        guard._record(label, args, kwargs)
+        return fn(*args, **kwargs)
+
+    recorded.__wrapped_by_sharding_guard__ = fn
+    return recorded
+
+
+@contextlib.contextmanager
+def sharding_guard(*engines) -> Iterator[ShardingGuard]:
+    """Assert one input-sharding signature per cached jit program.
+
+    Takes ``SDEngine`` instances (or ``ServingEngine``s, whose live
+    sessions are resolved at entry) and wraps every compiled program in
+    their jit caches with a recorder::
+
+        with sharding_guard(engine) as guard:
+            scheduler.run_stream(...)      # warm stream
+        assert guard.ok and guard.programs > 0
+
+    A program that sees the same abstract shapes under two different
+    input shardings has silently retraced — jax.jit keys on shardings —
+    and every subsequent call pays a resharding transfer.  The guard
+    instruments the *warm* caches: programs built inside the region are
+    recorded from their second call on (the first call goes through the
+    builder's local reference).  Originals are restored on exit.
+    """
+    guard = ShardingGuard()
+    targets = []
+    for eng in engines:
+        if hasattr(eng, "_sessions"):            # ServingEngine
+            targets.extend(eng._sessions.items())
+        else:
+            targets.append((type(eng).__name__, eng))
+    restores = []
+    for name, eng in targets:
+        for cache_name in _SIG_CACHES:
+            cache = getattr(eng, cache_name, None)
+            if not isinstance(cache, dict):
+                continue
+            for key, value in list(cache.items()):
+                label = f"{name}.{cache_name}[{key!r}]"
+                if callable(value):
+                    restores.append((cache, key, value))
+                    cache[key] = _wrap_program(guard, label, value)
+                elif isinstance(value, tuple):
+                    restores.append((cache, key, value))
+                    cache[key] = tuple(
+                        _wrap_program(guard, f"{label}[{i}]", v)
+                        if callable(v) else v
+                        for i, v in enumerate(value))
+    try:
+        yield guard
+    finally:
+        for cache, key, value in restores:
+            cache[key] = value

@@ -273,6 +273,7 @@ class SDEngine:
         self.mesh_layout = mesh_layout
         self._replicated = (NamedSharding(mesh, PartitionSpec())
                             if mesh is not None else None)
+        self._greedy_key = None      # cached PRNGKey(0) for greedy rounds
         self._round_cache: Dict[int, Callable] = {}      # gamma -> jitted round
         self._stage_cache: Dict[int, Tuple] = {}         # gamma -> stage jits
         self._admit_cache: Dict[Tuple[int, int, int], Callable] = {}
@@ -305,6 +306,24 @@ class SDEngine:
         if self._replicated is not None and not isinstance(x, jax.Array):
             return jax.device_put(np.asarray(x, np_dtype), self._replicated)  # lint: allow[T104] tracers are jax.Array and take the _device_cast branch; only host values reach here
         return _device_cast(x, np_dtype)
+
+    def _constrain_cache(self, t_cache):
+        """In-graph placement pin for the session cache under a mesh.
+
+        Every jitted program that RETURNS the session cache constrains it
+        to the distributed.sharding.cache_spec placement the session
+        opened with.  Without the pin XLA propagates its own output
+        shardings (e.g. paged pools re-split over the kv-head/head dims),
+        so a round compiled after an admission sees differently-sharded
+        cache inputs than one compiled after a round — two live
+        specializations of every program for one logical stream, which is
+        exactly what the runtime ``sharding_guard`` flags.
+        """
+        if self.mesh is None:
+            return t_cache
+        from repro.distributed.sharding import shard_cache
+        return jax.lax.with_sharding_constraint(
+            t_cache, shard_cache(t_cache, self.mesh))
 
     def compiled_gammas(self) -> List[int]:
         """Gammas with a built round (fused or staged) in this session."""
@@ -418,6 +437,7 @@ class SDEngine:
                 out = finalize(params, pend, p_work, base_len, p_dist,
                                q_dist, drafts, hidden, last_token, active,
                                finite, k_rej)
+                out = (self._constrain_cache(out[0]),) + out[1:]
                 return out + (finite, pf)
 
             fn = jax.jit(round_fn)
@@ -455,8 +475,12 @@ class SDEngine:
                                             plan, mesh=warm_mesh)
                 warm = jax.jit(warm)
 
+            def finalize_pinned(*a):
+                out = finalize(*a)
+                return (self._constrain_cache(out[0]),) + out[1:]
+
             fns = (jax.jit(propose_logged), jax.jit(verify),
-                   jax.jit(finalize), warm)
+                   jax.jit(finalize_pinned), warm)
             self._stage_cache[gamma] = fns
         return fns
 
@@ -509,8 +533,8 @@ class SDEngine:
                     params, prompts, lengths, max_seq, cache_opts=opts,
                     page_table=page_table)
                 p = probs_from_logits(last_l, self.temperature)
-                return t_cache, p_state, sample_from(p, key,
-                                                     self.temperature)
+                return (self._constrain_cache(t_cache), p_state,
+                        sample_from(p, key, self.temperature))
 
             fn = jax.jit(start_fn)
             self._start_cache[(max_seq, opts_key)] = fn
@@ -581,7 +605,11 @@ class SDEngine:
                 raise ValueError(
                     "round() needs a fresh per-round key at temperature>0 "
                     "(split one from a root key each round)")
-            key = jax.random.PRNGKey(0)
+            # built once: a fresh PRNGKey here would be one implicit
+            # host-to-device transfer per round (transfer_guard counts it)
+            if self._greedy_key is None:
+                self._greedy_key = jax.random.PRNGKey(0)
+            key = self._greedy_key
         k_prop, k_rej = jax.random.split(key)
         B = state.batch
         active = self._host(np.ones((B,), bool) if active is None
@@ -676,7 +704,8 @@ class SDEngine:
                 first = sample_from(probs_from_logits(last_l, temp), key,
                                     temp)
                 from repro.models.model import merge_cache_rows
-                merged_t = merge_cache_rows(t_cache, fresh_t, mask)
+                merged_t = self._constrain_cache(
+                    merge_cache_rows(t_cache, fresh_t, mask))
                 merged_p = proposer.merge_state(p_state, fresh_p, mask)
                 merged_last = jnp.where(mask, first, last_token)
                 return merged_t, merged_p, merged_last
@@ -768,8 +797,9 @@ class SDEngine:
         fresh_t, fresh_p, last_l = fresh
         first = sample_from(probs_from_logits(last_l, self.temperature), key,
                             self.temperature)
-        merged_t = scatter_cache_rows(t_cache, fresh_t, rows, valid=valid,
-                                      n_prompt=Tp)
+        merged_t = self._constrain_cache(
+            scatter_cache_rows(t_cache, fresh_t, rows, valid=valid,
+                               n_prompt=Tp))
         merged_p = self.proposer.scatter_state(p_state, fresh_p, rows,
                                                valid=valid)
         B = last_token.shape[0]
@@ -895,10 +925,10 @@ class SDEngine:
                 # attention slots commit in place (pend carries the
                 # written pools); the live lengths jump straight to the
                 # full prompt length — shared prefix included
-                merged_t = dict(
+                merged_t = self._constrain_cache(dict(
                     t_cache, layers=pend["layers"],
                     lengths=t_cache["lengths"].at[rows_eff].set(
-                        lengths, mode="drop"))
+                        lengths, mode="drop")))
                 merged_p = proposer.scatter_state(p_state, fresh_p, rows_i,
                                                   valid=valid)
                 merged_last = last_token.at[rows_eff].set(first, mode="drop")

@@ -28,8 +28,8 @@ Per-layer collective cost: 2 × (N·K·d / ep_degree) elements per device
 (core/perf_model.py) and reported per wave by ``ep_load_report``.
 
 Used with ``Model(cfg, moe_dispatch="ep", mesh=...)``; the mesh is
-threaded explicitly (docs/distributed.md), with the deprecated
-``constraints.set_mesh`` global as fallback.
+threaded explicitly (docs/distributed.md) — the old ``constraints.set_mesh``
+process-global is removed.
 """
 from __future__ import annotations
 
@@ -213,24 +213,33 @@ def ep_load_report(params: dict, cfg, tokens, ep_degree: int,
     activation counts into per-shard loads, and reports the load imbalance
     (max/mean over shards) plus the modeled per-device a2a volume.
     Returns None when there are no tokens or no MoE layers.
+
+    The math runs entirely in numpy on host copies of the embedding and
+    router weights (one explicit ``jax.device_get`` per leaf): eager
+    device ops here would inject implicit host transfers into every
+    guarded warm stream (``transfer_guard``), and telemetry must never
+    perturb what it observes.
     """
     import numpy as np
 
     toks = np.asarray(tokens).reshape(-1)
     if toks.size == 0 or not any(cfg.moe_pattern):
         return None
-    x = params["embed"]["table"][jnp.asarray(toks, jnp.int32)]
+    table = np.asarray(jax.device_get(params["embed"]["table"]))
+    x = table[toks.astype(np.int64)].astype(np.float32)
     E, K = cfg.num_experts, cfg.num_experts_per_tok
-    counts = jnp.zeros((E,), jnp.float32)
+    counts = np.zeros((E,), np.float64)
     for i, is_moe in enumerate(cfg.moe_pattern):
         if not is_moe:
             continue
-        router = params["layers"][i]["ffn"]["router"]      # (P, d, E)
-        logits = jnp.einsum("nd,pde->pne", x.astype(jnp.float32),
-                            router.astype(jnp.float32))
-        _, topk = jax.lax.top_k(jax.nn.softmax(logits, axis=-1), K)
-        counts = counts.at[topk.reshape(-1)].add(1.0)
-    per_shard = np.asarray(counts).reshape(ep_degree, E // ep_degree).sum(-1)
+        router = np.asarray(jax.device_get(
+            params["layers"][i]["ffn"]["router"])).astype(np.float32)
+        logits = np.einsum("nd,pde->pne", x, router)       # (P, n, E)
+        # same top-K set as lax.top_k over softmax probs: softmax is
+        # monotone, so the K largest logits are the K activated experts
+        topk = np.argpartition(-logits, K - 1, axis=-1)[..., :K]
+        np.add.at(counts, topk.reshape(-1), 1.0)
+    per_shard = counts.reshape(ep_degree, E // ep_degree).sum(-1)
     mean = float(per_shard.mean())
     if dtype_bytes is None:
         dtype_bytes = 4 if cfg.dtype == "float32" else 2

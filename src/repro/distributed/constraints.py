@@ -10,26 +10,19 @@ partitioner all-gather weights instead.
 The mesh is threaded EXPLICITLY: ``Model(cfg, mesh=...)`` (and
 ``ServingEngine(..., mesh=...)`` above it) hands the mesh to every
 ``constrain`` call, so model code carries no hidden global state and the
-analyzer's captured-state rule (T106) holds without waivers.  A validated
-process-global fallback (``set_mesh``) survives, deprecated, for launch
-scripts that configure sharding once at startup; new code should pass
-``mesh=`` instead.
+analyzer's captured-state rule (T106) holds without waivers.  The old
+process-global fallback (``set_mesh``) is REMOVED: calling it raises, and
+the analyzer's S405 rule flags any caller statically.
 """
 from __future__ import annotations
 
 import math
-import warnings
 from typing import Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 VALID_LAYOUTS = ("tp", "fsdp")
-
-# Deprecated process-global fallback — written ONLY by set_mesh (host-side,
-# never inside a trace), read only when no explicit mesh is threaded.
-_MESH: Optional[Mesh] = None
-_LAYOUT: str = "tp"
 
 
 def _validate(mesh: Optional[Mesh], layout: str) -> None:
@@ -40,41 +33,31 @@ def _validate(mesh: Optional[Mesh], layout: str) -> None:
 
 
 def set_mesh(mesh: Optional[Mesh], layout: str = "tp"):
-    """DEPRECATED: install a process-global mesh for ``constrain`` fallback.
+    """REMOVED: the process-global mesh fallback no longer exists.
 
     Thread the mesh explicitly instead — ``Model(cfg, mesh=...)`` /
     ``ServingEngine(..., mesh=...)`` — so sharding is visible at the call
-    site and carries no process-global state.  Arguments are validated
-    (Mesh instance, layout in ``VALID_LAYOUTS``); ``set_mesh(None)``
-    clears the fallback.
+    site and carries no process-global state.  Calling this always raises
+    ``RuntimeError`` (the static analyzer flags callers as S405 before
+    they get this far).
     """
-    global _MESH, _LAYOUT
-    _validate(mesh, layout)
-    warnings.warn(
-        "set_mesh is deprecated: pass mesh=/mesh_layout= explicitly "
-        "(Model(cfg, mesh=...), ServingEngine(..., mesh=...))",
-        DeprecationWarning, stacklevel=2)
-    _MESH = mesh
-    _LAYOUT = layout
-
-
-def get_mesh() -> Optional[Mesh]:
-    return _MESH
-
-
-def get_layout() -> str:
-    return _LAYOUT
+    raise RuntimeError(
+        "set_mesh was removed: pass mesh=/mesh_layout= explicitly "
+        "(Model(cfg, mesh=...), ServingEngine(..., mesh=...))")
 
 
 def resolve_mesh(mesh: Optional[Mesh] = None,
                  layout: Optional[str] = None
                  ) -> Tuple[Optional[Mesh], str]:
-    """Resolve (mesh, layout): the explicit arguments when given, else the
-    deprecated ``set_mesh`` process-global fallback."""
+    """Validate and normalize an explicitly threaded (mesh, layout) pair.
+    ``mesh=None`` means single-device: there is no process-global
+    fallback to consult any more."""
     if mesh is not None:
         _validate(mesh, layout or "tp")
         return mesh, (layout or "tp")
-    return _MESH, (layout if layout is not None else _LAYOUT)
+    if layout is not None:
+        _validate(None, layout)
+    return None, (layout or "tp")
 
 
 def data_axes_of(mesh, layout: str):

@@ -141,10 +141,9 @@ def lower_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
     if extra_overrides:
         cfg = cfg.with_overrides(**extra_overrides)
     mesh = make_production_mesh(multi_pod=multi_pod)
-    from repro.distributed.constraints import set_mesh
-    set_mesh(mesh, layout)
     model = Model(cfg, moe_dispatch=moe_dispatch,
-                  remat=(shape.kind == "train") if remat is None else remat)
+                  remat=(shape.kind == "train") if remat is None else remat,
+                  mesh=mesh, mesh_layout=layout)
 
     params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     params_sh = shard_params(params_shape, mesh, fsdp=(shape.kind == "train"),

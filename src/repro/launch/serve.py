@@ -133,6 +133,12 @@ def main():
                     help="resilience: hard cap on paged pool growth; at "
                          "the cap page pressure preempts the youngest "
                          "slot (vLLM-style recompute requeue)")
+    ap.add_argument("--transfer-guard", action="store_true",
+                    help="after the stream completes, replay the same "
+                         "workload through the warm engine under "
+                         "transfer_guard + sharding_guard and fail on any "
+                         "implicit host transfer or second input-sharding "
+                         "signature (docs/analysis.md)")
     ap.add_argument("--timed", action="store_true",
                     help="record per-phase propose/verify/reject timings")
     ap.add_argument("--no-autotune", action="store_true")
@@ -285,6 +291,24 @@ def main():
     sample = eng.done[1]
     print(f"sample completion ({sample.finish_reason}):",
           repr(tok.decode(sample.output)[:80]))
+
+    if args.transfer_guard:
+        # warm replay under the runtime guards: the first stream built
+        # every program, so this one must move nothing implicitly and
+        # keep one input-sharding signature per cached program
+        from repro.analysis import sharding_guard, transfer_guard
+        submit_poisson(eng, pb["tokens"], pb["lengths"],
+                       rate=args.arrival_rate,
+                       max_new_choices=max_new_choices, seed=args.seed)
+        with transfer_guard() as tg, sharding_guard(eng) as sg:
+            eng.run()
+        print(f"transfer_guard: {tg.count} implicit transfer(s); "
+              f"{sg.render()}")
+        if tg.count or not sg.ok:
+            for line in tg.lines[:10]:
+                print(" ", line)
+            raise SystemExit(
+                "guard violation on the warm stream replay")
 
 
 if __name__ == "__main__":

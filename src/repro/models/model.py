@@ -34,6 +34,7 @@ per row already and stay dense inside a paged cache.
 """
 from __future__ import annotations
 
+import functools
 import math
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -418,6 +419,23 @@ class PageAllocator:
         self.pool_pages, self.max_pages = pool_pages, max_pages
 
 
+@functools.lru_cache(maxsize=None)
+def _pad_tail_fn(ndim: int, axis: int, extra: int):
+    # eager jnp.pad materializes its pad config as implicit host->device
+    # scalar transfers on every call; growth runs between rounds on the
+    # transfer-guarded serving path, so bake the geometry into a cached
+    # jitted pad (jax then keys compilations on the leaf aval as usual)
+    pad = [(0, 0)] * ndim
+    pad[axis] = (0, extra)
+    pad = tuple(pad)
+    return jax.jit(lambda x: jnp.pad(x, pad))
+
+
+def _pad_tail(leaf, axis: int, extra: int):
+    """Zero-pad ``leaf`` by ``extra`` trailing slots along ``axis``."""
+    return _pad_tail_fn(leaf.ndim, axis, extra)(leaf)
+
+
 def grow_cache_pages(cache: dict, pool_pages: int, max_pages: int) -> dict:
     """Pad a paged cache to a larger pool / logical capacity.
 
@@ -439,15 +457,13 @@ def grow_cache_pages(cache: dict, pool_pages: int, max_pages: int) -> dict:
                 leaf = slot[paged_key]
                 extra = pool_pages - leaf.shape[1]
                 if extra:
-                    pad = [(0, 0)] * leaf.ndim
-                    pad[1] = (0, extra)
-                    out[paged_key] = jnp.pad(leaf, pad)
+                    out[paged_key] = _pad_tail(leaf, 1, extra)
         return out
 
     table = cache["pages"]["table"]
     extra_lp = max_pages - table.shape[1]
     if extra_lp:
-        table = jnp.pad(table, ((0, 0), (0, extra_lp)))
+        table = _pad_tail(table, 1, extra_lp)
     return dict(cache, layers=[grow_slot(s) for s in cache["layers"]],
                 pages=dict(cache["pages"], table=table))
 
@@ -507,9 +523,7 @@ def grow_cache_seq(cache: dict, cfg: ModelConfig, new_max_seq: int) -> dict:
         for k, leaf in slot.items():
             extra = new_max_seq - leaf.shape[2]
             if extra > 0:
-                pad = [(0, 0)] * leaf.ndim
-                pad[2] = (0, extra)
-                leaf = jnp.pad(leaf, pad)
+                leaf = _pad_tail(leaf, 2, extra)
             out[k] = leaf
         return out
 
@@ -555,8 +569,8 @@ class Model:
         self.remat = remat
         self.paged_attention = paged_attention
         # explicit mesh threading (docs/distributed.md): flows to every
-        # constrain() and to the "ep" dispatch; None = single-device (or
-        # the deprecated set_mesh process-global, resolved per call)
+        # constrain() and to the "ep" dispatch; None = single-device —
+        # there is no process-global fallback
         if mesh is not None:
             from repro.distributed.constraints import resolve_mesh
             mesh, mesh_layout = resolve_mesh(mesh, mesh_layout)

@@ -52,6 +52,7 @@ class PrefetchPlan(NamedTuple):
     expert_ids: Tuple[jnp.ndarray, ...]
 
 
+# lint: allow[D602] prefetch is simulation-only until gmm takes donated buffers
 def warm_experts(layer_params, cfg, plan: PrefetchPlan, *, mesh=None):
     """Gather the predicted experts' FFN weights into fresh buffers.
 

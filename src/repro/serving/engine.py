@@ -262,7 +262,7 @@ class ServingEngine:
         # ------- expert-parallel sharded serving (docs/distributed.md) ----
         # the mesh is threaded EXPLICITLY: engine → model constraints / ep
         # dispatch → SDEngine sessions (host placement + cache_spec); no
-        # process-global mesh state (constraints.set_mesh is deprecated)
+        # process-global mesh state (constraints.set_mesh is removed)
         if mesh is not None:
             mesh, mesh_layout = resolve_mesh(mesh, mesh_layout)
             if "model" not in mesh.axis_names:

@@ -1,0 +1,21 @@
+"""Buffer-donation violations the D6xx pass must flag."""
+import jax
+import jax.numpy as jnp
+
+
+def step(state, batch):
+    return state + batch
+
+
+def use_after_donate(state, batch):
+    fn = jax.jit(step, donate_argnums=(0,))
+    new = fn(state, batch)
+    return new + state
+
+
+def bad_index():
+    return jax.jit(step, donate_argnums=(5,))
+
+
+def static_donate():
+    return jax.jit(step, static_argnums=(1,), donate_argnums=(1,))

@@ -1,0 +1,50 @@
+"""PRNG-hygiene violations the R5xx pass must flag."""
+import jax
+import jax.numpy as jnp
+
+
+def double_sample(key):
+    a = jax.random.normal(key, (4,))
+    b = jax.random.uniform(key, (4,))
+    return a + b
+
+
+def double_split(key):
+    k1, k2 = jax.random.split(key)
+    k3, k4 = jax.random.split(key)
+    return (jax.random.normal(k1, (2,)) + jax.random.normal(k2, (2,)) +
+            jax.random.normal(k3, (2,)) + jax.random.normal(k4, (2,)))
+
+
+def discard(key):
+    jax.random.split(key)
+    return jnp.zeros((2,))
+
+
+def derive_unused(key):
+    k1, k2 = jax.random.split(key)
+    return jnp.zeros((2,))
+
+
+def make_sampler(key):
+    def sample(x):
+        return x + jax.random.normal(key, (2,))
+    return jax.jit(sample)
+
+
+def loop_fold(key, xs):
+    out = []
+    for i in range(4):
+        k = jax.random.fold_in(key, 7)
+        out.append(jax.random.normal(k, (2,)))
+    return out
+
+
+def _helper(data, key):
+    return jax.random.normal(key, data.shape)
+
+
+def pass_twice(key, x):
+    a = _helper(x, key)
+    b = _helper(x, key)
+    return a + b

@@ -49,6 +49,23 @@ def test_pallas_fixture_codes_and_lines():
     assert sum(1 for f in findings if f.code == "P303") == 2
 
 
+def test_sharding_fixture_codes_and_lines():
+    got = {(f.code, f.line) for f in _run("sharding_bad.py")}
+    assert got == {("S401", 25), ("S402", 30), ("S402", 41), ("S403", 63),
+                   ("S404", 68), ("S404", 72), ("S405", 77)}
+
+
+def test_prng_fixture_codes_and_lines():
+    got = {(f.code, f.line) for f in _run("prng_bad.py")}
+    assert got == {("R501", 8), ("R501", 14), ("R502", 20), ("R502", 25),
+                   ("R503", 32), ("R504", 38), ("R501", 49)}
+
+
+def test_donation_fixture_codes_and_lines():
+    got = {(f.code, f.line) for f in _run("donation_bad.py")}
+    assert got == {("D601", 13), ("D603", 17), ("D603", 21)}
+
+
 def test_clean_fixture_has_no_false_positives():
     assert _run("clean.py") == []
 
@@ -122,6 +139,42 @@ def test_cli_exit_codes_and_json():
     assert {f["code"] for f in payload["new"]} >= {"T101", "T103"}
     ok = _cli(os.path.join(FIX, "clean.py"), "--no-baseline")
     assert ok.returncode == 0
+
+
+def test_cli_json_reports_per_pass_counts():
+    """The JSON report carries a per-pass breakdown with a stable key set
+    covering every pass, zero or not."""
+    r = _cli(os.path.join(FIX, "sharding_bad.py"),
+             os.path.join(FIX, "prng_bad.py"),
+             os.path.join(FIX, "donation_bad.py"), "--no-baseline", "--json")
+    per = json.loads(r.stdout)["per_pass"]
+    assert set(per) == {"tracer_lint", "cache_keys", "pallas_lint",
+                        "sharding_lint", "prng_lint", "donation_lint",
+                        "waivers"}
+    assert per["sharding_lint"] == 7
+    assert per["prng_lint"] == 7
+    assert per["donation_lint"] == 3
+    assert per["tracer_lint"] == 0
+
+
+def test_baseline_stable_under_line_drift(tmp_path):
+    """Baseline a file, then push every finding down 7 lines: the ratchet
+    still reports clean because fingerprints are line-free."""
+    import shutil
+    target = str(tmp_path / "prng_bad.py")
+    base = str(tmp_path / "b.txt")
+    shutil.copy(os.path.join(FIX, "prng_bad.py"), target)
+    before = analyze_paths([target], repo_root=str(tmp_path))
+    assert before, "fixture must produce findings"
+    write_baseline(base, before)
+    with open(target) as fh:
+        src = fh.read()
+    with open(target, "w") as fh:
+        fh.write("# drift\n" * 7 + src)      # every finding moves 7 lines
+    after = analyze_paths([target], repo_root=str(tmp_path))
+    assert {f.line for f in after} != {f.line for f in before}
+    rep = ratchet(after, load_baseline(base))
+    assert rep.ok and not rep.new and not rep.stale
 
 
 def test_cli_update_baseline(tmp_path):

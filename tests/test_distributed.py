@@ -91,7 +91,6 @@ _SCRIPT = textwrap.dedent("""
     from repro.configs.base import ShapeConfig, TrainConfig
     from repro.configs.registry import get_config
     from repro.distributed import sharding as sh
-    from repro.distributed.constraints import set_mesh
     from repro.models.model import Model
     from repro.training.optimizer import init_adam
     from repro.training.train_loop import make_train_step
@@ -99,9 +98,8 @@ _SCRIPT = textwrap.dedent("""
 
     arch = sys.argv[1]
     mesh = jax.make_mesh((2, 2), ("data", "model"))
-    set_mesh(mesh)
     cfg = get_config(arch, reduced=True)
-    model = Model(cfg)
+    model = Model(cfg, mesh=mesh)
     params = model.init(jax.random.PRNGKey(0))
     psh = sh.shard_params(params, mesh, fsdp=True)
     params = jax.device_put(params, psh)

@@ -9,7 +9,6 @@ set before jax imports; scripts print "OK" markers the tests assert on.
 import subprocess
 import sys
 import textwrap
-import warnings
 
 import pytest
 
@@ -172,12 +171,17 @@ _CONTINUOUS = textwrap.dedent("""
     assert rep is not None and len(rep["per_shard_load"]) == 8
     assert rep["imbalance"] >= 1.0 and rep["a2a_bytes_per_device"] > 0
     eng._slot_scheduler._alloc.assert_no_leaks()
-    # warm sharded engine: the SAME stream again compiles ZERO programs
-    from repro.analysis import compile_guard
-    with compile_guard() as g:
+    # warm sharded engine: the SAME stream again compiles ZERO programs,
+    # makes ZERO implicit host<->device transfers, and every cached jit
+    # program sees exactly one input-sharding signature
+    from repro.analysis import compile_guard, sharding_guard, transfer_guard
+    with compile_guard() as g, transfer_guard() as tg, \
+            sharding_guard(eng) as sg:
         ep2 = stream()
     assert ep2 == ep1
     assert g.count == 0, g.count
+    assert tg.count == 0, (tg.count, tg.lines[:5])
+    assert sg.programs > 0 and sg.ok, sg.render()
     print("OK")
 """)
 
@@ -186,39 +190,39 @@ def test_continuous_stream_parity_preemption_and_zero_retrace():
     """ep=8 continuous serving (paged KV, in-flight admission, page-pressure
     preemption + requeue) is token-identical to single-device serving; a
     second identical stream through the warm sharded engine compiles
-    nothing."""
+    nothing, transfers nothing implicitly (transfer_guard) and keeps one
+    sharding signature per cached program (sharding_guard)."""
     _run(_CONTINUOUS)
 
 
 # ----------------------------------------------------- mesh API contracts
 def test_mesh_api_validation_and_deprecation():
-    """set_mesh validates and warns (explicit threading is the supported
-    path — no T106 waiver needed); make_ep_mesh and ServingEngine(mesh=...)
-    fail loudly on malformed meshes."""
+    """set_mesh is a hard error (explicit threading is the only path — no
+    process-global mesh survives); resolve_mesh validates; make_ep_mesh
+    and ServingEngine(mesh=...) fail loudly on malformed meshes."""
     import jax
     from jax.sharding import Mesh
     import numpy as np
-    from repro.distributed.constraints import (get_mesh, resolve_mesh,
-                                               set_mesh)
+    from repro.distributed.constraints import resolve_mesh, set_mesh
     from repro.launch.mesh import make_ep_mesh
 
-    with pytest.raises(TypeError, match="Mesh"):
-        set_mesh("not a mesh")
-    with pytest.raises(ValueError, match="layout"):
-        set_mesh(None, layout="bogus")
     mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
                 ("data", "model"))
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
+    # the removed process-global raises no matter the arguments
+    with pytest.raises(RuntimeError, match="set_mesh was removed"):
         set_mesh(mesh)
-    assert any(issubclass(x.category, DeprecationWarning) for x in w)
-    assert get_mesh() is mesh
-    # explicit always wins over the deprecated global
+    with pytest.raises(RuntimeError, match="mesh="):
+        set_mesh(None)
+    # resolve_mesh validates the explicitly threaded pair
+    with pytest.raises(TypeError, match="Mesh"):
+        resolve_mesh("not a mesh")
+    with pytest.raises(ValueError, match="layout"):
+        resolve_mesh(mesh, "bogus")
+    with pytest.raises(ValueError, match="layout"):
+        resolve_mesh(None, "bogus")
     m2, layout = resolve_mesh(mesh, "fsdp")
     assert m2 is mesh and layout == "fsdp"
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        set_mesh(None)
+    # None mesh means single-device — there is no global to fall back to
     assert resolve_mesh(None, None) == (None, "tp")
     with pytest.raises(ValueError, match="degrees"):
         make_ep_mesh(0)
